@@ -1,0 +1,55 @@
+"""Shared benchmark utilities: timing, CSV rows, artifact output."""
+
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+from pathlib import Path
+from typing import Any, Callable
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+QUICK = os.environ.get("BENCH_QUICK", "") == "1"
+
+_rows: list[tuple[str, float, str]] = []
+
+
+def record(name: str, us_per_call: float, derived: str = "") -> None:
+    _rows.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def rows() -> list[tuple[str, float, str]]:
+    return list(_rows)
+
+
+def timeit(fn: Callable[[], Any], *, reps: int = 5, warmup: int = 1) -> dict:
+    """Median/min wall time of fn() in seconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return {
+        "median": statistics.median(ts),
+        "min": min(ts),
+        "mean": statistics.fmean(ts),
+        "reps": reps,
+    }
+
+
+def save_artifact(name: str, payload: dict) -> None:
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    (ARTIFACTS / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def fmt_bytes(n: float) -> str:
+    for unit in ("B", "kB", "MB", "GB"):
+        if n < 1000:
+            return f"{n:.1f}{unit}"
+        n /= 1000
+    return f"{n:.1f}TB"

@@ -1,0 +1,67 @@
+"""Paper Fig 3: no-op task round-trip time vs payload size.
+
+Worst case for the scheduler: every byte flows client -> scheduler ->
+worker -> scheduler -> client and nothing is reused.  ``baseline`` embeds
+payloads in the task graph; ``proxystore`` passes references (SizePolicy(0):
+*everything* is proxied, so the sub-100kB fixed proxy overhead is visible,
+exactly as in the paper's figure).
+"""
+
+from __future__ import annotations
+
+import time
+import uuid
+
+import numpy as np
+
+from benchmarks.common import QUICK, record, save_artifact, timeit
+from repro.core import SizePolicy, Store
+from repro.core.connectors import MemoryConnector
+from repro.runtime.client import LocalCluster, ProxyClient
+
+
+def identity(x):
+    return x
+
+
+PAYLOADS = [1_000, 10_000, 100_000, 1_000_000, 10_000_000]
+
+
+def run() -> dict:
+    payloads = PAYLOADS[:3] if QUICK else PAYLOADS
+    reps = 3 if QUICK else 7
+    out: dict = {"payload_bytes": payloads, "baseline_s": [], "proxy_s": []}
+
+    with LocalCluster(n_workers=1) as cluster:
+        base = cluster.get_client()
+        store = Store(
+            f"bench-rtt-{uuid.uuid4().hex[:6]}",
+            MemoryConnector(segment=f"rtt-{uuid.uuid4().hex[:6]}"),
+        )
+        proxy = ProxyClient(cluster, ps_store=store, should_proxy=SizePolicy(0))
+
+        for nbytes in payloads:
+            data = np.random.default_rng(0).bytes(nbytes)
+
+            t_base = timeit(
+                lambda: base.submit(identity, data, pure=False).result(),
+                reps=reps,
+            )["median"]
+            t_proxy = timeit(
+                lambda: proxy.submit(identity, data, pure=False).result(),
+                reps=reps,
+            )["median"]
+
+            out["baseline_s"].append(t_base)
+            out["proxy_s"].append(t_proxy)
+            improvement = 100.0 * (1 - t_proxy / t_base)
+            record(
+                f"fig3/rtt/{nbytes}B/baseline", t_base * 1e6,
+                f"proxy={t_proxy*1e6:.0f}us improvement={improvement:.0f}%",
+            )
+        proxy.close()
+        base.close()
+        store.close()
+
+    save_artifact("fig3_overheads", out)
+    return out

@@ -1,0 +1,162 @@
+"""§Roofline: three-term analysis of every dry-run cell (deliverable g).
+
+Hardware model (TPU v5e target):
+    peak bf16 compute   197 TFLOP/s per chip
+    HBM bandwidth       819 GB/s per chip
+    ICI link bandwidth  ~50 GB/s per chip
+
+All dry-run artifacts hold *per-device* (post-SPMD) program profiles, so:
+
+    compute term    = flops_per_device / 197e12          [s]
+    memory term     = bytes_per_device / 819e9           [s]
+    collective term = collective_bytes_per_device / 50e9 [s]
+
+FLOPs/bytes/collective bytes come from the trip-count-corrected HLO walk
+(``launch/hlo_analysis.py``) -- ``cost_analysis()`` alone undercounts scan
+bodies by their trip count (52-416x on train cells; see EXPERIMENTS.md).
+
+MODEL_FLOPS is the analytic useful compute: 6·N_active·tokens for training,
+2·N_active·tokens for prefill/decode.  The ratio MODEL_FLOPS/HLO_FLOPS
+catches remat recompute and redundancy; the roofline fraction
+(= compute / dominant term) is how close the cell can get to the compute
+roofline given its current bottleneck.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import record, save_artifact
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link / chip
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def model_flops(meta: dict) -> float:
+    tokens = meta["batch"] * (meta["seq"] if meta["kind"] != "decode" else 1)
+    n = meta["params_active"]
+    mult = 6 if meta["kind"] == "train" else 2
+    return float(mult * n * tokens)
+
+
+def analyze_cell(d: dict) -> dict:
+    chips = d["devices"]
+    hlo = d["hlo_analysis"]
+    flops_dev = hlo["flops"]
+    bytes_dev = hlo["bytes"]
+    coll_dev = hlo["collectives"]["total"]
+
+    compute_t = flops_dev / PEAK_FLOPS
+    memory_t = bytes_dev / HBM_BW
+    coll_t = coll_dev / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(d["meta"])
+    hlo_global = flops_dev * chips
+    useful_ratio = mf / hlo_global if hlo_global else 0.0
+    bound = max(terms.values())
+    roofline_frac = compute_t / bound if bound else 0.0
+
+    mem = d.get("memory_analysis", {})
+    hbm_bytes = (
+        mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+        - mem.get("alias_size_in_bytes", 0)
+    )
+    return {
+        "arch": d["arch"],
+        "shape": d["shape"],
+        "mesh": d["mesh"],
+        "chips": chips,
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+        "dominant": dominant,
+        "bound_s": bound,
+        "roofline_fraction": roofline_frac,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_flops_ratio": useful_ratio,
+        "hbm_per_device_bytes": hbm_bytes,
+        "collective_bytes_dev": coll_dev,
+        "kind": d["meta"]["kind"],
+    }
+
+
+def load_cells(mesh: str | None = "single", tag: str = "") -> list[dict]:
+    cells = []
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        if f.name.endswith(".error.json"):
+            continue
+        d = json.loads(f.read_text())
+        if "skipped" in d:
+            continue
+        if "hlo_analysis" not in d:
+            continue
+        if mesh and d["mesh"] != mesh:
+            continue
+        name_tag = f.stem.split("__")[3] if len(f.stem.split("__")) > 3 else ""
+        if name_tag != tag:
+            continue
+        cells.append(analyze_cell(d))
+    return cells
+
+
+def markdown_table(cells: list[dict]) -> str:
+    hdr = (
+        "| arch | shape | chips | compute(ms) | memory(ms) | collective(ms) "
+        "| dominant | roofline frac | useful/HLO flops |\n"
+        "|---|---|---|---|---|---|---|---|---|\n"
+    )
+    rows = []
+    for c in cells:
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['chips']} "
+            f"| {c['compute_s']*1e3:.2f} | {c['memory_s']*1e3:.2f} "
+            f"| {c['collective_s']*1e3:.2f} | **{c['dominant']}** "
+            f"| {c['roofline_fraction']:.2f} | {c['useful_flops_ratio']:.2f} |"
+        )
+    return hdr + "\n".join(rows) + "\n"
+
+
+def patch_experiments(md: str) -> None:
+    """Refresh the table between ROOFLINE markers in EXPERIMENTS.md."""
+    exp = ARTIFACTS.parent.parent / "EXPERIMENTS.md"
+    if not exp.exists():
+        return
+    text = exp.read_text()
+    begin, end = "<!-- ROOFLINE:BEGIN -->", "<!-- ROOFLINE:END -->"
+    if begin in text and end in text:
+        head, rest = text.split(begin, 1)
+        _, tail = rest.split(end, 1)
+        block = (
+            f"{begin}\n## §Roofline — per-cell terms "
+            "(single-pod 16×16, per-device program, scan-corrected)\n\n"
+            + md + end
+        )
+        exp.write_text(head + block + tail)
+
+
+def run() -> dict:
+    cells = load_cells(mesh="single")
+    for c in cells:
+        record(
+            f"roofline/{c['arch']}/{c['shape']}",
+            c["bound_s"] * 1e6,
+            f"dom={c['dominant']} frac={c['roofline_fraction']:.2f} "
+            f"useful={c['useful_flops_ratio']:.2f}",
+        )
+    out = {"cells": cells}
+    save_artifact("roofline", out)
+    md = markdown_table(cells)
+    (ARTIFACTS.parent / "roofline.md").write_text(md)
+    patch_experiments(md)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows and writes JSON artifacts under
+``artifacts/bench/``.
+
+    PYTHONPATH=src python -m benchmarks.run              # everything
+    PYTHONPATH=src python -m benchmarks.run fig3 fig5    # a subset
+    BENCH_QUICK=1 ... python -m benchmarks.run           # CI-sized
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+SUITES = ("serializer", "fig3", "fig4", "fig5", "roofline")
+
+
+def main() -> None:
+    picked = [a for a in sys.argv[1:] if not a.startswith("-")] or list(SUITES)
+    t0 = time.perf_counter()
+    print("name,us_per_call,derived")
+
+    if "serializer" in picked:
+        from benchmarks import serializer
+
+        serializer.run()
+    if "fig3" in picked:
+        from benchmarks import overheads
+
+        overheads.run()
+    if "fig4" in picked:
+        from benchmarks import scaling
+
+        scaling.run()
+    if "fig5" in picked:
+        from benchmarks import applications
+
+        applications.run()
+    if "roofline" in picked:
+        from benchmarks import roofline
+
+        roofline.run()
+
+    print(f"# total {time.perf_counter() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Paper Fig 4: no-op task throughput vs worker count (1 MB in / 1 MB out).
+
+Stresses the centralized scheduler: tasks are O(ms), so dispatch rate is the
+limit.  Baseline embeds 1 MB each way in scheduler messages; pass-by-proxy
+moves those bytes through mediated storage and the scheduler handles only
+references.  (On this 1-core container absolute throughput is modest; the
+*relative* curve -- proxy sustains higher throughput as n grows -- is the
+paper's claim and is what we assert.)
+"""
+
+from __future__ import annotations
+
+import time
+import uuid
+
+import numpy as np
+
+from benchmarks.common import QUICK, record, save_artifact
+from repro.core import SizePolicy, Store
+from repro.core.connectors import MemoryConnector
+from repro.runtime.client import LocalCluster, ProxyClient
+
+PAYLOAD = 1_000_000
+
+
+def one_mb_task(x):
+    _ = np.asarray(x)  # consume 1 MB
+    return np.random.default_rng(0).bytes(PAYLOAD)  # produce 1 MB
+
+
+def _throughput(client, n_tasks: int) -> float:
+    data = np.random.default_rng(1).bytes(PAYLOAD)
+    t0 = time.perf_counter()
+    futs = [client.submit(one_mb_task, data, pure=False) for _ in range(n_tasks)]
+    for f in futs:
+        f.result(timeout=300)
+    return n_tasks / (time.perf_counter() - t0)
+
+
+def run() -> dict:
+    workers = [1, 2, 4] if QUICK else [1, 2, 4, 8, 16]
+    n_tasks = 40 if QUICK else 120
+    out: dict = {"workers": workers, "baseline_tps": [], "proxy_tps": []}
+
+    for n in workers:
+        with LocalCluster(n_workers=n) as cluster:
+            with cluster.get_client() as base:
+                base_tps = _throughput(base, n_tasks)
+            store = Store(
+                f"bench-tp-{uuid.uuid4().hex[:6]}",
+                MemoryConnector(segment=f"tp-{uuid.uuid4().hex[:6]}"),
+            )
+            with ProxyClient(
+                cluster, ps_store=store, should_proxy=SizePolicy(100_000)
+            ) as proxy:
+                proxy_tps = _throughput(proxy, n_tasks)
+            store.connector.clear()
+            store.close()
+
+        out["baseline_tps"].append(base_tps)
+        out["proxy_tps"].append(proxy_tps)
+        record(
+            f"fig4/throughput/{n}workers/baseline",
+            1e6 / base_tps,
+            f"base={base_tps:.0f}tps proxy={proxy_tps:.0f}tps "
+            f"speedup={proxy_tps/base_tps:.2f}x",
+        )
+
+    save_artifact("fig4_scaling", out)
+    return out

@@ -1,0 +1,75 @@
+"""Paper §3 "Performance": serialization overhaul vs pickle (2-3x claim).
+
+Measures encode (serialize) and decode (deserialize) wall time for the
+scientific payload shapes the paper names: big arrays and array pytrees
+(train-state-like).  Our framed zero-copy path vs pickle protocol 5.
+"""
+
+from __future__ import annotations
+
+import pickle
+
+import numpy as np
+
+from benchmarks.common import QUICK, record, save_artifact, timeit
+from repro.core.serialize import deserialize, serialize
+
+
+def _payloads() -> dict[str, object]:
+    rng = np.random.default_rng(0)
+    sizes = {"1MB": 1 << 20, "16MB": 1 << 24} if not QUICK else {"1MB": 1 << 20}
+    out: dict[str, object] = {}
+    for name, nbytes in sizes.items():
+        out[f"ndarray_{name}"] = rng.normal(size=nbytes // 8)
+    out["state_pytree"] = {
+        f"layer_{i}": {
+            "w": rng.normal(size=(256, 256)).astype(np.float32),
+            "b": rng.normal(size=(256,)).astype(np.float32),
+        }
+        for i in range(8 if QUICK else 24)
+    }
+    out["dataframe_like"] = {
+        "cols": {
+            c: rng.normal(size=100_000) for c in ("a", "b", "c", "d")
+        },
+        "index": np.arange(100_000),
+    }
+    return out
+
+
+def run() -> dict:
+    reps = 3 if QUICK else 9
+    results: dict = {}
+    for name, obj in _payloads().items():
+        # frames(): the writev path connectors consume -- zero data copies.
+        t_frames = timeit(lambda: serialize(obj).frames(), reps=reps)["median"]
+        # to_bytes(): one concatenation copy (contiguous-blob transports).
+        t_blob = timeit(lambda: serialize(obj).to_bytes(), reps=reps)["median"]
+        # baseline: classic single-stream pickle (what ProxyStore used before
+        # the overhaul; arrays are copied into the pickle stream).
+        t_pkl = timeit(lambda: pickle.dumps(obj, protocol=5), reps=reps)["median"]
+
+        blob = serialize(obj).to_bytes()
+        pkl_blob = pickle.dumps(obj, protocol=5)
+        t_de = timeit(lambda: deserialize(blob), reps=reps)["median"]
+        t_unpkl = timeit(lambda: pickle.loads(pkl_blob), reps=reps)["median"]
+
+        results[name] = {
+            "frames_s": t_frames,
+            "blob_s": t_blob,
+            "pickle_s": t_pkl,
+            "encode_speedup_frames": t_pkl / t_frames,
+            "encode_speedup_blob": t_pkl / t_blob,
+            "deserialize_s": t_de,
+            "unpickle_s": t_unpkl,
+            "decode_speedup": t_unpkl / t_de,
+            "nbytes": len(blob),
+        }
+        record(
+            f"serializer/{name}/encode", t_frames * 1e6,
+            f"pickle={t_pkl*1e6:.0f}us frames_speedup={t_pkl/t_frames:.2f}x "
+            f"blob_speedup={t_pkl/t_blob:.2f}x "
+            f"decode_speedup={t_unpkl/t_de:.2f}x",
+        )
+    save_artifact("serializer", results)
+    return results

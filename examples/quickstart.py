@@ -1,0 +1,52 @@
+"""Quickstart: the paper's three integration patterns (Fig 2), end to end.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import SizePolicy, Store, StoreExecutor, is_proxy
+from repro.core.connectors import MemoryConnector, ShardedConnector
+from repro.runtime.client import LocalCluster, ProxyClient
+
+
+def main() -> None:
+    data = np.random.default_rng(0).normal(size=(512, 512))  # ~2 MB
+
+    # ---- (a) manual proxies: store once, pass references ---------------------
+    with Store("example-a", MemoryConnector(segment="quickstart")) as store:
+        with LocalCluster(n_workers=2) as cluster:
+            with cluster.get_client() as client:
+                proxy = store.proxy(data)          # cheap wide-area reference
+                future = client.submit(lambda x: float(np.asarray(x).sum()), proxy)
+                print("(a) manual proxy     :", round(future.result(), 3))
+
+    # ---- (b) drop-in client: auto-proxy above a threshold --------------------
+    with Store("example-b", MemoryConnector(segment="quickstart")) as store:
+        with LocalCluster(n_workers=2) as cluster:
+            with ProxyClient(cluster, ps_store=store, ps_threshold=1000) as client:
+                future = client.submit(lambda x: float(np.asarray(x).sum()), data)
+                print("(b) auto-proxy client:", round(future.result(), 3))
+                print("    scheduler bytes  :",
+                      cluster.scheduler.bytes_through()["in_bytes"])
+
+    # ---- (c) StoreExecutor: policies + ownership over any executor -----------
+    from concurrent.futures import ThreadPoolExecutor
+
+    with Store("example-c", ShardedConnector("/tmp/quickstart-pool",
+                                             num_shards=4)) as store:
+        with ThreadPoolExecutor(2) as pool:
+            with StoreExecutor(
+                pool, store,
+                should_proxy=SizePolicy(1000),   # proxy objects >= 1 kB
+                ownership=True,                  # results auto-evict when GC'd
+            ) as executor:
+                future = executor.submit(lambda x: np.asarray(x) @ np.asarray(x).T,
+                                         data)
+                result = future.result()
+                print("(c) StoreExecutor    : result is proxy =", is_proxy(result),
+                      "| shape =", result.shape)
+
+
+if __name__ == "__main__":
+    main()

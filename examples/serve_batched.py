@@ -1,0 +1,76 @@
+"""Serve a small LM with batched requests + proxy-distributed weights.
+
+The server restores weights *lazily* from the checkpoint store: each worker
+(here: the serving process) resolves only the shards it needs, just in time
+-- the pass-by-reference win applied to model loading / restart storms.
+
+Decode runs prefill once per batch, then steps the KV cache token by token.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import Store, is_proxy
+from repro.core.connectors import MemoryConnector
+from repro.models import transformer as tx
+from repro.models.layers import logits_matmul
+from repro.train.checkpoint import CheckpointManager
+
+ARCH = "qwen2.5-3b"
+BATCH, PROMPT_LEN, GEN_TOKENS = 4, 16, 24
+
+
+def main() -> None:
+    cfg = get_smoke_config(ARCH)
+    store = Store("serve-store", MemoryConnector(segment="serve"))
+    ckpt = CheckpointManager(store, "/tmp/serve_ckpt_index.json", keep=1)
+
+    # "trainer" published a checkpoint
+    params = tx.init_params(cfg, jax.random.PRNGKey(0))
+    ckpt.save(0, params, blocking=True)
+
+    # "server" restores lazily: a pytree of unresolved proxies
+    _, lazy = ckpt.restore_lazy()
+    leaves = jax.tree.leaves(lazy, is_leaf=is_proxy)
+    print(f"restored {len(leaves)} weight shards as proxies "
+          f"(resolved so far: 0/{len(leaves)})")
+    params = jax.tree.map(
+        lambda p: jnp.asarray(np.asarray(p)), lazy, is_leaf=is_proxy
+    )  # workers resolve just-in-time; here: all shards on one host
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (BATCH, PROMPT_LEN)).astype(np.int32)
+    )
+
+    prefill = jax.jit(lambda p, t, c: tx.prefill(cfg, p, t, c))
+    decode = jax.jit(lambda p, c, t, pos: tx.decode_step(cfg, p, c, t, pos))
+
+    cache = tx.init_cache(cfg, BATCH, PROMPT_LEN + GEN_TOKENS + 1)
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, prompts, cache)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    generated = [tok]
+    for i in range(GEN_TOKENS - 1):
+        pos = jnp.full((BATCH, 1), PROMPT_LEN + i, jnp.int32)
+        logits, cache = decode(params, cache, tok, pos)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        generated.append(tok)
+    out = jnp.concatenate(generated, axis=1)
+    dt = time.perf_counter() - t0
+
+    print(f"served batch={BATCH} prompt={PROMPT_LEN} gen={GEN_TOKENS} "
+          f"in {dt:.2f}s ({BATCH*GEN_TOKENS/dt:.1f} tok/s)")
+    print("sample token ids:", np.asarray(out[0])[:10].tolist())
+    store.connector.clear()
+    store.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""End-to-end driver: train an LM with the full framework stack.
+
+Wraps the production entry point (``repro.launch.train``): jitted+sharded
+train step, proxy-fed data pipeline, async proxy-backed checkpoints, and
+crash/restart.  Defaults train the *reduced* config for CPU; pass
+``--full --arch mamba2-130m`` to train the real ~130M-parameter model
+(a few hundred steps; budget several minutes per step batch on CPU).
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 60
+"""
+
+import sys
+
+from repro.launch.train import parse_args, train
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    if "--full" in argv:
+        argv.remove("--full")
+    else:
+        argv = ["--smoke", "--batch", "8", "--seq", "128",
+                "--ckpt-every", "25", "--log-every", "5"] + argv
+    args = parse_args(argv)
+    out = train(args)
+    final = out["final"]
+    print(f"\nfinal: step={final['step']} loss={final['loss']:.4f} "
+          f"tokens/s={final['tokens_per_s']:,.0f}")
+    first, last = out["log"][0], out["log"][-1]
+    assert last["loss"] < first["loss"], "loss did not decrease!"
+    print("loss decreased:", round(first["loss"], 3), "->", round(last["loss"], 3))
+
+
+if __name__ == "__main__":
+    main()

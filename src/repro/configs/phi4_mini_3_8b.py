@@ -1,0 +1,22 @@
+"""phi4-mini-3.8b [dense]: 32L d_model=3072 24H (GQA kv=8) d_ff=8192.
+
+vocab=200064, RoPE + SwiGLU + GQA, tied embeddings.  [arXiv:2412.08905; hf]
+"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="phi4-mini-3.8b", family="dense",
+        num_layers=32, d_model=3072, num_heads=24, num_kv_heads=8,
+        head_dim=128, d_ff=8192, vocab_size=200_064,
+        rope_theta=10_000.0, tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    import jax.numpy as jnp
+    return config().replace(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, compute_dtype=jnp.float32,
+    )

@@ -1,0 +1,93 @@
+"""The paper's primary contribution: transparent pass-by-proxy data flow.
+
+Public API::
+
+    from repro.core import Store, Proxy, StoreExecutor
+    from repro.core.connectors import ShardedConnector
+
+    with Store("demo", ShardedConnector("/tmp/daos", num_shards=8)) as store:
+        p = store.proxy(big_array)          # cheap wide-area reference
+        future = client.submit(fn, p)       # scheduler never sees the bytes
+"""
+
+from repro.core.executor import StoreExecutor
+from repro.core.ownership import (
+    OwnedProxy,
+    OwnershipError,
+    RefMutProxy,
+    RefProxy,
+    borrow,
+    mut_borrow,
+    release,
+    transfer,
+)
+from repro.core.policy import (
+    AllPolicy,
+    AlwaysPolicy,
+    AnyPolicy,
+    NeverPolicy,
+    SizePolicy,
+    TypePolicy,
+)
+from repro.core.proxy import (
+    Factory,
+    LambdaFactory,
+    Proxy,
+    ProxyOr,
+    ProxyResolveError,
+    SimpleFactory,
+    StoreFactory,
+    TargetMetadata,
+    extract,
+    get_factory,
+    get_metadata,
+    is_proxy,
+    is_resolved,
+    proxy_token,
+    resolve,
+)
+from repro.core.store import (
+    Store,
+    get_or_create_store,
+    get_store,
+    register_store,
+    unregister_store,
+)
+
+__all__ = [
+    "StoreExecutor",
+    "OwnedProxy",
+    "OwnershipError",
+    "RefMutProxy",
+    "RefProxy",
+    "borrow",
+    "mut_borrow",
+    "release",
+    "transfer",
+    "AllPolicy",
+    "AlwaysPolicy",
+    "AnyPolicy",
+    "NeverPolicy",
+    "SizePolicy",
+    "TypePolicy",
+    "Factory",
+    "LambdaFactory",
+    "Proxy",
+    "ProxyOr",
+    "ProxyResolveError",
+    "SimpleFactory",
+    "StoreFactory",
+    "TargetMetadata",
+    "extract",
+    "get_factory",
+    "get_metadata",
+    "is_proxy",
+    "is_resolved",
+    "proxy_token",
+    "resolve",
+    "Store",
+    "get_or_create_store",
+    "get_store",
+    "register_store",
+    "unregister_store",
+]

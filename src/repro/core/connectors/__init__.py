@@ -1,0 +1,30 @@
+"""Byte-level mediated storage connectors (the paper's low-level interface)."""
+
+from repro.core.connectors.base import (
+    Connector,
+    ConnectorStats,
+    Key,
+    connector_from_config,
+    register_connector,
+)
+from repro.core.connectors.file import FileConnector
+from repro.core.connectors.kv import KVConnector, KVServer
+from repro.core.connectors.memory import MemoryConnector
+from repro.core.connectors.multi import MultiConnector
+from repro.core.connectors.sharded import ShardedConnector
+from repro.core.connectors.shm import SharedMemoryConnector
+
+__all__ = [
+    "Connector",
+    "ConnectorStats",
+    "Key",
+    "connector_from_config",
+    "register_connector",
+    "FileConnector",
+    "KVConnector",
+    "KVServer",
+    "MemoryConnector",
+    "MultiConnector",
+    "ShardedConnector",
+    "SharedMemoryConnector",
+]

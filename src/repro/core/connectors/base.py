@@ -1,0 +1,133 @@
+"""Connector protocol: the byte-level mediated storage interface.
+
+The paper separates the high-level ``Store`` (proxy creation) from the
+low-level ``Connector`` (byte put/get against some storage or transfer
+substrate).  A connector must be *reconstructible from its config* in an
+arbitrary process -- that is what makes proxy factories self-contained.
+"""
+
+from __future__ import annotations
+
+import threading
+import uuid
+from dataclasses import dataclass
+from typing import Any, Iterable, Protocol, Sequence, runtime_checkable
+
+from repro.core.serialize import SerializedObject
+
+
+@dataclass(frozen=True)
+class Key:
+    """Identifies an object inside a connector's namespace."""
+
+    object_id: str
+    size: int = -1  # serialized size in bytes, when known (-1 = unknown)
+    tag: str = ""   # connector-specific placement hint (e.g. shard id)
+
+    @staticmethod
+    def new(size: int = -1, tag: str = "") -> "Key":
+        return Key(object_id=uuid.uuid4().hex, size=size, tag=tag)
+
+
+Payload = SerializedObject | bytes | bytearray | memoryview
+
+
+def payload_frames(data: Payload) -> list[bytes | memoryview]:
+    if isinstance(data, SerializedObject):
+        return data.frames()
+    return [memoryview(data)]
+
+
+def payload_nbytes(data: Payload) -> int:
+    if isinstance(data, SerializedObject):
+        return data.nbytes
+    return memoryview(data).nbytes
+
+
+@runtime_checkable
+class Connector(Protocol):
+    """Byte-level storage/transfer channel.
+
+    Implementations must be cheap to construct from ``config()`` output so
+    factories can lazily re-open them inside worker processes.
+    """
+
+    def put(self, data: Payload) -> Key: ...
+
+    def put_batch(self, datas: Sequence[Payload]) -> list[Key]: ...
+
+    def get(self, key: Key) -> memoryview | bytes | None: ...
+
+    def get_batch(self, keys: Sequence[Key]) -> list[memoryview | bytes | None]: ...
+
+    def exists(self, key: Key) -> bool: ...
+
+    def evict(self, key: Key) -> None: ...
+
+    def close(self) -> None: ...
+
+    def config(self) -> dict[str, Any]: ...
+
+
+class ConnectorStats:
+    """Thread-safe byte/op counters every connector maintains.
+
+    These power the benchmark attribution: bytes moved via mediated storage
+    vs. bytes moved through the scheduler.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.puts = 0
+        self.gets = 0
+        self.evicts = 0
+        self.bytes_put = 0
+        self.bytes_got = 0
+
+    def record_put(self, nbytes: int) -> None:
+        with self._lock:
+            self.puts += 1
+            self.bytes_put += nbytes
+
+    def record_get(self, nbytes: int) -> None:
+        with self._lock:
+            self.gets += 1
+            self.bytes_got += nbytes
+
+    def record_evict(self) -> None:
+        with self._lock:
+            self.evicts += 1
+
+    def snapshot(self) -> dict[str, int]:
+        with self._lock:
+            return {
+                "puts": self.puts,
+                "gets": self.gets,
+                "evicts": self.evicts,
+                "bytes_put": self.bytes_put,
+                "bytes_got": self.bytes_got,
+            }
+
+
+_CONNECTOR_TYPES: dict[str, type] = {}
+
+
+def register_connector(name: str):
+    """Class decorator registering a connector type for config round-trips."""
+
+    def deco(cls: type) -> type:
+        _CONNECTOR_TYPES[name] = cls
+        cls.connector_type = name
+        return cls
+
+    return deco
+
+
+def connector_from_config(config: dict[str, Any]) -> "Connector":
+    config = dict(config)
+    kind = config.pop("connector_type")
+    try:
+        cls = _CONNECTOR_TYPES[kind]
+    except KeyError:
+        raise ValueError(f"unknown connector type {kind!r}") from None
+    return cls.from_config(config)

@@ -1,0 +1,91 @@
+"""Shared-filesystem connector (the Lustre/NFS analogue).
+
+One file per object under a root directory; writes are atomic
+(tmp + rename) so concurrent readers in other processes never observe a
+partial object.  Writes are scatter-gather: the frames of a
+``SerializedObject`` are written sequentially without first concatenating
+them (no extra copy).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Sequence
+
+from repro.core.connectors.base import (
+    ConnectorStats,
+    Key,
+    Payload,
+    payload_frames,
+    register_connector,
+)
+
+
+@register_connector("file")
+class FileConnector:
+    def __init__(self, store_dir: str) -> None:
+        self.store_dir = str(store_dir)
+        Path(self.store_dir).mkdir(parents=True, exist_ok=True)
+        self.stats = ConnectorStats()
+
+    def _path(self, key: Key) -> Path:
+        return Path(self.store_dir) / key.object_id
+
+    def _write(self, path: Path, data: Payload) -> int:
+        nbytes = 0
+        fd, tmp = tempfile.mkstemp(dir=self.store_dir, prefix=".tmp-")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                for frame in payload_frames(data):
+                    f.write(frame)
+                    nbytes += memoryview(frame).nbytes
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return nbytes
+
+    def put(self, data: Payload) -> Key:
+        key = Key.new()
+        nbytes = self._write(self._path(key), data)
+        self.stats.record_put(nbytes)
+        return Key(key.object_id, size=nbytes)
+
+    def put_batch(self, datas: Sequence[Payload]) -> list[Key]:
+        return [self.put(d) for d in datas]
+
+    def get(self, key: Key) -> bytes | None:
+        try:
+            blob = self._path(key).read_bytes()
+        except FileNotFoundError:
+            return None
+        self.stats.record_get(len(blob))
+        return blob
+
+    def get_batch(self, keys: Sequence[Key]) -> list[bytes | None]:
+        return [self.get(k) for k in keys]
+
+    def exists(self, key: Key) -> bool:
+        return self._path(key).exists()
+
+    def evict(self, key: Key) -> None:
+        try:
+            self._path(key).unlink()
+            self.stats.record_evict()
+        except FileNotFoundError:
+            pass
+
+    def close(self) -> None:
+        pass
+
+    def config(self) -> dict[str, Any]:
+        return {"connector_type": "file", "store_dir": self.store_dir}
+
+    @classmethod
+    def from_config(cls, config: dict[str, Any]) -> "FileConnector":
+        return cls(**config)

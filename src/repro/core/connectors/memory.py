@@ -1,0 +1,74 @@
+"""In-memory connector: process-local dict storage.
+
+The fastest option when producer and consumer share an address space
+(thread-based workers, single-process pipelines, tests).  Named segments are
+process-global so that two ``Store`` instances with the same segment name
+share objects, mirroring how a Redis/DAOS namespace outlives any one client.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Sequence
+
+from repro.core.connectors.base import (
+    Connector,
+    ConnectorStats,
+    Key,
+    Payload,
+    payload_nbytes,
+    register_connector,
+)
+from repro.core.serialize import SerializedObject
+
+_SEGMENTS: dict[str, dict[str, bytes]] = {}
+_SEGMENTS_LOCK = threading.Lock()
+
+
+@register_connector("memory")
+class MemoryConnector:
+    def __init__(self, segment: str = "default") -> None:
+        self.segment = segment
+        with _SEGMENTS_LOCK:
+            self._data = _SEGMENTS.setdefault(segment, {})
+        self.stats = ConnectorStats()
+
+    def put(self, data: Payload) -> Key:
+        blob = data.to_bytes() if isinstance(data, SerializedObject) else bytes(data)
+        key = Key.new(size=len(blob))
+        self._data[key.object_id] = blob
+        self.stats.record_put(len(blob))
+        return key
+
+    def put_batch(self, datas: Sequence[Payload]) -> list[Key]:
+        return [self.put(d) for d in datas]
+
+    def get(self, key: Key) -> memoryview | None:
+        blob = self._data.get(key.object_id)
+        if blob is None:
+            return None
+        self.stats.record_get(len(blob))
+        return memoryview(blob)
+
+    def get_batch(self, keys: Sequence[Key]) -> list[memoryview | None]:
+        return [self.get(k) for k in keys]
+
+    def exists(self, key: Key) -> bool:
+        return key.object_id in self._data
+
+    def evict(self, key: Key) -> None:
+        if self._data.pop(key.object_id, None) is not None:
+            self.stats.record_evict()
+
+    def close(self) -> None:
+        pass
+
+    def clear(self) -> None:
+        self._data.clear()
+
+    def config(self) -> dict[str, Any]:
+        return {"connector_type": "memory", "segment": self.segment}
+
+    @classmethod
+    def from_config(cls, config: dict[str, Any]) -> "MemoryConnector":
+        return cls(**config)

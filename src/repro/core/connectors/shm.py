@@ -1,0 +1,127 @@
+"""POSIX shared-memory connector -- the node-local zero-copy fast path.
+
+The RDMA/NVLink analogue available on a CPU container: producer writes
+frames straight into a named ``SharedMemory`` segment; any consumer process
+on the same host attaches by name and reads a zero-copy ``memoryview``.
+
+Segment names are derived from the object id, so the Key alone is enough to
+attach from a different process (self-contained factories).  Eviction
+unlinks the segment.
+"""
+
+from __future__ import annotations
+
+import atexit
+import threading
+from multiprocessing import shared_memory
+from typing import Any, Sequence
+
+from repro.core.connectors.base import (
+    ConnectorStats,
+    Key,
+    Payload,
+    payload_frames,
+    register_connector,
+)
+
+
+@register_connector("shm")
+class SharedMemoryConnector:
+    def __init__(self, prefix: str = "psx", zero_copy: bool = False) -> None:
+        # zero_copy=True returns live views into the segment (fastest, but
+        # the consumer must drop views before the segment can be unlinked);
+        # the default copies out, which is still one copy total.
+        self.prefix = prefix
+        self.zero_copy = zero_copy
+        self.stats = ConnectorStats()
+        self._attached: dict[str, shared_memory.SharedMemory] = {}
+        self._lock = threading.Lock()
+        atexit.register(self.close)
+
+    def _name(self, object_id: str) -> str:
+        return f"{self.prefix}_{object_id}"[:30]  # POSIX name length limits
+
+    def put(self, data: Payload) -> Key:
+        frames = [memoryview(f).cast("B") for f in payload_frames(data)]
+        total = sum(f.nbytes for f in frames) or 1
+        key = Key.new()
+        seg = shared_memory.SharedMemory(
+            name=self._name(key.object_id), create=True, size=total, track=False
+        )
+        off = 0
+        for f in frames:
+            seg.buf[off : off + f.nbytes] = f
+            off += f.nbytes
+        with self._lock:
+            self._attached[key.object_id] = seg
+        self.stats.record_put(off)
+        return Key(key.object_id, size=off)
+
+    def put_batch(self, datas: Sequence[Payload]) -> list[Key]:
+        return [self.put(d) for d in datas]
+
+    def _attach(self, key: Key) -> shared_memory.SharedMemory | None:
+        with self._lock:
+            seg = self._attached.get(key.object_id)
+        if seg is not None:
+            return seg
+        try:
+            seg = shared_memory.SharedMemory(
+                name=self._name(key.object_id), create=False, track=False
+            )
+        except FileNotFoundError:
+            return None
+        with self._lock:
+            self._attached[key.object_id] = seg
+        return seg
+
+    def get(self, key: Key) -> memoryview | bytes | None:
+        seg = self._attach(key)
+        if seg is None:
+            return None
+        size = key.size if key.size >= 0 else seg.size
+        self.stats.record_get(size)
+        if self.zero_copy:
+            # Live view; the segment stays attached while views exist.
+            return memoryview(seg.buf)[:size]
+        return bytes(seg.buf[:size])
+
+    def get_batch(self, keys: Sequence[Key]) -> list[memoryview | None]:
+        return [self.get(k) for k in keys]
+
+    def exists(self, key: Key) -> bool:
+        return self._attach(key) is not None
+
+    def evict(self, key: Key) -> None:
+        seg = self._attach(key)
+        if seg is None:
+            return
+        with self._lock:
+            self._attached.pop(key.object_id, None)
+        try:
+            seg.close()
+            seg.unlink()
+        except FileNotFoundError:
+            pass
+        self.stats.record_evict()
+
+    def close(self) -> None:
+        with self._lock:
+            segs = list(self._attached.values())
+            self._attached.clear()
+        for seg in segs:
+            try:
+                seg.close()
+            except Exception:
+                pass
+
+    def config(self) -> dict[str, Any]:
+        return {
+            "connector_type": "shm",
+            "prefix": self.prefix,
+            "zero_copy": self.zero_copy,
+        }
+
+    @classmethod
+    def from_config(cls, config: dict[str, Any]) -> "SharedMemoryConnector":
+        return cls(**config)

@@ -1,0 +1,173 @@
+"""Rust-inspired ownership model for proxies (paper §3, Methods; ref [8]).
+
+``OwnedProxy`` uniquely owns the stored bytes: when it is garbage collected
+(or its owning scope exits) the object is evicted from the store --
+automatic distributed memory management.  Borrowing hands out non-owning
+references with lifetime checks:
+
+* ``borrow(owned)``     -> immutable ``RefProxy`` (many allowed)
+* ``mut_borrow(owned)`` -> exclusive ``RefMutProxy`` (one at a time)
+* ``transfer(owned)``   -> moves ownership to a fresh ``OwnedProxy``;
+                            the original is invalidated (use-after-move
+                            raises, like Rust's moved-from values)
+
+Borrow bookkeeping is intentionally process-local advisory (as in the
+paper's implementation): it catches the common lifetime bugs in pipelines
+without requiring a distributed lock service.
+"""
+
+from __future__ import annotations
+
+from typing import Any, TypeVar
+
+from repro.core.proxy import (
+    Factory,
+    Proxy,
+    _reconstruct_proxy,
+    get_factory,
+    register_proxy_type,
+)
+
+T = TypeVar("T")
+
+
+class OwnershipError(RuntimeError):
+    pass
+
+
+@register_proxy_type
+class OwnedProxy(Proxy[T]):
+    """Uniquely-owning proxy; evicts its target when it goes out of scope."""
+
+    __slots__ = ("__proxy_owned__", "__proxy_borrows__", "__proxy_mut_borrowed__")
+
+    def __init__(self, factory: Factory[T]):
+        super().__init__(factory)
+        object.__setattr__(self, "__proxy_owned__", True)
+        object.__setattr__(self, "__proxy_borrows__", 0)
+        object.__setattr__(self, "__proxy_mut_borrowed__", False)
+
+    def __reduce__(self):
+        # Ownership cannot be implicitly duplicated by pickling: a pickled
+        # owned proxy deserializes as a *borrowed* reference.
+        return (_reconstruct_proxy, (get_factory(self),))
+
+    def __del__(self):
+        try:
+            if object.__getattribute__(self, "__proxy_owned__"):
+                _evict_target(self)
+        except Exception:
+            pass  # interpreter shutdown etc.
+
+    def __enter__(self) -> "OwnedProxy[T]":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        release(self)
+
+
+@register_proxy_type
+class RefProxy(Proxy[T]):
+    """Immutable borrow of an OwnedProxy."""
+
+    __slots__ = ("__proxy_owner__",)
+
+    def __init__(self, factory: Factory[T], owner: OwnedProxy[T]):
+        super().__init__(factory)
+        object.__setattr__(self, "__proxy_owner__", owner)
+
+    def __reduce__(self):
+        return (_reconstruct_proxy, (get_factory(self),))
+
+    def __del__(self):
+        try:
+            owner = object.__getattribute__(self, "__proxy_owner__")
+            n = object.__getattribute__(owner, "__proxy_borrows__")
+            object.__setattr__(owner, "__proxy_borrows__", max(0, n - 1))
+        except Exception:
+            pass
+
+
+@register_proxy_type
+class RefMutProxy(Proxy[T]):
+    """Exclusive mutable borrow of an OwnedProxy."""
+
+    __slots__ = ("__proxy_owner__",)
+
+    def __init__(self, factory: Factory[T], owner: OwnedProxy[T]):
+        super().__init__(factory)
+        object.__setattr__(self, "__proxy_owner__", owner)
+
+    def __reduce__(self):
+        return (_reconstruct_proxy, (get_factory(self),))
+
+    def __del__(self):
+        try:
+            owner = object.__getattribute__(self, "__proxy_owner__")
+            object.__setattr__(owner, "__proxy_mut_borrowed__", False)
+        except Exception:
+            pass
+
+
+def _check_owned(p: OwnedProxy) -> None:
+    if type(p) is not OwnedProxy:
+        raise OwnershipError(f"expected OwnedProxy, got {type(p).__name__}")
+    if not object.__getattribute__(p, "__proxy_owned__"):
+        raise OwnershipError("use of moved-from OwnedProxy")
+
+
+def _evict_target(p: Proxy) -> None:
+    factory = get_factory(p)
+    key = getattr(factory, "key", None)
+    store_config = getattr(factory, "store_config", None)
+    if key is None or store_config is None:
+        return
+    from repro.core.store import get_or_create_store
+
+    get_or_create_store(store_config).evict(key)
+
+
+def borrow(p: OwnedProxy[T]) -> RefProxy[T]:
+    """Immutably borrow; many simultaneous immutable borrows are fine."""
+    _check_owned(p)
+    if object.__getattribute__(p, "__proxy_mut_borrowed__"):
+        raise OwnershipError("cannot borrow: exclusive mutable borrow active")
+    n = object.__getattribute__(p, "__proxy_borrows__")
+    object.__setattr__(p, "__proxy_borrows__", n + 1)
+    return RefProxy(get_factory(p), p)
+
+
+def mut_borrow(p: OwnedProxy[T]) -> RefMutProxy[T]:
+    """Exclusively borrow for mutation; conflicts raise."""
+    _check_owned(p)
+    if object.__getattribute__(p, "__proxy_mut_borrowed__"):
+        raise OwnershipError("cannot mut-borrow twice")
+    if object.__getattribute__(p, "__proxy_borrows__") > 0:
+        raise OwnershipError("cannot mut-borrow: immutable borrows active")
+    object.__setattr__(p, "__proxy_mut_borrowed__", True)
+    return RefMutProxy(get_factory(p), p)
+
+
+def transfer(p: OwnedProxy[T]) -> OwnedProxy[T]:
+    """Move ownership; the argument becomes invalid (moved-from)."""
+    _check_owned(p)
+    if object.__getattribute__(p, "__proxy_borrows__") > 0 or object.__getattribute__(
+        p, "__proxy_mut_borrowed__"
+    ):
+        raise OwnershipError("cannot move while borrowed")
+    object.__setattr__(p, "__proxy_owned__", False)
+    return OwnedProxy(get_factory(p))
+
+
+def release(p: OwnedProxy[T]) -> None:
+    """Explicitly end the owned lifetime (evict now)."""
+    _check_owned(p)
+    object.__setattr__(p, "__proxy_owned__", False)
+    _evict_target(p)
+
+
+def disown(p: OwnedProxy[T]) -> Proxy[T]:
+    """Give up ownership without evicting (leak to the store's GC policy)."""
+    _check_owned(p)
+    object.__setattr__(p, "__proxy_owned__", False)
+    return Proxy(get_factory(p))

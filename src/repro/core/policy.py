@@ -1,0 +1,69 @@
+"""Should-proxy policies (paper Fig 2c: ``should_proxy=lambda x: ...``).
+
+A policy decides, per task argument/result, whether the object is worth
+routing through mediated storage instead of embedding it in the task
+message.  Policies are picklable so executors can apply them worker-side
+to results as well.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable
+
+from repro.core.serialize import estimate_size
+
+Policy = Callable[[Any], bool]
+
+# Types that are never worth proxying: cheaper inline than as a factory.
+_NEVER_PROXY = (type(None), bool, int, float, complex)
+
+
+class SizePolicy:
+    """Proxy objects whose estimated size is >= ``threshold`` bytes."""
+
+    def __init__(self, threshold: int = 100_000):
+        self.threshold = threshold
+
+    def __call__(self, obj: Any) -> bool:
+        if isinstance(obj, _NEVER_PROXY):
+            return False
+        return estimate_size(obj) >= self.threshold
+
+    def __repr__(self) -> str:
+        return f"SizePolicy(threshold={self.threshold})"
+
+
+class TypePolicy:
+    """Proxy instances of the given types (by name, to stay picklable)."""
+
+    def __init__(self, *types: type):
+        self.types = tuple(types)
+
+    def __call__(self, obj: Any) -> bool:
+        return isinstance(obj, self.types)
+
+
+class AllPolicy:
+    def __init__(self, *policies: Policy):
+        self.policies = policies
+
+    def __call__(self, obj: Any) -> bool:
+        return all(p(obj) for p in self.policies)
+
+
+class AnyPolicy:
+    def __init__(self, *policies: Policy):
+        self.policies = policies
+
+    def __call__(self, obj: Any) -> bool:
+        return any(p(obj) for p in self.policies)
+
+
+class NeverPolicy:
+    def __call__(self, obj: Any) -> bool:
+        return False
+
+
+class AlwaysPolicy:
+    def __call__(self, obj: Any) -> bool:
+        return not isinstance(obj, _NEVER_PROXY)

@@ -1,0 +1,147 @@
+"""Gradient/state compression for the cross-pod data plane (beyond-paper).
+
+Two layers, mirroring where bytes actually move at 1000+-node scale:
+
+1. **In-step (ICI/DCN)**: ``quantize_int8`` / ``dequantize_int8`` with
+   per-block scales, plus ``ErrorFeedback`` residual state so repeated
+   application is unbiased over time (Seide et al. / 1-bit-Adam lineage).
+   Intended wrapping: quantize grads before the cross-pod all-reduce and
+   carry the quantization error into the next step. jit-compatible pytree
+   functions; the residual rides in the train state.
+
+2. **Inter-step (proxy plane)**: ``CompressedDeltaCodec`` — federated /
+   elastic workflows repeatedly ship near-identical model states through
+   the Store. Encoding a state as (int8 delta vs a base fingerprint) cuts
+   mediated-storage bytes ~4x at zero information loss beyond int8 rounding,
+   and composes with pass-by-proxy (the codec output is what gets proxied).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+_EPS = 1e-12
+
+
+# -- int8 block quantization (jit-compatible) ---------------------------------
+
+
+def quantize_int8(x: jax.Array, block: int = 256) -> tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8 quantization. Returns (q, scales)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / (scale + _EPS)), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_int8(
+    q: jax.Array, scales: jax.Array, shape: tuple[int, ...], dtype=jnp.float32
+) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scales[:, None]).reshape(-1)
+    n = int(np.prod(shape)) if shape else 1
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def quantize_tree(tree: Pytree, block: int = 256) -> Pytree:
+    """Pytree -> {leafpath: (q, scales, shape, dtype)} mirror tree."""
+    return jax.tree.map(
+        lambda x: (*quantize_int8(x, block), x.shape, x.dtype), tree
+    )
+
+
+def dequantize_tree(qtree: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda t: dequantize_int8(*t),
+        qtree,
+        is_leaf=lambda t: isinstance(t, tuple) and len(t) == 4,
+    )
+
+
+# -- error feedback ------------------------------------------------------------
+
+
+def init_error_feedback(grads: Pytree) -> Pytree:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_with_feedback(
+    grads: Pytree, residual: Pytree, block: int = 256
+) -> tuple[Pytree, Pytree]:
+    """(grads + residual) -> int8; new residual = what quantization dropped.
+
+    The returned qtree is what crosses the slow axis (4x fewer bytes than
+    f32, 2x fewer than bf16); the residual stays local. Unbiased over steps:
+    sum(dequantized) -> sum(grads) as t -> inf.
+    """
+
+    g_leaves, treedef = jax.tree.flatten(grads)
+    r_leaves = treedef.flatten_up_to(residual)
+    q_leaves, res_leaves = [], []
+    for g, r in zip(g_leaves, r_leaves):
+        target = g.astype(jnp.float32) + r
+        q, scales = quantize_int8(target, block)
+        back = dequantize_int8(q, scales, g.shape)
+        q_leaves.append((q, scales, g.shape, g.dtype))
+        res_leaves.append(target - back)
+    return jax.tree.unflatten(treedef, q_leaves), jax.tree.unflatten(
+        treedef, res_leaves
+    )
+
+
+# -- proxy-plane delta codec ------------------------------------------------------
+
+
+class CompressedDeltaCodec:
+    """Encode successive model states as int8 deltas against a base.
+
+    Producer: ``encode(state)`` -> small pytree (int8 + scales) to put into
+    the Store / proxy to consumers. Consumer: ``decode(payload)``.
+    ``rebase(state)`` refreshes the base (e.g., every k rounds) to stop
+    drift accumulation.
+    """
+
+    def __init__(self, base: Pytree, block: int = 256):
+        self.base = jax.tree.map(lambda x: np.asarray(x, np.float32), base)
+        self.block = block
+
+    def encode(self, state: Pytree) -> Pytree:
+        def one(x, b):
+            d = np.asarray(x, np.float32) - b
+            q, s = quantize_int8(jnp.asarray(d), self.block)
+            return (np.asarray(q), np.asarray(s), x.shape, np.dtype(np.float32).str)
+
+        return jax.tree.map(one, state, self.base)
+
+    def decode(self, payload: Pytree) -> Pytree:
+        def one(t, b):
+            q, s, shape, _ = t
+            d = np.asarray(dequantize_int8(jnp.asarray(q), jnp.asarray(s), shape))
+            return b + d
+
+        return jax.tree.map(
+            one, payload, self.base,
+            is_leaf=lambda t: isinstance(t, tuple) and len(t) == 4,
+        )
+
+    def rebase(self, state: Pytree) -> None:
+        self.base = jax.tree.map(lambda x: np.asarray(x, np.float32), state)
+
+
+def payload_nbytes(qtree: Pytree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(
+        qtree, is_leaf=lambda t: isinstance(t, tuple) and len(t) == 4
+    ):
+        q, s = leaf[0], leaf[1]
+        total += np.asarray(q).nbytes + np.asarray(s).nbytes
+    return total

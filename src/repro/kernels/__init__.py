@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+The paper itself is middleware (no kernel contribution); these kernels
+serve the perf-critical substrate layers identified by the roofline:
+
+* ``flash_attention`` -- GQA flash attention (serving/prefill hot-spot)
+* ``ssd_scan``        -- Mamba-2 SSD chunked scan (SSM/hybrid archs)
+* ``fingerprint``     -- content-addressed tokens for proxy/task keys
+                          (the paper's key-hashing, as a bandwidth kernel)
+
+Each kernel ships ``kernel.py`` (pl.pallas_call + BlockSpec VMEM tiling),
+``ops.py`` (jit'd public wrapper with CPU interpret fallback), and
+``ref.py`` (pure-jnp oracle used by the allclose test sweeps).
+"""

@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the tensor fingerprint.
+
+A position-salted multiply-xor mix over uint32 lanes, folded to 64 bits.
+Not cryptographic -- it is the content token behind proxy keys / task keys
+(the paper hashes task args for scheduler keys and caches the hash on the
+proxy; for multi-GB tensors that hash is itself a bandwidth-bound kernel).
+
+Definition (must match the Pallas kernel bit-for-bit):
+
+    lanes: data padded with zeros to n_blocks x 4096 bytes,
+           viewed as uint32 and reshaped (n_blocks, 8, 128)
+    acc_0 = SEED ^ lane_salt            (lane_salt = iota * PHI)
+    acc_{i+1} = (acc_i * M1) ^ (block_i + (i+1) * PHI)
+    fold: h = xor-reduce(acc * row_salt) over the 8x128 lanes, mixed twice
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEED = np.uint32(0x9E3779B9)
+PHI = np.uint32(0x85EBCA6B)
+M1 = np.uint32(0xC2B2AE35)
+BLOCK_U32 = 8 * 128          # uint32 lanes per block
+BLOCK_BYTES = BLOCK_U32 * 4
+
+
+def _as_blocks(data: jax.Array) -> jax.Array:
+    """uint8 1-D -> (n_blocks, 8, 128) uint32, zero-padded."""
+    n = data.shape[0]
+    pad = (-n) % BLOCK_BYTES
+    if pad:
+        data = jnp.pad(data, (0, pad))
+    u32 = jax.lax.bitcast_convert_type(data.reshape(-1, 4), jnp.uint32)
+    return u32.reshape(-1, 8, 128)
+
+
+def _lane_salt() -> jax.Array:
+    iota = jnp.arange(BLOCK_U32, dtype=jnp.uint32).reshape(8, 128)
+    return iota * PHI
+
+
+def _fold(acc: jax.Array) -> jax.Array:
+    """(8, 128) uint32 -> (2,) uint32 (a 64-bit token)."""
+    row_salt = (jnp.arange(BLOCK_U32, dtype=jnp.uint32) | jnp.uint32(1)).reshape(8, 128)
+    mixed = acc * row_salt
+    h = jax.lax.reduce(mixed, jnp.uint32(0), jax.lax.bitwise_xor, (0, 1))
+    h2 = jax.lax.reduce(
+        (mixed ^ (mixed >> 16)) * M1, jnp.uint32(0), jax.lax.bitwise_xor, (0, 1)
+    )
+    h = (h ^ (h >> 15)) * PHI
+    h2 = (h2 ^ (h2 >> 13)) * M1
+    return jnp.stack([h ^ (h >> 16), h2 ^ (h2 >> 15)])
+
+
+def fingerprint_ref(data: jax.Array) -> jax.Array:
+    """data: uint8 1-D. Returns (2,) uint32."""
+    blocks = _as_blocks(data)          # (nb, 8, 128)
+    n_blocks = blocks.shape[0]
+    salts = (
+        (jnp.arange(n_blocks, dtype=jnp.uint32) + 1)[:, None, None] * PHI
+    )
+
+    def step(acc, inp):
+        blk, salt = inp
+        return (acc * M1) ^ (blk + salt), None
+
+    acc0 = SEED ^ _lane_salt()
+    acc, _ = jax.lax.scan(step, acc0, (blocks, salts))
+    return _fold(acc)

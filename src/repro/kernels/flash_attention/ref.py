@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for flash attention (materializes the score matrix)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,   # (B, H, Sq, hd)
+    k: jax.Array,   # (B, KV, Skv, hd)
+    v: jax.Array,   # (B, KV, Skv, hd)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else hd**-0.5
+    qg = q.reshape(B, KV, G, Sq, hd)
+    s = jnp.einsum(
+        "bkgqh,bkch->bkgqc", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        mask = jnp.arange(Skv)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bkch->bkgqh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the SSD scan: the naive O(S) sequential recurrence.
+
+    state_t = exp(a_t) * state_{t-1} + x_t b_t^T        (outer product, (P,N))
+    y_t     = state_t c_t                               ((P,))
+
+This is the definitionally-correct state-space recurrence the chunked dual
+form must reproduce.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(
+    x: jax.Array,    # (BH, S, P)
+    a: jax.Array,    # (BH, S)
+    b: jax.Array,    # (BH, S, N)
+    c: jax.Array,    # (BH, S, N)
+    s0: jax.Array,   # (BH, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, at, bt, ct = inp  # (BH,P), (BH,), (BH,N), (BH,N)
+        state = state * jnp.exp(at)[:, None, None] + xt[:, :, None] * bt[:, None, :]
+        y = jnp.einsum("bpn,bn->bp", state, ct)
+        return state, y
+
+    s_final, ys = jax.lax.scan(
+        step,
+        s0.astype(jnp.float32),
+        (xf.transpose(1, 0, 2), af.T, bf.transpose(1, 0, 2), cf.transpose(1, 0, 2)),
+    )
+    return ys.transpose(1, 0, 2).astype(x.dtype), s_final

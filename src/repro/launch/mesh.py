@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state; the dry-run sets the fake-device XLA flag before
+calling it.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """v5e-256 pod mesh: (data=16, model=16); two pods add a 'pod' DP axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2) -> jax.sharding.Mesh:
+    """Small mesh for correctness tests on forced host devices."""
+    return jax.make_mesh((data, model), ("data", "model"))

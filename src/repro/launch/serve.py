@@ -1,0 +1,98 @@
+"""Production serving driver: batched KV-cache decode with proxy-restored
+weights.
+
+Composes: lazy checkpoint restore (pytree of proxies -- each host resolves
+just-in-time), jitted prefill + decode_step with serving shardings
+(``fsdp_params=False``: TP + replication, no per-token weight gathers), and
+a simple continuous-batching request loop over synthetic prompts.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+        --batch 4 --prompt-len 16 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.core import Store, is_proxy
+from repro.core.connectors import MemoryConnector, ShardedConnector
+from repro.distributed.sharding import ShardingRules
+from repro.models import transformer as tx
+from repro.models import whisper as wh
+from repro.train.checkpoint import CheckpointManager
+
+
+def serve(args) -> dict:
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n, 1), ("data", "model"))
+    rules = ShardingRules(mesh, fsdp_params=False)  # serving layout
+    ctx = tx.RunCtx(mesh=mesh, dp_axes=rules.dp_axes, ep_axis="model",
+                    decode=True)
+
+    # -- weights: from checkpoint store (lazy proxies) or fresh ---------------
+    if args.run_dir:
+        connector = ShardedConnector(f"{args.run_dir}/objects", num_shards=8)
+        store = Store(f"train-{args.arch}", connector)
+        ckpt = CheckpointManager(store, f"{args.run_dir}/ckpt_index.json")
+        restored = ckpt.restore_lazy()
+        if restored is None:
+            raise SystemExit(f"no checkpoint under {args.run_dir}")
+        step, lazy = restored
+        state = jax.tree.map(
+            lambda p: jnp.asarray(np.asarray(p)), lazy, is_leaf=is_proxy
+        )
+        params = state["params"] if "params" in state else state
+        print(f"[restore] lazily resolved step-{step} weights by proxy")
+    else:
+        init = wh.init_params if cfg.is_encdec else tx.init_params
+        params = init(cfg, jax.random.PRNGKey(0))
+
+    B, PL, G = args.batch, args.prompt_len, args.gen
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, PL)).astype(np.int32))
+
+    with mesh:
+        prefill = jax.jit(lambda p, t, c: tx.prefill(cfg, p, t, c, ctx))
+        decode = jax.jit(lambda p, c, t, pos: tx.decode_step(cfg, p, c, t, pos, ctx))
+        cache = tx.init_cache(cfg, B, PL + G + 1)
+        t0 = time.perf_counter()
+        logits, cache = prefill(params, prompts, cache)
+        t_prefill = time.perf_counter() - t0
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out = [tok]
+        t0 = time.perf_counter()
+        for i in range(G - 1):
+            pos = jnp.full((B, 1), PL + i, jnp.int32)
+            logits, cache = decode(params, cache, tok, pos)
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            out.append(tok)
+        jax.block_until_ready(tok)
+        t_decode = time.perf_counter() - t0
+
+    tps = B * (G - 1) / t_decode if t_decode else 0.0
+    print(f"prefill {PL} tok x {B} reqs: {t_prefill:.3f}s | "
+          f"decode: {tps:,.1f} tok/s")
+    return {"prefill_s": t_prefill, "decode_tok_s": tps}
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--run-dir", default="",
+                    help="restore weights from this train run's store")
+    return ap.parse_args(argv)
+
+
+if __name__ == "__main__":
+    serve(parse_args())

@@ -1,0 +1,237 @@
+"""Cell specs: (architecture x input shape) -> abstract step + shardings.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input --
+weak-type-correct, shardable, no device allocation.  ``make_cell`` packages
+the jittable step function with in/out shardings for the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.sharding import ShardingRules
+from repro.models import transformer as tx
+from repro.models import whisper as wh
+from repro.models.common import ModelConfig
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+SHAPES: dict[str, dict[str, Any]] = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+# archs with sub-quadratic long-context decode (bounded attention state)
+SUBQUADRATIC = {"mamba2-130m", "hymba-1.5b"}
+
+
+def cell_skip_reason(arch: str, shape: str) -> str | None:
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        if arch == "whisper-tiny":
+            return "enc-dec decoder ctx is architecturally bounded (448)"
+        return "full-attention arch: 512K dense KV decode is quadratic-history"
+    return None
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    step_fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple[int, ...]
+    meta: dict[str, Any]
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _cell_config(arch: str, shape_name: str, overrides: dict | None = None) -> ModelConfig:
+    info = SHAPES[shape_name]
+    kw: dict[str, Any] = {}
+    if info["kind"] == "train":
+        # remat + microbatching defaults sized so one sample per device per
+        # microbatch at dp=16; hillclimbing tunes these per cell.
+        kw["remat"] = "full"
+        kw["num_microbatches"] = 8
+        kw["logits_chunk"] = 512
+        # §Perf iteration: a single attention chunk at 4k train removes the
+        # q/kv chunk double loop whose per-iteration intermediates dominated
+        # the memory term (phi4: 157s -> 53s; deepseek: 14.1s -> 5.8s)
+        kw["attention_chunk"] = 4096
+    if arch == "whisper-tiny":
+        kw["max_target_len"] = info["seq"] + 8
+    cfg = get_config(arch, **kw)
+    if overrides:
+        overrides = {
+            k: (getattr(jnp, v) if k.endswith("_dtype") and isinstance(v, str)
+                else v)
+            for k, v in overrides.items()
+        }
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+def input_specs(
+    arch: str, shape_name: str, cfg: ModelConfig | None = None
+) -> dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for one cell (the paper-mandated stand-ins)."""
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    cfg = cfg or _cell_config(arch, shape_name)
+    kind = info["kind"]
+    specs: dict[str, jax.ShapeDtypeStruct] = {}
+    if kind == "train":
+        specs["tokens"] = _sds((B, S), jnp.int32)
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = _sds(
+                (B, cfg.num_image_tokens, cfg.d_model), jnp.float32
+            )
+        if cfg.is_encdec:
+            specs["frame_embeds"] = _sds(
+                (B, cfg.encoder_seq, cfg.d_model), jnp.float32
+            )
+    elif kind == "prefill":
+        specs["tokens"] = _sds((B, S), jnp.int32)
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = _sds(
+                (B, cfg.num_image_tokens, cfg.d_model), jnp.float32
+            )
+        if cfg.is_encdec:
+            specs["frame_embeds"] = _sds(
+                (B, cfg.encoder_seq, cfg.d_model), jnp.float32
+            )
+    else:  # decode
+        specs["tokens"] = _sds((B, 1), jnp.int32)
+        specs["positions"] = _sds((B, 1), jnp.int32)
+    return specs
+
+
+def _batch_sharding(rules: ShardingRules, batch: int, ndim: int) -> NamedSharding:
+    import math
+
+    dp = math.prod(rules.mesh.shape[a] for a in rules.dp_axes)
+    first = rules.dp_axes if (batch % dp == 0 and batch >= dp) else None
+    return NamedSharding(rules.mesh, P(first, *([None] * (ndim - 1))))
+
+
+def _replicated(rules: ShardingRules):
+    return NamedSharding(rules.mesh, P())
+
+
+def make_cell(
+    arch: str,
+    shape_name: str,
+    rules: ShardingRules,
+    overrides: dict | None = None,
+) -> Cell:
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    kind = info["kind"]
+    cfg = _cell_config(arch, shape_name, overrides)
+    mesh = rules.mesh
+    ctx = tx.RunCtx(mesh=mesh, dp_axes=rules.dp_axes, ep_axis="model")
+    rng = jax.random.PRNGKey(0)
+
+    specs = input_specs(arch, shape_name, cfg)
+    batch_shardings = {
+        k: _batch_sharding(rules, B, v.ndim) for k, v in specs.items()
+    }
+    counts = cfg.param_counts()
+    meta: dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": kind,
+        "batch": B,
+        "seq": S,
+        "params_total": counts["total"],
+        "params_active": counts["active"],
+    }
+
+    if kind == "train":
+        state_shapes = jax.eval_shape(lambda: init_train_state(cfg, rng))
+        state_sh = rules.state_shardings(state_shapes)
+        step = make_train_step(cfg, AdamWConfig(), ctx)
+        out_sh = (state_sh, _replicated(rules))
+        return Cell(
+            arch, shape_name, cfg, step,
+            (state_shapes, specs),
+            (state_sh, batch_shardings),
+            out_sh,
+            donate_argnums=(0,),
+            meta=meta,
+        )
+
+    init = wh.init_params if cfg.is_encdec else tx.init_params
+    params_shapes = jax.eval_shape(lambda: init(cfg, rng))
+    params_sh = rules.state_shardings(params_shapes)
+
+    if cfg.is_encdec:
+        cache_shapes = jax.eval_shape(
+            lambda: wh.init_cache(cfg, B, S + 8, cfg.encoder_seq)
+        )
+    else:
+        cache_shapes = jax.eval_shape(lambda: tx.init_cache(cfg, B, S + 8))
+    cache_sh = rules.cache_shardings(cache_shapes)
+    logits_sh = _batch_sharding(rules, B, 3)
+
+    if kind == "prefill":
+        if cfg.is_encdec:
+            def step(params, tokens, frames, cache):
+                return wh.prefill(cfg, params, tokens, frames, cache, ctx=ctx)
+
+            args = (params_shapes, specs["tokens"], specs["frame_embeds"], cache_shapes)
+            in_sh = (
+                params_sh, batch_shardings["tokens"],
+                batch_shardings["frame_embeds"], cache_sh,
+            )
+            donate = (3,)
+        elif cfg.family == "vlm":
+            def step(params, tokens, patch_embeds, cache):
+                return tx.prefill(
+                    cfg, params, tokens, cache, ctx, patch_embeds=patch_embeds
+                )
+
+            args = (params_shapes, specs["tokens"], specs["patch_embeds"], cache_shapes)
+            in_sh = (
+                params_sh, batch_shardings["tokens"],
+                batch_shardings["patch_embeds"], cache_sh,
+            )
+            donate = (3,)
+        else:
+            def step(params, tokens, cache):
+                return tx.prefill(cfg, params, tokens, cache, ctx)
+
+            args = (params_shapes, specs["tokens"], cache_shapes)
+            in_sh = (params_sh, batch_shardings["tokens"], cache_sh)
+            donate = (2,)
+        out_sh = (logits_sh, cache_sh)
+        return Cell(arch, shape_name, cfg, step, args, in_sh, out_sh, donate, meta)
+
+    # decode
+    if cfg.is_encdec:
+        def step(params, cache, tokens, positions):
+            return wh.decode_step(cfg, params, cache, tokens, positions, ctx=ctx)
+    else:
+        def step(params, cache, tokens, positions):
+            return tx.decode_step(cfg, params, cache, tokens, positions, ctx)
+
+    args = (params_shapes, cache_shapes, specs["tokens"], specs["positions"])
+    in_sh = (
+        params_sh, cache_sh, batch_shardings["tokens"], batch_shardings["positions"]
+    )
+    out_sh = (logits_sh, cache_sh)
+    return Cell(arch, shape_name, cfg, step, args, in_sh, out_sh, (1,), meta)

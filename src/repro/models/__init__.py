@@ -1,0 +1,5 @@
+"""Architecture zoo: 10 assigned model families in pure functional JAX."""
+
+from repro.models.common import MLAConfig, MoEConfig, ModelConfig, SSMConfig
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "MLAConfig"]

@@ -1,0 +1,253 @@
+"""Mamba-2 (SSD: state-space duality) block, chunked scan + O(1) decode.
+
+Training/prefill uses the chunked dual form (quadratic attention-like
+within chunks, linear recurrence across chunks) -- the same computation the
+Pallas ``ssd_scan`` kernel tiles for the MXU.  Decode is a constant-time
+state update, which is what makes ``long_500k`` trivial for SSM archs.
+
+Shapes follow the paper (arXiv:2405.21060): X (B,S,H,P), dt (B,S,H),
+A (H,) negative scalars, B/C (B,S,G,N) with G broadcast over heads.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init
+
+Params = dict[str, Any]
+
+
+# -- SSD core (chunked dual form) ---------------------------------------------
+
+def segsum(a: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum a[..., j+1:i+1], -inf for j>i."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., i, j) = sum (j, i]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,      # (B, S, H, P)  (already multiplied by dt)
+    a: jax.Array,      # (B, S, H)     log-decay per step (dt * A, negative)
+    b: jax.Array,      # (B, S, H, N)  input matrix (heads already broadcast)
+    c: jax.Array,      # (B, S, H, N)  output matrix
+    *,
+    chunk: int = 128,
+    initial_state: jax.Array | None = None,  # (B, H, P, N)
+    return_final_state: bool = False,
+):
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    Q = min(chunk, S)
+    nC = -(-S // Q)
+    pad = nC * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    xc = x.reshape(B, nC, Q, H, P).transpose(1, 0, 2, 3, 4)
+    ac = a.reshape(B, nC, Q, H).transpose(1, 0, 2, 3).astype(jnp.float32)
+    bc = b.reshape(B, nC, Q, H, N).transpose(1, 0, 2, 3, 4)
+    cc = c.reshape(B, nC, Q, H, N).transpose(1, 0, 2, 3, 4)
+
+    state0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((B, H, P, N), jnp.float32)
+    )
+
+    def chunk_step(state, inp):
+        xq, aq, bq, cq = inp  # (B,Q,H,P), (B,Q,H), (B,Q,H,N), (B,Q,H,N)
+        a_hc = aq.transpose(0, 2, 1)                  # (B,H,Q)
+        a_cum = jnp.cumsum(a_hc, axis=-1)             # (B,H,Q)
+        # intra-chunk (dual quadratic form)
+        L = jnp.exp(segsum(a_hc))                     # (B,H,Q,Q)
+        y_diag = jnp.einsum(
+            "bqhn,bshn,bhqs,bshp->bqhp", cq, bq, L.astype(cq.dtype), xq,
+            preferred_element_type=jnp.float32,
+        )
+        # contribution of carried-in state
+        state_decay = jnp.exp(a_cum).transpose(0, 2, 1)  # (B,Q,H)
+        y_off = jnp.einsum(
+            "bqhn,bhpn,bqh->bqhp", cq, state.astype(cq.dtype),
+            state_decay.astype(cq.dtype), preferred_element_type=jnp.float32,
+        )
+        # state update for the next chunk
+        decay_to_end = jnp.exp(a_cum[..., -1:] - a_cum).transpose(0, 2, 1)  # (B,Q,H)
+        new_state = state * jnp.exp(a_cum[:, :, -1])[..., None, None] + jnp.einsum(
+            "bqhn,bqh,bqhp->bhpn", bq, decay_to_end.astype(bq.dtype), xq,
+            preferred_element_type=jnp.float32,
+        )
+        return new_state, (y_diag + y_off).astype(x.dtype)
+
+    final_state, ys = jax.lax.scan(chunk_step, state0, (xc, ac, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nC * Q, H, P)[:, :S]
+    if return_final_state:
+        return y, final_state
+    return y
+
+
+def ssd_decode_step(
+    state: jax.Array,  # (B, H, P, N)
+    x: jax.Array,      # (B, H, P)   (already multiplied by dt)
+    a: jax.Array,      # (B, H)      log-decay (dt * A)
+    b: jax.Array,      # (B, H, N)
+    c: jax.Array,      # (B, H, N)
+) -> tuple[jax.Array, jax.Array]:
+    """O(1) recurrent update: returns (y, new_state)."""
+    decay = jnp.exp(a.astype(jnp.float32))[..., None, None]
+    new_state = state * decay + x[..., None].astype(jnp.float32) * b[
+        :, :, None, :
+    ].astype(jnp.float32)
+    y = jnp.einsum("bhn,bhpn->bhp", c.astype(jnp.float32), new_state)
+    return y.astype(x.dtype), new_state
+
+
+# -- full Mamba-2 mixer block -----------------------------------------------------
+
+def init_mamba(cfg, key, d_model: int | None = None) -> Params:
+    s = cfg.ssm
+    d = d_model or cfg.d_model
+    din = s.d_inner(d)
+    H = s.n_heads(d)
+    N, K = s.d_state, s.d_conv
+    G = 1
+    conv_dim = din + 2 * G * N
+    ks = jax.random.split(key, 4)
+    std = d**-0.5
+    return {
+        # order: [z, x, B, C, dt]
+        "w_in": normal_init(
+            ks[0], (d, 2 * din + 2 * G * N + H), std, cfg.param_dtype
+        ),
+        "conv_w": normal_init(ks[1], (conv_dim, K), K**-0.5, cfg.param_dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.param_dtype),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+        ).astype(cfg.param_dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01))).astype(cfg.param_dtype),
+        "d_skip": jnp.ones((H,), cfg.param_dtype),
+        "norm_scale": jnp.ones((din,), cfg.param_dtype),
+        "w_out": normal_init(ks[2], (din, d), din**-0.5, cfg.param_dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  x: (B, S, C), w: (C, K)."""
+    K = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp,
+        w.T[:, None, :],                       # (K, 1, C) -> spec "HIO"
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b
+
+
+def apply_mamba(
+    cfg,
+    p: Params,
+    x: jax.Array,                 # (B, S, d)
+    *,
+    cache: Params | None = None,  # decode: {"conv": (B,C,K-1), "state": (B,H,P,N)}
+    d_model: int | None = None,
+    ctx: Any = None,
+) -> tuple[jax.Array, Params | None]:
+    from repro.models.common import shard_hint
+
+    s = cfg.ssm
+    ct = cfg.compute_dtype
+    d = d_model or cfg.d_model
+    din, H, N, K = s.d_inner(d), s.n_heads(d), s.d_state, s.d_conv
+    P = s.head_dim
+    B, S, _ = x.shape
+    x = x.astype(ct)
+
+    zxbcdt = x @ p["w_in"].astype(ct)
+    z, xs, b, c, dt = jnp.split(zxbcdt, [din, 2 * din, 2 * din + N, 2 * din + 2 * N], -1)
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)  # (B, S, din + 2N)
+
+    if cache is None:
+        conv_out = jax.nn.silu(
+            _causal_conv(conv_in, p["conv_w"].astype(ct), p["conv_b"].astype(ct))
+        )
+        new_cache = None
+    else:
+        # decode: S small (usually 1); use cached conv tail
+        conv_state = cache["conv"]  # (B, K-1, C)
+        full = jnp.concatenate([conv_state.astype(ct), conv_in], axis=1)
+        w = p["conv_w"].astype(ct)  # (C, K)
+        segs = [full[:, i : i + S, :] * w[:, i] for i in range(K)]
+        conv_out = jax.nn.silu(sum(segs) + p["conv_b"].astype(ct))
+        new_conv_state = full[:, -(K - 1) :, :]
+        new_cache = {"conv": new_conv_state}
+
+    xs, b, c = jnp.split(conv_out, [din, din + N], axis=-1)
+    xh = xs.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,) negative
+    log_decay = dt * a  # (B, S, H)
+    x_dt = xh * dt[..., None].astype(ct)
+    bh = jnp.broadcast_to(b[:, :, None, :], (B, S, H, N)).astype(ct)
+    ch = jnp.broadcast_to(c[:, :, None, :], (B, S, H, N)).astype(ct)
+
+    if cache is None:
+        if cfg.attention_impl == "pallas":
+            from repro.kernels.ssd_scan.ops import ssd_scan
+
+            y, _ = ssd_scan(
+                x_dt, log_decay.astype(jnp.float32), bh, ch, chunk=s.chunk
+            )
+        else:
+            y = ssd_chunked(x_dt, log_decay, bh, ch, chunk=s.chunk)
+    else:
+        state = cache.get("state")
+        if state is None:
+            state = jnp.zeros((B, H, P, N), jnp.float32)
+        if S > 4:  # prefill: chunked dual form carrying the recurrent state
+            y, state = ssd_chunked(
+                x_dt, log_decay, bh, ch, chunk=s.chunk,
+                initial_state=state, return_final_state=True,
+            )
+        else:  # decode: O(1) recurrent updates
+            ys = []
+            for t in range(S):
+                y_t, state = ssd_decode_step(
+                    state, x_dt[:, t], log_decay[:, t], bh[:, t], ch[:, t]
+                )
+                ys.append(y_t)
+            y = jnp.stack(ys, axis=1)
+        new_cache["state"] = state
+
+    y = y + xh * p["d_skip"].astype(ct)[None, None, :, None]
+    y = y.reshape(B, S, din)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    g = y * jax.nn.silu(z)
+    var = (g.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)).astype(ct) * p[
+        "norm_scale"
+    ].astype(ct)
+    out = g @ p["w_out"].astype(ct)
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, batch: int, d_model: int | None = None) -> Params:
+    s = cfg.ssm
+    d = d_model or cfg.d_model
+    din, H, N, K = s.d_inner(d), s.n_heads(d), s.d_state, s.d_conv
+    conv_dim = din + 2 * N
+    return {
+        "conv": jnp.zeros((batch, K - 1, conv_dim), cfg.compute_dtype),
+        "state": jnp.zeros((batch, H, s.head_dim, N), jnp.float32),
+    }

@@ -1,0 +1,220 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, the conv frontend is a stub: ``input_specs()`` provides
+precomputed frame embeddings (B, T_enc, d) in place of the mel+conv stack.
+The encoder is bidirectional; the decoder has causal self-attention and
+cross-attention into the encoder output.  Learned absolute positions
+(rope_theta=0), LayerNorm, GELU -- as in the original architecture.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.common import ModelConfig
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    embed_tokens,
+    init_embedding,
+    init_mlp,
+    init_norm,
+    logits_matmul,
+    normal_init,
+)
+
+Params = dict[str, Any]
+
+
+def _init_enc_layer(cfg, key) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": init_norm(cfg, cfg.d_model),
+        "attn": attn_mod.init_attention(cfg, ks[0]),
+        "ln2": init_norm(cfg, cfg.d_model),
+        "mlp": init_mlp(cfg, ks[1], cfg.d_model, cfg.d_ff),
+    }
+
+
+def _init_dec_layer(cfg, key) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_norm(cfg, cfg.d_model),
+        "self_attn": attn_mod.init_attention(cfg, ks[0]),
+        "ln_x": init_norm(cfg, cfg.d_model),
+        "cross_attn": attn_mod.init_attention(cfg, ks[1]),
+        "ln2": init_norm(cfg, cfg.d_model),
+        "mlp": init_mlp(cfg, ks[2], cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embedding": init_embedding(cfg, ks[2]),
+        "enc_pos": normal_init(ks[3], (cfg.encoder_seq, cfg.d_model), 0.02, cfg.param_dtype),
+        "dec_pos": normal_init(ks[4], (cfg.max_target_len, cfg.d_model), 0.02, cfg.param_dtype),
+        "encoder": jax.vmap(lambda k: _init_enc_layer(cfg, k))(enc_keys),
+        "decoder": jax.vmap(lambda k: _init_dec_layer(cfg, k))(dec_keys),
+        "enc_norm": init_norm(cfg, cfg.d_model),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array,
+           ctx=None) -> jax.Array:
+    """frames: (B, T_enc, d) precomputed frame embeddings (frontend stub)."""
+    from repro.models.common import shard_hint
+
+    B, T, _ = frames.shape
+    x = frames.astype(cfg.compute_dtype) + params["enc_pos"][:T].astype(
+        cfg.compute_dtype
+    )
+    if ctx is not None:
+        x = shard_hint(x, ctx, ("dp", None, None))
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def body(xc, lp):
+        h = apply_norm(cfg, lp["ln1"], xc)
+        y, _ = attn_mod.apply_attention(
+            cfg, lp["attn"], h, positions=positions, causal=False, ctx=ctx
+        )
+        xc = xc + y
+        h2 = apply_norm(cfg, lp["ln2"], xc)
+        return xc + apply_mlp(cfg, lp["mlp"], h2), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def _cross_kv(cfg, lp, enc_out):
+    ct = cfg.compute_dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["w_k"].astype(ct))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["w_v"].astype(ct))
+    return k, v
+
+
+def decode_forward(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,         # (B, S)
+    enc_out: jax.Array | None, # (B, T_enc, d); None if cross-KV is cached
+    *,
+    positions: jax.Array | None = None,
+    cache: Params | None = None,
+    ctx=None,
+) -> tuple[jax.Array, Params | None]:
+    from repro.models.common import shard_hint
+
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = embed_tokens(cfg, params["embedding"], tokens)
+    x = x + params["dec_pos"].astype(cfg.compute_dtype)[positions[0]][None]
+    if ctx is not None:
+        x = shard_hint(x, ctx, ("dp", None, None))
+
+    def body(xc, layer_in):
+        lp, lcache = layer_in
+        h = apply_norm(cfg, lp["ln1"], xc)
+        self_cache = lcache.get("self") if lcache else None
+        y, new_self = attn_mod.apply_attention(
+            cfg, lp["self_attn"], h, positions=positions, causal=True,
+            cache=self_cache, ctx=ctx,
+        )
+        xc = xc + y
+        hx = apply_norm(cfg, lp["ln_x"], xc)
+        if lcache is not None and "cross_k" in lcache:
+            ck, cv = lcache["cross_k"], lcache["cross_v"]
+        else:
+            ck, cv = _cross_kv(cfg, lp, enc_out)
+        y2, _ = attn_mod.apply_attention(
+            cfg, lp["cross_attn"], hx, positions=positions, cross_kv=(ck, cv),
+            ctx=ctx,
+        )
+        xc = xc + y2
+        h2 = apply_norm(cfg, lp["ln2"], xc)
+        xc = xc + apply_mlp(cfg, lp["mlp"], h2)
+        new_cache = None
+        if lcache is not None:
+            new_cache = {"self": new_self, "cross_k": ck, "cross_v": cv}
+        return xc, new_cache
+
+    if cache is None:
+        x, _ = jax.lax.scan(lambda c, lp: body(c, (lp, None)), x, params["decoder"])
+        new_cache = None
+    else:
+        x, new_cache = jax.lax.scan(body, x, (params["decoder"], cache))
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, new_cache
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict[str, Any],
+            ctx=None) -> jax.Array:
+    enc_out = encode(cfg, params, batch["frame_embeds"], ctx=ctx)
+    tokens = batch["tokens"]
+    x, _ = decode_forward(cfg, params, tokens, enc_out, ctx=ctx)
+    logits = logits_matmul(cfg, params["embedding"], x)
+    targets = batch.get("labels")
+    if targets is None:
+        targets = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = jnp.ones_like(nll).at[:, -1].set(0.0)
+    return (nll * mask).sum() / mask.sum()
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int) -> Params:
+    L = cfg.num_layers
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    one = {
+        "self": attn_mod.init_kv_cache(cfg, batch, max_len),
+        "cross_k": jnp.zeros((batch, enc_len, KV, hd), cfg.compute_dtype),
+        "cross_v": jnp.zeros((batch, enc_len, KV, hd), cfg.compute_dtype),
+    }
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (L, *x.shape)), one)
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    frames: jax.Array,
+    cache: Params,
+    ctx=None,
+) -> tuple[jax.Array, Params]:
+    enc_out = encode(cfg, params, frames, ctx=ctx)
+    # write cross KV into the cache by running with enc_out available
+    cache = dict(cache)
+    cache = {**cache}
+    x, new_cache = decode_forward(cfg, params, tokens, enc_out,
+                                  cache=_without_cross(cache), ctx=ctx)
+    logits = logits_matmul(cfg, params["embedding"], x[:, -1:])
+    return logits, new_cache
+
+
+def _without_cross(cache: Params) -> Params:
+    return {"self": cache["self"]} if "self" in cache else {
+        k: v for k, v in cache.items() if k == "self"
+    }
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    cache: Params,
+    tokens: jax.Array,      # (B, 1)
+    positions: jax.Array,   # (B, 1)
+    ctx=None,
+) -> tuple[jax.Array, Params]:
+    x, new_cache = decode_forward(
+        cfg, params, tokens, None, positions=positions, cache=cache, ctx=ctx
+    )
+    logits = logits_matmul(cfg, params["embedding"], x[:, -1:])
+    return logits, new_cache

@@ -1,0 +1,17 @@
+"""Mini-Dask-Distributed runtime: the substrate the paper integrates with."""
+
+from repro.runtime.client import Client, LocalCluster, ProxyClient, RuntimeFuture
+from repro.runtime.graph import FutureRef, tokenize
+from repro.runtime.scheduler import Scheduler
+from repro.runtime.worker import ThreadWorker
+
+__all__ = [
+    "Client",
+    "LocalCluster",
+    "ProxyClient",
+    "RuntimeFuture",
+    "FutureRef",
+    "tokenize",
+    "Scheduler",
+    "ThreadWorker",
+]

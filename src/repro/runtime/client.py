@@ -1,0 +1,292 @@
+"""Client, ProxyClient, and LocalCluster.
+
+``Client`` mirrors Dask Distributed's futures API (submit/map/gather).
+``ProxyClient`` is the paper's drop-in replacement (Fig 2b): identical API,
+but task inputs and outputs larger than ``ps_threshold`` are automatically
+routed through a ProxyStore ``Store``, so the scheduler only ever moves
+lightweight references.
+"""
+
+from __future__ import annotations
+
+import functools
+import queue
+import threading
+import time
+import uuid
+from concurrent.futures import Future
+from typing import Any, Callable, Iterable, Sequence
+
+from repro.core.executor import _proxy_result_task
+from repro.core.policy import Policy, SizePolicy
+from repro.core.proxy import is_proxy
+from repro.core.serialize import deserialize, serialize
+from repro.core.store import Store
+from repro.runtime import messages as M
+from repro.runtime.graph import FutureRef, find_refs, tokenize
+from repro.runtime.scheduler import Mailbox, Scheduler
+from repro.runtime.worker import ThreadWorker, dumps_function
+
+
+class RuntimeFuture(Future):
+    """concurrent.futures.Future plus the task key it tracks."""
+
+    def __init__(self, key: str, client: "Client"):
+        super().__init__()
+        self.key = key
+        self._client = client
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"<RuntimeFuture {self.key} {self._state}>"
+
+
+class Client:
+    """Futures-based client for the runtime scheduler."""
+
+    def __init__(self, cluster: "LocalCluster"):
+        self.cluster = cluster
+        self.scheduler = cluster.scheduler
+        self.client_id = f"client-{uuid.uuid4().hex[:8]}"
+        self.mailbox = Mailbox(self.client_id)
+        self.scheduler.register_client(self.client_id, self.mailbox)
+        self._futures: dict[str, list[RuntimeFuture]] = {}
+        self._gathering: dict[str, list[RuntimeFuture]] = {}
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._pump = threading.Thread(target=self._pump_loop, daemon=True)
+        self._pump.start()
+
+    # -- submission -----------------------------------------------------------
+
+    def submit(
+        self,
+        fn: Callable,
+        /,
+        *args: Any,
+        pure: bool = True,
+        retries: int = 2,
+        **kwargs: Any,
+    ) -> RuntimeFuture:
+        args_spec, deps = self._encode_args(args, kwargs)
+        if pure:
+            key = tokenize(fn, list(args), sorted(kwargs.items(), key=repr))
+        else:
+            key = f"task-{uuid.uuid4().hex}"
+        future = RuntimeFuture(key, self)
+        with self._lock:
+            self._futures.setdefault(key, []).append(future)
+        self.scheduler.inbox.put_msg(
+            M.msg(
+                M.SUBMIT,
+                key=key,
+                client=self.client_id,
+                func=dumps_function(fn),
+                args=serialize(args_spec).to_bytes(),
+                deps=deps,
+                pure=pure,
+                retries=retries,
+            )
+        )
+        return future
+
+    def _encode_args(
+        self, args: Sequence[Any], kwargs: dict[str, Any]
+    ) -> tuple[dict[str, Any], list[str]]:
+        deps: list[str] = []
+
+        def conv(obj: Any) -> Any:
+            if isinstance(obj, RuntimeFuture):
+                deps.append(obj.key)
+                return FutureRef(obj.key)
+            if isinstance(obj, list):
+                return [conv(x) for x in obj]
+            if isinstance(obj, tuple):
+                return tuple(conv(x) for x in obj)
+            if isinstance(obj, dict):
+                return {k: conv(v) for k, v in obj.items()}
+            return obj
+
+        spec = {
+            "args": [conv(a) for a in args],
+            "kwargs": {k: conv(v) for k, v in kwargs.items()},
+        }
+        return spec, sorted(set(deps))
+
+    def map(self, fn: Callable, *iterables: Iterable, **kwargs: Any) -> list[RuntimeFuture]:
+        return [self.submit(fn, *args, **kwargs) for args in zip(*iterables)]
+
+    def gather(self, futures: Sequence[RuntimeFuture]) -> list[Any]:
+        return [f.result() for f in futures]
+
+    def release(self, futures: Sequence[RuntimeFuture]) -> None:
+        keys = [f.key for f in futures]
+        with self._lock:
+            for k in keys:
+                self._futures.pop(k, None)
+        self.scheduler.inbox.put_msg(M.msg(M.RELEASE, keys=keys, client=self.client_id))
+
+    # -- result pump ------------------------------------------------------------
+
+    def _pump_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                tag, p = self.mailbox.get(timeout=0.2)
+            except queue.Empty:
+                continue
+            if tag == M.FINISHED:
+                self._on_finished(p)
+            elif tag == M.FAILED:
+                self._on_failed(p)
+            elif tag == M.DATA:
+                self._on_data(p)
+
+    def _take_futures(self, table: dict, key: str) -> list[RuntimeFuture]:
+        with self._lock:
+            return table.pop(key, [])
+
+    def _on_finished(self, p: dict[str, Any]) -> None:
+        key = p["key"]
+        if p.get("result") is not None:
+            result = deserialize(p["result"])
+            for f in self._take_futures(self._futures, key):
+                if not f.done():
+                    f.set_result(result)
+        else:
+            # Large result stayed on the worker: gather it now.
+            with self._lock:
+                futures = self._futures.pop(key, [])
+                if not futures:
+                    return
+                self._gathering.setdefault(key, []).extend(futures)
+            self.scheduler.inbox.put_msg(
+                M.msg(M.GATHER, key=key, client=self.client_id)
+            )
+
+    def _on_data(self, p: dict[str, Any]) -> None:
+        key = p["key"]
+        futures = self._take_futures(self._gathering, key)
+        if p.get("error"):
+            for f in futures:
+                if not f.done():
+                    f.set_exception(RuntimeError(p["error"]))
+            return
+        result = deserialize(p["data"]) if p.get("data") is not None else None
+        for f in futures:
+            if not f.done():
+                f.set_result(result)
+
+    def _on_failed(self, p: dict[str, Any]) -> None:
+        for f in self._take_futures(self._futures, p["key"]):
+            if not f.done():
+                f.set_exception(RuntimeError(p.get("error", "task failed")))
+
+    # -- lifecycle ------------------------------------------------------------------
+
+    def close(self) -> None:
+        self._stop.set()
+        self.scheduler.unregister_client(self.client_id)
+
+    def __enter__(self) -> "Client":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class ProxyClient(Client):
+    """Drop-in Dask-style client with automatic pass-by-proxy (Fig 2b)."""
+
+    def __init__(
+        self,
+        cluster: "LocalCluster",
+        ps_store: Store,
+        ps_threshold: int = 100_000,
+        should_proxy: Policy | None = None,
+        proxy_results: bool = True,
+    ):
+        super().__init__(cluster)
+        self.store = ps_store
+        self.should_proxy: Policy = should_proxy or SizePolicy(ps_threshold)
+        self.proxy_results = proxy_results
+
+    def _maybe_proxy(self, obj: Any) -> Any:
+        if isinstance(obj, RuntimeFuture) or is_proxy(obj):
+            return obj
+        if isinstance(obj, (list, tuple, dict)) and find_refs(obj):
+            return obj  # keep structures holding future refs intact
+        if self.should_proxy(obj):
+            return self.store.proxy(obj, evict=False)
+        return obj
+
+    def submit(self, fn: Callable, /, *args: Any, **kwargs: Any) -> RuntimeFuture:
+        pure = kwargs.pop("pure", True)
+        retries = kwargs.pop("retries", 2)
+        args = tuple(self._maybe_proxy(a) for a in args)
+        kwargs = {k: self._maybe_proxy(v) for k, v in kwargs.items()}
+        if self.proxy_results:
+            fn = functools.partial(
+                _proxy_result_task,
+                fn,
+                self.store.config(),
+                self.should_proxy,
+                False,
+            )
+        return super().submit(fn, *args, pure=pure, retries=retries, **kwargs)
+
+
+class LocalCluster:
+    """Scheduler + N workers in one process (thread workers).
+
+    Supports elastic scaling (``add_worker``/``remove_worker``) and fault
+    injection (``kill_worker``) for the fault-tolerance tests.
+    """
+
+    def __init__(
+        self,
+        n_workers: int = 4,
+        *,
+        threads_per_worker: int = 1,
+        heartbeat_timeout: float = 5.0,
+        speculation_factor: float = 4.0,
+        speculation_min: float = 1.0,
+    ):
+        self.scheduler = Scheduler(
+            heartbeat_timeout=heartbeat_timeout,
+            speculation_factor=speculation_factor,
+            speculation_min=speculation_min,
+        ).start()
+        self.workers: dict[str, ThreadWorker] = {}
+        for _ in range(n_workers):
+            self.add_worker(threads_per_worker)
+
+    def add_worker(self, nthreads: int = 1) -> str:
+        worker_id = f"worker-{len(self.workers)}-{uuid.uuid4().hex[:6]}"
+        w = ThreadWorker(worker_id, self.scheduler, nthreads=nthreads).start()
+        self.workers[worker_id] = w
+        return worker_id
+
+    def remove_worker(self, worker_id: str) -> None:
+        w = self.workers.pop(worker_id, None)
+        if w is not None:
+            w.stop()
+            self.scheduler.inbox.put_msg(M.msg(M.DEREGISTER, worker=worker_id))
+
+    def kill_worker(self, worker_id: str) -> None:
+        """Abrupt failure: no deregistration, heartbeats just stop."""
+        w = self.workers.pop(worker_id, None)
+        if w is not None:
+            w.kill()
+
+    def get_client(self) -> Client:
+        return Client(self)
+
+    def close(self) -> None:
+        for w in list(self.workers.values()):
+            w.stop()
+        self.scheduler.stop()
+
+    def __enter__(self) -> "LocalCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,116 @@
+"""Task keys and deterministic argument tokenization.
+
+Mirrors Dask's behavior that motivated the paper's compatibility work: the
+scheduler derives a key from the function and its arguments (for caching of
+pure functions), which means it *introspects every argument*.  Proxy
+arguments are tokenized from their cached metadata token -- never resolved.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import pickle
+from typing import Any
+
+import numpy as np
+
+from repro.core.proxy import is_proxy, proxy_token
+
+
+def tokenize(*args: Any) -> str:
+    h = hashlib.blake2b(digest_size=16)
+    for a in args:
+        _update(h, a)
+    return h.hexdigest()
+
+
+def _update(h: "hashlib._Hash", obj: Any) -> None:
+    if is_proxy(obj):
+        # Cached identity token; resolving here would defeat pass-by-proxy.
+        h.update(b"proxy:")
+        h.update((proxy_token(obj) or repr(obj)).encode())
+        return
+    if isinstance(obj, np.ndarray):
+        h.update(b"nd:")
+        h.update(str(obj.dtype).encode())
+        h.update(str(obj.shape).encode())
+        # Content digest of at most 64 KiB: cheap yet collision-safe enough
+        # for scheduler-side caching (Dask tokenizes full content; we bound
+        # the cost, trading exactness on giant arrays for dispatch latency).
+        flat = obj.reshape(-1).view(np.uint8) if obj.flags.c_contiguous else None
+        if flat is not None:
+            h.update(memoryview(flat[: 64 * 1024]))
+        else:
+            h.update(obj.tobytes()[: 64 * 1024])
+        return
+    if isinstance(obj, (str, bytes)):
+        h.update(obj.encode() if isinstance(obj, str) else obj)
+        return
+    if isinstance(obj, (int, float, bool, complex, type(None))):
+        h.update(repr(obj).encode())
+        return
+    if isinstance(obj, (list, tuple)):
+        h.update(b"seq:")
+        for x in obj:
+            _update(h, x)
+        return
+    if isinstance(obj, dict):
+        h.update(b"map:")
+        for k in sorted(obj, key=repr):
+            _update(h, k)
+            _update(h, obj[k])
+        return
+    if callable(obj):
+        name = getattr(obj, "__qualname__", None) or repr(obj)
+        mod = getattr(obj, "__module__", "")
+        h.update(f"fn:{mod}.{name}".encode())
+        return
+    try:
+        h.update(pickle.dumps(obj, protocol=5))
+    except Exception:
+        h.update(repr(obj).encode())
+
+
+class FutureRef:
+    """Placeholder for an unfinished upstream task inside task args."""
+
+    __slots__ = ("key",)
+
+    def __init__(self, key: str):
+        self.key = key
+
+    def __repr__(self) -> str:
+        return f"FutureRef({self.key})"
+
+    def __reduce__(self):
+        return (FutureRef, (self.key,))
+
+
+def substitute_refs(obj: Any, results: dict[str, Any]) -> Any:
+    """Replace FutureRefs in (possibly nested) args with their results."""
+    if isinstance(obj, FutureRef):
+        return results[obj.key]
+    if isinstance(obj, list):
+        return [substitute_refs(x, results) for x in obj]
+    if isinstance(obj, tuple):
+        return tuple(substitute_refs(x, results) for x in obj)
+    if isinstance(obj, dict):
+        return {k: substitute_refs(v, results) for k, v in obj.items()}
+    return obj
+
+
+def find_refs(obj: Any) -> list[str]:
+    out: list[str] = []
+    _find(obj, out)
+    return out
+
+
+def _find(obj: Any, out: list[str]) -> None:
+    if isinstance(obj, FutureRef):
+        out.append(obj.key)
+    elif isinstance(obj, (list, tuple)):
+        for x in obj:
+            _find(x, out)
+    elif isinstance(obj, dict):
+        for v in obj.values():
+            _find(v, out)

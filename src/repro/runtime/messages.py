@@ -1,0 +1,39 @@
+"""Message types for the runtime protocol (plain tuples for cheap encode).
+
+Every message is ``(tag, payload_dict)``.  Tags:
+
+client -> scheduler:   submit, release, gather, client_shutdown
+worker -> scheduler:   register, heartbeat, task_done, task_failed,
+                       need_data, deregister
+scheduler -> worker:   run_task, send_data, data, cancel, stop
+scheduler -> client:   finished, failed, data
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+SUBMIT = "submit"
+RELEASE = "release"
+GATHER = "gather"
+CLIENT_SHUTDOWN = "client_shutdown"
+
+REGISTER = "register"
+HEARTBEAT = "heartbeat"
+TASK_DONE = "task_done"
+TASK_FAILED = "task_failed"
+NEED_DATA = "need_data"
+DEREGISTER = "deregister"
+
+RUN_TASK = "run_task"
+SEND_DATA = "send_data"
+DATA = "data"
+CANCEL = "cancel"
+STOP = "stop"
+
+FINISHED = "finished"
+FAILED = "failed"
+
+
+def msg(tag: str, **payload: Any) -> tuple[str, dict[str, Any]]:
+    return (tag, payload)

@@ -1,0 +1,194 @@
+"""Workers: task execution peers.
+
+Thread workers (default on this 1-core container) and process workers share
+the same protocol; both serialize every message to bytes, so the measured
+data path is identical.  Process workers additionally prove that proxy
+factories re-open stores across address spaces.
+
+Function payloads are pickled by reference when possible; non-picklable
+callables (lambdas/closures) fall back to a process-local registry token,
+valid for thread workers only -- mirroring Dask's requirement that remote
+tasks be picklable.
+"""
+
+from __future__ import annotations
+
+import pickle
+import queue
+import threading
+import time
+import traceback
+from typing import Any
+
+from repro.core.serialize import deserialize, serialize
+from repro.runtime import messages as M
+from repro.runtime.graph import substitute_refs
+from repro.runtime.scheduler import Mailbox, Scheduler
+
+# Registry for non-picklable callables (thread mode only).
+_LOCAL_FUNCS: dict[str, Any] = {}
+_LOCAL_FUNCS_LOCK = threading.Lock()
+
+
+def dumps_function(fn: Any) -> bytes:
+    try:
+        return b"P" + pickle.dumps(fn, protocol=5)
+    except Exception:
+        token = f"localfn-{id(fn)}-{time.monotonic_ns()}"
+        with _LOCAL_FUNCS_LOCK:
+            _LOCAL_FUNCS[token] = fn
+        return b"L" + token.encode()
+
+
+def loads_function(blob: bytes) -> Any:
+    tag, body = blob[:1], blob[1:]
+    if tag == b"P":
+        return pickle.loads(body)
+    token = body.decode()
+    with _LOCAL_FUNCS_LOCK:
+        fn = _LOCAL_FUNCS.get(token)
+    if fn is None:
+        raise RuntimeError(
+            "non-picklable function reached a process worker; use module-level "
+            "functions for process/multi-node execution"
+        )
+    return fn
+
+
+class ThreadWorker:
+    """In-process worker thread speaking the byte protocol."""
+
+    def __init__(self, worker_id: str, scheduler: Scheduler, nthreads: int = 1):
+        self.worker_id = worker_id
+        self.scheduler = scheduler
+        self.mailbox = Mailbox(worker_id)
+        self.data: dict[str, bytes] = {}  # key -> serialized result
+        self.nthreads = nthreads
+        self._stop = threading.Event()
+        self._cancelled: set[str] = set()
+        self._threads: list[threading.Thread] = []
+        self._heartbeat_thread: threading.Thread | None = None
+        self._pending_data: dict[str, list[dict[str, Any]]] = {}
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "ThreadWorker":
+        # Registration is control-plane (passes the live mailbox handle),
+        # so it is a direct call rather than a byte message.
+        self.scheduler.register_worker(self.worker_id, self.mailbox, self.nthreads)
+        for i in range(self.nthreads):
+            t = threading.Thread(
+                target=self._loop, daemon=True, name=f"{self.worker_id}-{i}"
+            )
+            t.start()
+            self._threads.append(t)
+        self._heartbeat_thread = threading.Thread(
+            target=self._heartbeat_loop, daemon=True
+        )
+        self._heartbeat_thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    def kill(self) -> None:
+        """Simulate abrupt node failure: stop heartbeats and execution."""
+        self._stop.set()
+
+    def _heartbeat_loop(self) -> None:
+        while not self._stop.is_set():
+            self._send(M.msg(M.HEARTBEAT, worker=self.worker_id))
+            time.sleep(0.5)
+
+    def _send(self, message: Any) -> None:
+        if not self._stop.is_set():
+            self.scheduler.inbox.put_msg(message)
+
+    # -- main loop --------------------------------------------------------------
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                message = self.mailbox.get(timeout=0.2)
+            except queue.Empty:
+                continue
+            try:
+                self._handle(message)
+            except Exception:
+                traceback.print_exc()
+
+    def _handle(self, message: tuple[str, dict[str, Any]]) -> None:
+        tag, p = message
+        if tag == M.RUN_TASK:
+            self._run_task(p)
+        elif tag == M.SEND_DATA:
+            blob = self.data.get(p["key"])
+            self._send(M.msg(M.DATA, key=p["key"], data=blob, worker=self.worker_id))
+        elif tag == M.DATA:
+            self._pending_data.setdefault(p["key"], []).append(p)
+        elif tag == M.CANCEL:
+            self._cancelled.add(p["key"])
+            if p.get("release"):
+                self.data.pop(p["key"], None)
+        elif tag == M.STOP:
+            self._stop.set()
+
+    # -- task execution -----------------------------------------------------------
+
+    def _fetch_dep(self, key: str, inline: bytes | None) -> Any:
+        if inline is not None:
+            return deserialize(inline)
+        if key in self.data:
+            return deserialize(self.data[key])
+        # Hub-mediated fetch: ask the scheduler, wait for DATA reply.
+        self._send(M.msg(M.NEED_DATA, key=key, kind="worker", peer=self.worker_id))
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline and not self._stop.is_set():
+            lst = self._pending_data.get(key)
+            if lst:
+                p = lst.pop(0)
+                if p.get("error"):
+                    raise RuntimeError(f"dep fetch failed: {p['error']}")
+                blob = p["data"]
+                self.data[key] = blob
+                return deserialize(blob)
+            time.sleep(0.005)
+        raise TimeoutError(f"dependency {key} not received")
+
+    def _run_task(self, p: dict[str, Any]) -> None:
+        key = p["key"]
+        if key in self._cancelled:
+            return
+        try:
+            fn = loads_function(p["func"])
+            args_spec = deserialize(p["args"])
+            dep_results = {
+                d: self._fetch_dep(d, p.get("inline_deps", {}).get(d))
+                for d in p.get("deps", [])
+            }
+            args = substitute_refs(args_spec["args"], dep_results)
+            kwargs = substitute_refs(args_spec["kwargs"], dep_results)
+            result = fn(*list(args), **kwargs)
+            blob = serialize(result).to_bytes()
+            self.data[key] = blob
+            inline = (
+                blob if len(blob) <= self.scheduler.inline_result_max else None
+            )
+            self._send(
+                M.msg(
+                    M.TASK_DONE,
+                    key=key,
+                    worker=self.worker_id,
+                    result=inline,
+                    nbytes=len(blob),
+                )
+            )
+        except Exception as exc:  # noqa: BLE001 - report any task failure
+            self._send(
+                M.msg(
+                    M.TASK_FAILED,
+                    key=key,
+                    worker=self.worker_id,
+                    error=f"{type(exc).__name__}: {exc}\n{traceback.format_exc()}",
+                )
+            )

@@ -1,0 +1,136 @@
+"""Checkpointing through the ProxyStore layer -- the paper's technique as a
+first-class training feature.
+
+* Each leaf (or leaf shard-group) of the train state is ``put`` into the
+  Store through its connector (sharded/DAOS-like in production) -- the
+  coordinator and the scheduler never see the bytes.
+* The manifest is tiny (keys + treedef) and is what travels between nodes.
+* **Async**: serialization happens on a background thread off the step
+  path; ``wait()`` joins before the next save (double-buffered).
+* **Lazy restore**: ``restore_lazy`` returns a pytree of *proxies* --
+  workers resolve only the shards they own, just-in-time (the pass-by-
+  reference win applied to restart storms at scale).
+* Retention: keep-last-k with automatic eviction (ownership semantics).
+"""
+
+from __future__ import annotations
+
+import json
+import pickle
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.proxy import Proxy
+from repro.core.store import Store
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        store: Store,
+        index_path: str,
+        *,
+        keep: int = 3,
+    ):
+        self.store = store
+        self.index_path = Path(index_path)
+        self.index_path.parent.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._index: dict[str, Any] = {"checkpoints": []}
+        if self.index_path.exists():
+            self._index = json.loads(self.index_path.read_text())
+
+    # -- save ------------------------------------------------------------------
+
+    def save(self, step: int, state: Any, *, blocking: bool = False) -> None:
+        """Snapshot on the step path, serialize off it."""
+        self.wait()  # at most one in-flight save (double buffer)
+        host_state = jax.tree.map(np.asarray, state)  # device -> host snapshot
+
+        if blocking:
+            self._do_save(step, host_state)
+            return
+        self._thread = threading.Thread(
+            target=self._do_save, args=(step, host_state), daemon=True
+        )
+        self._thread.start()
+
+    def _do_save(self, step: int, host_state: Any) -> None:
+        t0 = time.monotonic()
+        leaves, treedef = jax.tree.flatten(host_state)
+        keys = self.store.put_batch(leaves)
+        manifest = {
+            "step": step,
+            "treedef": pickle.dumps(treedef).hex(),
+            "keys": [
+                {"object_id": k.object_id, "size": k.size, "tag": k.tag}
+                for k in keys
+            ],
+            "nbytes": int(sum(leaf.nbytes for leaf in leaves)),
+            "save_seconds": 0.0,
+        }
+        manifest["save_seconds"] = time.monotonic() - t0
+        self._index["checkpoints"].append(manifest)
+        self._gc()
+        self.index_path.write_text(json.dumps(self._index))
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        from repro.core.connectors.base import Key
+
+        while len(self._index["checkpoints"]) > self.keep:
+            old = self._index["checkpoints"].pop(0)
+            for k in old["keys"]:
+                self.store.evict(Key(k["object_id"], k["size"], k["tag"]))
+
+    # -- restore -----------------------------------------------------------------
+
+    def latest_step(self) -> int | None:
+        cps = self._index["checkpoints"]
+        return cps[-1]["step"] if cps else None
+
+    def _manifest(self, step: int | None) -> dict[str, Any] | None:
+        self.wait()
+        cps = self._index["checkpoints"]
+        if not cps:
+            return None
+        if step is None:
+            return cps[-1]
+        for m in cps:
+            if m["step"] == step:
+                return m
+        return None
+
+    def restore(self, step: int | None = None) -> tuple[int, Any] | None:
+        """Eager restore: fetch every shard now."""
+        out = self.restore_lazy(step)
+        if out is None:
+            return None
+        s, tree = out
+        return s, jax.tree.map(
+            lambda x: np.asarray(x), tree, is_leaf=lambda x: isinstance(x, Proxy)
+        )
+
+    def restore_lazy(self, step: int | None = None) -> tuple[int, Any] | None:
+        """Pytree of proxies: each worker resolves only what it needs."""
+        from repro.core.connectors.base import Key
+
+        m = self._manifest(step)
+        if m is None:
+            return None
+        treedef = pickle.loads(bytes.fromhex(m["treedef"]))
+        proxies = [
+            self.store.proxy_from_key(Key(k["object_id"], k["size"], k["tag"]))
+            for k in m["keys"]
+        ]
+        return m["step"], jax.tree.unflatten(treedef, proxies)

@@ -1,0 +1,48 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design -- unit/smoke tests
+must see the real single CPU device; only the dry-run forces 512."""
+
+from __future__ import annotations
+
+import uuid
+
+import numpy as np
+import pytest
+
+from repro.core.connectors import MemoryConnector
+from repro.core.store import Store, unregister_store
+
+
+@pytest.fixture
+def store():
+    """A registered in-memory store on a fresh segment, cleaned up after."""
+    seg = f"test-{uuid.uuid4().hex[:8]}"
+    s = Store("test-store", MemoryConnector(segment=seg), register=True)
+    yield s
+    s.connector.clear()
+    s.close()
+    unregister_store("test-store")
+
+
+@pytest.fixture
+def unregistered_store():
+    s = Store(
+        "test-store-unreg",
+        MemoryConnector(segment=f"test-{uuid.uuid4().hex[:8]}"),
+        register=False,
+    )
+    yield s
+    s.connector.clear()
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def cluster():
+    from repro.runtime.client import LocalCluster
+
+    c = LocalCluster(n_workers=2, heartbeat_timeout=2.0)
+    yield c
+    c.close()

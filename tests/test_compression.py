@@ -1,0 +1,123 @@
+"""Gradient/state compression tests (distributed/compression.py)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.compression import (
+    CompressedDeltaCodec,
+    compress_with_feedback,
+    dequantize_int8,
+    dequantize_tree,
+    init_error_feedback,
+    payload_nbytes,
+    quantize_int8,
+    quantize_tree,
+)
+
+rng = np.random.default_rng(0)
+
+
+def test_int8_roundtrip_error_bound():
+    x = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32))
+    q, s = quantize_int8(x, block=256)
+    back = dequantize_int8(q, s, x.shape)
+    # error bounded by half a quantization step per block
+    step = np.repeat(np.asarray(s), 256)[:1000]
+    assert np.all(np.abs(np.asarray(back - x)) <= step * 0.5 + 1e-7)
+
+
+def test_quantize_zero_and_constant():
+    z = jnp.zeros(100)
+    q, s = quantize_int8(z)
+    np.testing.assert_array_equal(np.asarray(dequantize_int8(q, s, z.shape)), 0)
+    c = jnp.full(100, 3.25)
+    q, s = quantize_int8(c)
+    np.testing.assert_allclose(np.asarray(dequantize_int8(q, s, c.shape)), 3.25,
+                               rtol=1e-2)
+
+
+def test_tree_roundtrip():
+    tree = {"a": jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32)),
+            "b": [jnp.asarray(rng.normal(size=(7,)).astype(np.float32))]}
+    qt = quantize_tree(tree)
+    back = dequantize_tree(qt)
+    for o, r in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert r.shape == o.shape
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-2)
+
+
+def test_error_feedback_unbiased_over_steps():
+    """Mean of dequantized grads converges to the true mean (EF property)."""
+    true_grad = jnp.asarray(rng.normal(size=(512,)).astype(np.float32)) * 1e-3
+    residual = init_error_feedback({"g": true_grad})
+    acc = np.zeros(512)
+    steps = 50
+    for _ in range(steps):
+        qt, residual = compress_with_feedback({"g": true_grad}, residual)
+        acc += np.asarray(dequantize_int8(*qt["g"][:2], true_grad.shape))
+    mean_err = np.abs(acc / steps - np.asarray(true_grad)).max()
+    naive_q, naive_s = quantize_int8(true_grad)
+    naive_err = np.abs(
+        np.asarray(dequantize_int8(naive_q, naive_s, true_grad.shape))
+        - np.asarray(true_grad)
+    ).max()
+    assert mean_err < naive_err / 3  # feedback beats memoryless quantization
+
+
+def test_compression_ratio():
+    tree = {"w": jnp.asarray(rng.normal(size=(256, 256)).astype(np.float32))}
+    qt = quantize_tree(tree)
+    raw = 256 * 256 * 4
+    assert payload_nbytes(qt) < raw / 3  # ~4x minus scale overhead
+
+
+def test_delta_codec_roundtrip_and_size():
+    base = {"w": rng.normal(size=(128, 128)).astype(np.float32)}
+    codec = CompressedDeltaCodec(base)
+    stepped = {"w": base["w"] + rng.normal(size=(128, 128)).astype(np.float32) * 1e-3}
+    payload = codec.encode(stepped)
+    out = codec.decode(payload)
+    # delta quantization error is relative to the *delta* scale -> tiny
+    # (half-step = max|delta|/254 per block ~ 2e-5 here)
+    np.testing.assert_allclose(out["w"], stepped["w"], atol=5e-5)
+    assert payload_nbytes(payload) < 128 * 128 * 4 / 3
+
+
+def test_delta_codec_rebase():
+    base = {"w": np.zeros(64, np.float32)}
+    codec = CompressedDeltaCodec(base)
+    s1 = {"w": np.full(64, 10.0, np.float32)}
+    codec.rebase(s1)
+    payload = codec.encode({"w": s1["w"] + 0.001})
+    out = codec.decode(payload)
+    np.testing.assert_allclose(out["w"], s1["w"] + 0.001, atol=1e-6)
+
+
+def test_delta_codec_through_store(store):
+    """Composition with the paper's plane: deltas proxied through the Store."""
+    from repro.core import is_proxy
+
+    base = {"w": rng.normal(size=(256, 256)).astype(np.float32)}
+    codec = CompressedDeltaCodec(base)
+    new_state = {"w": base["w"] * 1.001}
+    p = store.proxy(codec.encode(new_state))
+    assert is_proxy(p)
+    out = codec.decode({"w": tuple(p["w"])})
+    np.testing.assert_allclose(out["w"], new_state["w"], rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 2048), seed=st.integers(0, 2**31 - 1),
+       scale=st.floats(1e-6, 1e3))
+def test_property_quantize_bounded(n, seed, scale):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray((r.normal(size=(n,)) * scale).astype(np.float32))
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s, x.shape)
+    blk = np.repeat(np.asarray(s), 256)[:n]
+    assert np.all(np.abs(np.asarray(back - x)) <= blk * 0.51 + 1e-9)

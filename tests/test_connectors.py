@@ -1,0 +1,246 @@
+"""Connector contract tests, parametrized over every mediated-storage backend."""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.connectors import (
+    FileConnector,
+    Key,
+    KVConnector,
+    KVServer,
+    MemoryConnector,
+    MultiConnector,
+    ShardedConnector,
+    SharedMemoryConnector,
+    connector_from_config,
+)
+
+
+@pytest.fixture(scope="module")
+def kv_server():
+    server = KVServer().start()
+    yield server
+    server.stop()
+
+
+@pytest.fixture
+def make_connector(tmp_path, kv_server):
+    """Factory building each connector kind by name."""
+
+    def _make(kind: str):
+        if kind == "memory":
+            return MemoryConnector(segment=f"seg-{tmp_path.name}")
+        if kind == "file":
+            return FileConnector(str(tmp_path / "file"))
+        if kind == "shm":
+            return SharedMemoryConnector()
+        if kind == "kv":
+            host, port = kv_server.address
+            return KVConnector(host, port)
+        if kind == "sharded":
+            return ShardedConnector(str(tmp_path / "daos"), num_shards=4,
+                                    stripe_size=1024)
+        if kind == "multi":
+            return MultiConnector(
+                [(4096, MemoryConnector()),
+                 (None, FileConnector(str(tmp_path / "multi")))]
+            )
+        raise KeyError(kind)
+
+    return _make
+
+
+KINDS = ["memory", "file", "shm", "kv", "sharded", "multi"]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_put_get_roundtrip(make_connector, kind):
+    c = make_connector(kind)
+    try:
+        key = c.put(b"hello world")
+        assert bytes(c.get(key)) == b"hello world"
+    finally:
+        c.close()
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_large_payload(make_connector, kind):
+    c = make_connector(kind)
+    try:
+        blob = np.random.default_rng(0).bytes(2_000_000)
+        key = c.put(blob)
+        assert bytes(c.get(key)) == blob
+    finally:
+        c.close()
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_exists_evict(make_connector, kind):
+    c = make_connector(kind)
+    try:
+        key = c.put(b"data")
+        assert c.exists(key)
+        c.evict(key)
+        assert not c.exists(key)
+        assert c.get(key) is None
+        c.evict(key)  # idempotent
+    finally:
+        c.close()
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_missing_key(make_connector, kind):
+    c = make_connector(kind)
+    try:
+        assert c.get(Key.new()) is None
+        assert not c.exists(Key.new())
+    finally:
+        c.close()
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_batch_ops(make_connector, kind):
+    c = make_connector(kind)
+    try:
+        blobs = [bytes([i]) * (i * 100 + 1) for i in range(5)]
+        keys = c.put_batch(blobs)
+        assert len(keys) == 5
+        got = c.get_batch(keys)
+        assert [bytes(g) for g in got] == blobs
+    finally:
+        c.close()
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_multi_frame_payload(make_connector, kind):
+    """Connectors accept SerializedObject frame lists (writev-style)."""
+    from repro.core.serialize import serialize
+
+    c = make_connector(kind)
+    try:
+        obj = {"a": np.arange(10_000, dtype=np.float32), "b": "meta"}
+        s = serialize(obj)
+        key = c.put(s)
+        from repro.core.serialize import deserialize
+
+        out = deserialize(c.get(key))
+        np.testing.assert_array_equal(out["a"], obj["a"])
+        assert out["b"] == "meta"
+    finally:
+        c.close()
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_config_roundtrip(make_connector, kind):
+    """A connector config must re-open onto the same stored data (this is
+    the property that makes proxy factories wide-area references)."""
+    c = make_connector(kind)
+    try:
+        key = c.put(b"persistent")
+        c2 = connector_from_config(c.config())
+        assert bytes(c2.get(key)) == b"persistent"
+    finally:
+        c.close()
+
+
+@pytest.mark.parametrize("kind", ["memory", "file", "sharded", "kv", "shm"])
+def test_concurrent_put_get(make_connector, kind):
+    c = make_connector(kind)
+    errors = []
+
+    def work(i):
+        try:
+            data = bytes([i % 256]) * 10_000
+            key = c.put(data)
+            assert bytes(c.get(key)) == data
+        except Exception as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    try:
+        threads = [threading.Thread(target=work, args=(i,)) for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+    finally:
+        c.close()
+
+
+# -- connector-specific behaviors ----------------------------------------------
+
+
+def test_sharded_striping(tmp_path):
+    """Objects above stripe_size must decluster across shard dirs."""
+    c = ShardedConnector(str(tmp_path / "pool"), num_shards=4, stripe_size=1000)
+    try:
+        key = c.put(b"x" * 10_000)
+        shard_dirs = sorted((tmp_path / "pool").glob("shard-*"))
+        assert len(shard_dirs) == 4
+        # stripes present on more than one target
+        holding = [d for d in shard_dirs if any(d.iterdir())]
+        assert len(holding) > 1
+        assert bytes(c.get(key)) == b"x" * 10_000
+    finally:
+        c.close()
+
+
+def test_sharded_small_object_single_target(tmp_path):
+    c = ShardedConnector(str(tmp_path / "pool"), num_shards=4, stripe_size=1 << 20)
+    try:
+        key = c.put(b"small")
+        files = [f for f in (tmp_path / "pool").rglob("*") if f.is_file()]
+        data_files = [f for f in files if not f.name.endswith(".manifest")]
+        assert len(data_files) == 1  # one chunk, on one target
+        shard_dirs = {f.parent for f in files}
+        assert len(shard_dirs) == 1  # manifest co-located with the chunk
+        assert bytes(c.get(key)) == b"small"
+    finally:
+        c.close()
+
+
+def test_multi_routes_by_size(tmp_path):
+    mem = MemoryConnector(segment=f"multi-{tmp_path.name}")
+    mem.clear()
+    fc = FileConnector(str(tmp_path / "big"))
+    c = MultiConnector([(1000, mem), (None, fc)])
+    small = c.put(b"s" * 10)
+    big = c.put(b"b" * 5000)
+    assert small.tag == "0" and big.tag == "1"
+    assert len(mem._data) == 1  # small stayed in memory
+    assert bytes(c.get(small)) == b"s" * 10
+    assert bytes(c.get(big)) == b"b" * 5000
+    c.close()
+
+
+def test_file_connector_persists_across_instances(tmp_path):
+    c1 = FileConnector(str(tmp_path / "store"))
+    key = c1.put(b"durable")
+    c1.close()
+    c2 = FileConnector(str(tmp_path / "store"))
+    assert bytes(c2.get(key)) == b"durable"
+    c2.close()
+
+
+def test_kv_connector_stats(kv_server):
+    host, port = kv_server.address
+    c = KVConnector(host, port)
+    key = c.put(b"z" * 100)
+    c.get(key)
+    snap = c.stats.snapshot()
+    assert snap["bytes_put"] >= 100 and snap["bytes_got"] >= 100
+    c.close()
+
+
+def test_shm_cross_instance(tmp_path):
+    """Shared-memory segments are reachable from a second connector instance
+    (stand-in for a second process on the node)."""
+    c1 = SharedMemoryConnector()
+    key = c1.put(b"visible")
+    c2 = connector_from_config(c1.config())
+    assert bytes(c2.get(key)) == b"visible"
+    c1.close()

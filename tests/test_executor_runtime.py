@@ -1,0 +1,364 @@
+"""StoreExecutor + runtime (scheduler/worker/client) integration tests."""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AlwaysPolicy,
+    NeverPolicy,
+    SizePolicy,
+    StoreExecutor,
+    TypePolicy,
+    extract,
+    get_factory,
+    is_proxy,
+)
+from repro.runtime.client import Client, LocalCluster, ProxyClient
+
+
+# -- policies ------------------------------------------------------------------
+
+
+def test_size_policy():
+    pol = SizePolicy(1000)
+    assert pol(np.zeros(1000, np.uint8))
+    assert not pol(np.zeros(10, np.uint8))
+    assert not pol(3)  # scalars never proxy
+
+
+def test_type_policy():
+    pol = TypePolicy(np.ndarray)
+    assert pol(np.zeros(1))
+    assert not pol([1, 2])
+
+
+def test_combinators():
+    from repro.core import AllPolicy, AnyPolicy
+
+    big_array = AllPolicy(TypePolicy(np.ndarray), SizePolicy(100))
+    assert big_array(np.zeros(200, np.uint8))
+    assert not big_array(b"x" * 200)
+    either = AnyPolicy(TypePolicy(bytes), SizePolicy(100))
+    assert either(b"x")
+    assert either(np.zeros(200, np.uint8))
+    assert not either([1])
+
+
+# -- StoreExecutor over a stdlib pool --------------------------------------------
+
+
+def double(x):
+    return x * 2
+
+
+def make_big(n):
+    return np.ones(n, np.float64)
+
+
+def test_store_executor_proxies_large_args(store):
+    with ThreadPoolExecutor(2) as pool:
+        ex = StoreExecutor(pool, store, should_proxy=SizePolicy(1000))
+        arr = np.arange(10_000, dtype=np.float64)
+        fut = ex.submit(double, arr)
+        out = fut.result()
+        np.testing.assert_array_equal(extract(out), arr * 2)
+
+
+def test_store_executor_small_args_passthrough(store):
+    seen = {}
+
+    def probe(x):
+        seen["proxied"] = is_proxy(x)
+        return x
+
+    with ThreadPoolExecutor(1) as pool:
+        ex = StoreExecutor(pool, store, should_proxy=SizePolicy(10**9))
+        assert ex.submit(probe, [1, 2]).result() == [1, 2]
+        assert seen["proxied"] is False
+
+
+def test_store_executor_proxies_results(store):
+    with ThreadPoolExecutor(1) as pool:
+        ex = StoreExecutor(pool, store, should_proxy=SizePolicy(1000))
+        out = ex.submit(make_big, 10_000).result()
+        assert is_proxy(out)
+        assert float(np.asarray(out).sum()) == 10_000.0
+
+
+def test_store_executor_never_policy(store):
+    with ThreadPoolExecutor(1) as pool:
+        ex = StoreExecutor(pool, store, should_proxy=NeverPolicy())
+        out = ex.submit(make_big, 10_000).result()
+        assert not is_proxy(out)
+
+
+def test_store_executor_one_shot_arg_eviction(store):
+    with ThreadPoolExecutor(1) as pool:
+        ex = StoreExecutor(pool, store, should_proxy=SizePolicy(100),
+                           proxy_results=False)
+        arr = np.ones(1000)
+        fut = ex.submit(lambda a: float(np.asarray(a).sum()), arr)
+        assert fut.result() == 1000.0
+        # the argument proxy was one-shot: nothing left in the connector
+        time.sleep(0.05)
+        assert len(store.connector._data) == 0
+
+
+def test_store_executor_map(store):
+    with ThreadPoolExecutor(2) as pool:
+        ex = StoreExecutor(pool, store)
+        assert list(ex.map(double, [1, 2, 3])) == [2, 4, 6]
+
+
+def test_store_executor_ownership_mode(store):
+    import gc
+
+    from repro.core import OwnedProxy
+
+    with ThreadPoolExecutor(1) as pool:
+        ex = StoreExecutor(pool, store, should_proxy=SizePolicy(100),
+                           ownership=True)
+        out = ex.submit(make_big, 1000).result()
+        assert type(out) is OwnedProxy
+        key = get_factory(out).key
+        assert store.exists(key)
+        del out
+        gc.collect()
+        assert not store.exists(key)  # result memory auto-managed
+
+
+# -- runtime: scheduler + workers --------------------------------------------------
+
+
+def test_submit_gather(cluster):
+    with cluster.get_client() as client:
+        futs = client.map(double, list(range(10)))
+        assert client.gather(futs) == [x * 2 for x in range(10)]
+
+
+def test_future_dependencies(cluster):
+    with cluster.get_client() as client:
+        a = client.submit(np.arange, 10)
+        b = client.submit(np.sum, a)
+        c = client.submit(double, b)
+        assert float(c.result()) == 90.0
+
+
+def test_nested_future_in_containers(cluster):
+    with cluster.get_client() as client:
+        a = client.submit(double, 10)
+        b = client.submit(sum, [a, a])
+        assert b.result() == 40
+
+
+def test_pure_function_caching(cluster):
+    calls = []
+
+    def tracked(x):
+        calls.append(x)
+        return x + 1
+
+    with cluster.get_client() as client:
+        f1 = client.submit(tracked, 5)
+        assert f1.result() == 6
+        f2 = client.submit(tracked, 5)  # same key -> cache hit
+        assert f2.result() == 6
+        assert f1.key == f2.key
+        assert len(calls) == 1
+
+
+def test_impure_reruns(cluster):
+    calls = []
+
+    def tracked(x):
+        calls.append(x)
+        return x
+
+    with cluster.get_client() as client:
+        client.submit(tracked, 1, pure=False).result()
+        client.submit(tracked, 1, pure=False).result()
+        assert len(calls) == 2
+
+
+def test_large_result_gather(cluster):
+    with cluster.get_client() as client:
+        fut = client.submit(make_big, 500_000)  # > inline threshold
+        out = fut.result()
+        assert out.shape == (500_000,)
+
+
+def test_task_error_propagates(cluster):
+    def boom():
+        raise ValueError("intentional")
+
+    with cluster.get_client() as client:
+        fut = client.submit(boom, retries=0)
+        with pytest.raises(RuntimeError, match="intentional"):
+            fut.result(timeout=30)
+
+
+def test_retries_then_success(cluster):
+    # a task that fails twice then succeeds, via a shared mutable cell
+    state = {"n": 0}
+
+    def flaky():
+        state["n"] += 1
+        if state["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    with cluster.get_client() as client:
+        assert client.submit(flaky, retries=3, pure=False).result(timeout=30) == "ok"
+
+
+def test_release_frees_scheduler_state(cluster):
+    with cluster.get_client() as client:
+        fut = client.submit(double, 21)
+        assert fut.result() == 42
+        key = fut.key
+        client.release([fut])
+        deadline = time.monotonic() + 5
+        while key in cluster.scheduler.tasks and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert key not in cluster.scheduler.tasks
+
+
+# -- fault tolerance / elasticity ------------------------------------------------
+
+
+def test_worker_loss_reschedules():
+    with LocalCluster(n_workers=2, heartbeat_timeout=1.0) as cluster:
+        with cluster.get_client() as client:
+            victim = next(iter(cluster.workers))
+            cluster.kill_worker(victim)  # heartbeats stop, no deregister
+            futs = client.map(double, list(range(20)))
+            assert client.gather(futs) == [x * 2 for x in range(20)]
+            # scheduler eventually notices the dead worker
+            deadline = time.monotonic() + 5
+            while victim in cluster.scheduler.workers and time.monotonic() < deadline:
+                time.sleep(0.05)
+            assert victim not in cluster.scheduler.workers
+
+
+def test_running_task_survives_worker_death():
+    """A task killed mid-flight must re-run elsewhere (lineage recovery)."""
+    with LocalCluster(n_workers=2, heartbeat_timeout=0.8) as cluster:
+        with cluster.get_client() as client:
+            def slow(x):
+                time.sleep(0.4)
+                return x * 2
+
+            futs = client.map(slow, list(range(6)), pure=False)
+            time.sleep(0.1)  # let tasks start
+            cluster.kill_worker(next(iter(cluster.workers)))
+            assert sorted(client.gather(futs)) == [x * 2 for x in range(6)]
+
+
+def test_elastic_scale_up():
+    with LocalCluster(n_workers=1) as cluster:
+        with cluster.get_client() as client:
+            futs = client.map(double, list(range(8)))
+            cluster.add_worker()
+            cluster.add_worker()
+            assert client.gather(futs) == [x * 2 for x in range(8)]
+            assert len(cluster.scheduler.workers) >= 3
+
+
+def test_elastic_scale_down():
+    with LocalCluster(n_workers=3) as cluster:
+        with cluster.get_client() as client:
+            wid = next(iter(cluster.workers))
+            cluster.remove_worker(wid)  # graceful deregister
+            futs = client.map(double, list(range(8)))
+            assert client.gather(futs) == [x * 2 for x in range(8)]
+
+
+def test_straggler_speculation():
+    """A pathologically slow worker's task is speculatively duplicated."""
+    with LocalCluster(
+        n_workers=2, speculation_factor=2.0, speculation_min=0.3
+    ) as cluster:
+        with cluster.get_client() as client:
+            # seed the duration estimate with fast tasks
+            client.gather(client.map(double, list(range(6))))
+
+            slow_once = {"done": False}
+
+            def maybe_slow(x):
+                # first execution is slow (straggler); the speculative copy
+                # on the other worker returns instantly
+                if not slow_once["done"]:
+                    slow_once["done"] = True
+                    time.sleep(3.0)
+                return x
+
+            t0 = time.monotonic()
+            out = client.submit(maybe_slow, 7, pure=False).result(timeout=30)
+            elapsed = time.monotonic() - t0
+            assert out == 7
+            assert elapsed < 2.5  # won by the speculative duplicate
+
+
+# -- pass-by-proxy integration (the paper's Fig 1 mechanism) ------------------------
+
+
+def test_proxy_client_results_match_baseline(store):
+    with LocalCluster(n_workers=2) as cluster:
+        with ProxyClient(cluster, ps_store=store, ps_threshold=10_000) as client:
+            a = client.submit(make_big, 50_000)
+            out = a.result()
+            assert is_proxy(out)
+            assert float(np.asarray(out).sum()) == 50_000.0
+
+
+def test_proxy_client_dependency_chain(store):
+    with LocalCluster(n_workers=2) as cluster:
+        with ProxyClient(cluster, ps_store=store, ps_threshold=1000) as client:
+            a = client.submit(make_big, 30_000)
+            b = client.submit(lambda x: np.asarray(x) * 2, a, pure=False)
+            out = b.result()
+            assert float(np.asarray(out)[0]) == 2.0
+
+
+def test_proxy_client_reduces_scheduler_bytes(store):
+    """The paper's central claim, as an invariant: for large payloads the
+    proxy path moves far fewer bytes through the centralized scheduler."""
+    payload = np.random.default_rng(0).bytes(1_000_000)
+
+    def identity(x):
+        return b"ok"
+
+    with LocalCluster(n_workers=1) as cluster:
+        with cluster.get_client() as base:
+            before = cluster.scheduler.bytes_through()["in_bytes"]
+            base.submit(identity, payload, pure=False).result()
+            baseline_bytes = (
+                cluster.scheduler.bytes_through()["in_bytes"] - before
+            )
+
+        with ProxyClient(cluster, ps_store=store, ps_threshold=10_000) as pc:
+            before = cluster.scheduler.bytes_through()["in_bytes"]
+            pc.submit(identity, payload, pure=False).result()
+            proxy_bytes = cluster.scheduler.bytes_through()["in_bytes"] - before
+
+    assert baseline_bytes > 1_000_000
+    assert proxy_bytes < baseline_bytes / 20
+
+
+def test_proxy_client_worker_resolves_factory(store):
+    """Worker-side code sees the target transparently (no code changes)."""
+
+    def consume(x):
+        # task code written for ndarray works with the proxy unchanged
+        assert x.shape == (20_000,)
+        return float(np.asarray(x).mean())
+
+    arr = np.full(20_000, 3.0)
+    with LocalCluster(n_workers=2) as cluster:
+        with ProxyClient(cluster, ps_store=store, ps_threshold=1000) as client:
+            assert client.submit(consume, arr, pure=False).result() == 3.0

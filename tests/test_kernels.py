@@ -1,0 +1,234 @@
+"""Pallas kernel tests: shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention_gqa
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.fingerprint.ops import fingerprint, fingerprint_token
+from repro.kernels.fingerprint.ref import fingerprint_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+rng = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-4, atol=2e-4
+    )
+
+
+# -- flash attention ------------------------------------------------------------
+
+FA_SHAPES = [
+    # (B, H, KV, Sq, Skv, hd, causal)
+    (1, 4, 4, 64, 64, 32, True),       # MHA
+    (1, 4, 2, 64, 64, 32, True),       # GQA 2:1
+    (2, 8, 1, 96, 96, 64, True),       # MQA
+    (1, 4, 4, 33, 33, 16, True),       # ragged seq (padding path)
+    (1, 2, 2, 128, 256, 64, False),    # cross-ish, non-causal
+    (1, 2, 1, 8, 512, 128, False),     # short q, long kv
+    (1, 16, 4, 160, 160, 128, True),   # multi-block q and kv
+]
+
+
+@pytest.mark.parametrize("shape", FA_SHAPES, ids=str)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(shape, dtype):
+    B, H, KV, Sq, Skv, hd, causal = shape
+    q = jnp.asarray(rng.normal(size=(B, H, Sq, hd))).astype(dtype)
+    k = jnp.asarray(rng.normal(size=(B, KV, Skv, hd))).astype(dtype)
+    v = jnp.asarray(rng.normal(size=(B, KV, Skv, hd))).astype(dtype)
+    out = flash_attention_gqa(q, k, v, causal=causal, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal)
+    assert out.shape == ref.shape and out.dtype == ref.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+def test_flash_attention_block_size_invariance():
+    q = jnp.asarray(rng.normal(size=(1, 4, 200, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 2, 200, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, 200, 64)).astype(np.float32))
+    outs = [
+        flash_attention_gqa(q, k, v, block_q=bq, block_k=bk)
+        for bq, bk in [(32, 32), (64, 128), (128, 64)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(
+            np.asarray(outs[0]), np.asarray(o), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_flash_attention_custom_scale():
+    q = jnp.asarray(rng.normal(size=(1, 2, 64, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 2, 64, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, 64, 32)).astype(np.float32))
+    out = flash_attention_gqa(q, k, v, causal=True, scale=0.5)
+    ref = attention_ref(q, k, v, causal=True, scale=0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_in_model_forward():
+    """cfg.attention_impl='pallas' must agree with the chunked reference."""
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as tx
+
+    cfg = get_smoke_config("qwen2.5-3b").replace(sliding_window=0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 64)).astype(np.int32))
+    params = tx.init_params(cfg, jax.random.PRNGKey(0))
+    ref_out, _, _ = tx.forward(cfg.replace(attention_impl="reference"), params, toks)
+    pls_out, _, _ = tx.forward(cfg.replace(attention_impl="pallas"), params, toks)
+    np.testing.assert_allclose(
+        np.asarray(ref_out), np.asarray(pls_out), rtol=3e-3, atol=3e-3
+    )
+
+
+# -- SSD scan ----------------------------------------------------------------------
+
+SSD_SHAPES = [
+    # (B, S, H, P, N, chunk)
+    (1, 64, 2, 16, 8, 16),
+    (2, 100, 3, 32, 16, 32),      # ragged (padding path)
+    (1, 256, 1, 64, 128, 128),    # mamba2-130m geometry
+    (1, 33, 2, 16, 16, 64),       # S < chunk
+    (2, 128, 4, 64, 16, 32),      # hymba geometry
+]
+
+
+@pytest.mark.parametrize("shape", SSD_SHAPES, ids=str)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_sequential_ref(shape, dtype):
+    B, S, H, P, N, chunk = shape
+    x = (jnp.asarray(rng.normal(size=(B, S, H, P))) * 0.5).astype(dtype)
+    a = (-jnp.abs(jnp.asarray(rng.normal(size=(B, S, H)))) * 0.3).astype(dtype)
+    b = (jnp.asarray(rng.normal(size=(B, S, H, N))) * 0.5).astype(dtype)
+    c = (jnp.asarray(rng.normal(size=(B, S, H, N))) * 0.5).astype(dtype)
+    s0 = (jnp.asarray(rng.normal(size=(B, H, P, N))) * 0.2).astype(jnp.float32)
+
+    y, sf = ssd_scan(x, a, b, c, s0, chunk=chunk)
+
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    af = a.transpose(0, 2, 1).reshape(B * H, S)
+    bf = b.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    cf = c.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    yr, sr = ssd_scan_ref(xf, af, bf, cf, s0.reshape(B * H, P, N))
+    yr = yr.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    sr = sr.reshape(B, H, P, N)
+
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=5e-4, atol=5e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yr, np.float32), **tol
+    )
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sr), **tol)
+
+
+def test_ssd_scan_in_model_forward():
+    """mamba2 with attention_impl='pallas' routes SSD through the kernel."""
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as tx
+
+    cfg = get_smoke_config("mamba2-130m")
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 48)).astype(np.int32))
+    params = tx.init_params(cfg, jax.random.PRNGKey(1))
+    ref_out, _, _ = tx.forward(cfg.replace(attention_impl="reference"), params, toks)
+    pls_out, _, _ = tx.forward(cfg.replace(attention_impl="pallas"), params, toks)
+    np.testing.assert_allclose(
+        np.asarray(ref_out), np.asarray(pls_out), rtol=3e-3, atol=3e-3
+    )
+
+
+def test_ssd_scan_zero_initial_state_default():
+    B, S, H, P, N = 1, 32, 2, 8, 8
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)).astype(np.float32))
+    a = -jnp.abs(jnp.asarray(rng.normal(size=(B, S, H)).astype(np.float32)))
+    b = jnp.asarray(rng.normal(size=(B, S, H, N)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(B, S, H, N)).astype(np.float32))
+    y1, _ = ssd_scan(x, a, b, c, chunk=16)
+    y2, _ = ssd_scan(x, a, b, c, jnp.zeros((B, H, P, N)), chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)
+
+
+def test_ssd_scan_chunk_invariance():
+    B, S, H, P, N = 1, 96, 2, 16, 16
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)).astype(np.float32)) * 0.3
+    a = -jnp.abs(jnp.asarray(rng.normal(size=(B, S, H)).astype(np.float32))) * 0.2
+    b = jnp.asarray(rng.normal(size=(B, S, H, N)).astype(np.float32)) * 0.3
+    c = jnp.asarray(rng.normal(size=(B, S, H, N)).astype(np.float32)) * 0.3
+    ys = [np.asarray(ssd_scan(x, a, b, c, chunk=q)[0]) for q in (8, 32, 96)]
+    for y in ys[1:]:
+        np.testing.assert_allclose(ys[0], y, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_scan_state_handoff_equals_contiguous():
+    """Scanning [first half] then [second half from final state] == full scan
+    -- the exact property prefill->decode relies on."""
+    B, S, H, P, N = 1, 64, 2, 16, 8
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)).astype(np.float32)) * 0.4
+    a = -jnp.abs(jnp.asarray(rng.normal(size=(B, S, H)).astype(np.float32))) * 0.2
+    b = jnp.asarray(rng.normal(size=(B, S, H, N)).astype(np.float32)) * 0.4
+    c = jnp.asarray(rng.normal(size=(B, S, H, N)).astype(np.float32)) * 0.4
+    y_full, s_full = ssd_scan(x, a, b, c, chunk=16)
+    half = S // 2
+    y1, s1 = ssd_scan(x[:, :half], a[:, :half], b[:, :half], c[:, :half], chunk=16)
+    y2, s2 = ssd_scan(
+        x[:, half:], a[:, half:], b[:, half:], c[:, half:], s1, chunk=16
+    )
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full),
+        rtol=1e-4, atol=1e-4,
+    )
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), rtol=1e-4,
+                               atol=1e-4)
+
+
+# -- fingerprint -------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 64, 4096, 4097, 100_000])
+def test_fingerprint_matches_ref(n):
+    data = jnp.asarray(rng.integers(0, 256, n).astype(np.uint8))
+    np.testing.assert_array_equal(
+        np.asarray(fingerprint(data)), np.asarray(fingerprint_ref(data))
+    )
+
+
+@pytest.mark.parametrize(
+    "dtype", [np.float32, np.float64, np.int32, np.uint8, np.float16]
+)
+def test_fingerprint_dtypes(dtype):
+    a = (rng.normal(size=(1000,)) * 100).astype(dtype)
+    t1 = fingerprint_token(a)
+    t2 = fingerprint_token(a.copy())
+    assert t1 == t2
+    a2 = a.copy()
+    a2[123] += 1
+    assert fingerprint_token(a2) != t1
+
+
+def test_fingerprint_bit_flip_sensitivity():
+    data = rng.integers(0, 256, 50_000).astype(np.uint8)
+    base = fingerprint_token(data)
+    for pos in [0, 25_000, 49_999]:
+        d = data.copy()
+        d[pos] ^= 0x80
+        assert fingerprint_token(d) != base
+
+
+def test_fingerprint_dispersion():
+    """Tokens over similar inputs should not collide (weak avalanche check)."""
+    tokens = set()
+    base = np.zeros(8192, np.uint8)
+    for i in range(64):
+        d = base.copy()
+        d[i] = 1
+        tokens.add(fingerprint_token(d))
+    assert len(tokens) == 64

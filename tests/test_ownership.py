@@ -1,0 +1,128 @@
+"""Ownership-model tests (Rust-style borrow/move semantics, paper ref [8])."""
+
+from __future__ import annotations
+
+import gc
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    OwnedProxy,
+    OwnershipError,
+    borrow,
+    get_factory,
+    is_proxy,
+    mut_borrow,
+    release,
+    transfer,
+)
+from repro.core.ownership import disown
+
+
+def test_owned_proxy_resolves(store):
+    p = store.owned_proxy(np.arange(4))
+    np.testing.assert_array_equal(np.asarray(p), np.arange(4))
+
+
+def test_del_evicts(store):
+    p = store.owned_proxy(np.arange(4))
+    key = get_factory(p).key
+    assert store.exists(key)
+    del p
+    gc.collect()
+    assert not store.exists(key)
+
+
+def test_context_manager_evicts(store):
+    with store.owned_proxy(np.arange(4)) as p:
+        key = get_factory(p).key
+        assert store.exists(key)
+    assert not store.exists(key)
+
+
+def test_release_now(store):
+    p = store.owned_proxy([1])
+    key = get_factory(p).key
+    release(p)
+    assert not store.exists(key)
+    with pytest.raises(OwnershipError):
+        release(p)  # moved-from
+
+
+def test_borrow_many_immutable(store):
+    p = store.owned_proxy([1, 2])
+    b1, b2 = borrow(p), borrow(p)
+    assert b1[0] == 1 and b2[1] == 2
+    with pytest.raises(OwnershipError):
+        mut_borrow(p)  # immutable borrows active
+    del b1, b2
+    gc.collect()
+    m = mut_borrow(p)  # now fine
+    assert m[0] == 1
+
+
+def test_mut_borrow_exclusive(store):
+    p = store.owned_proxy([1])
+    m = mut_borrow(p)
+    with pytest.raises(OwnershipError):
+        mut_borrow(p)
+    with pytest.raises(OwnershipError):
+        borrow(p)
+    del m
+    gc.collect()
+    assert borrow(p) is not None
+
+
+def test_transfer_moves_ownership(store):
+    p = store.owned_proxy([5])
+    key = get_factory(p).key
+    q = transfer(p)
+    with pytest.raises(OwnershipError):
+        borrow(p)  # use-after-move
+    # old owner dying must NOT evict (ownership moved)
+    del p
+    gc.collect()
+    assert store.exists(key)
+    assert q[0] == 5
+    del q
+    gc.collect()
+    assert not store.exists(key)
+
+
+def test_transfer_blocked_while_borrowed(store):
+    p = store.owned_proxy([1])
+    b = borrow(p)
+    with pytest.raises(OwnershipError):
+        transfer(p)
+    del b
+
+
+def test_pickled_owned_is_borrowed(store):
+    """Serialization must not duplicate ownership (double-evict hazard)."""
+    p = store.owned_proxy(np.arange(3))
+    key = get_factory(p).key
+    q = pickle.loads(pickle.dumps(p))
+    assert is_proxy(q) and type(q) is not OwnedProxy
+    del q
+    gc.collect()
+    assert store.exists(key)  # borrowed copy dying does not evict
+    del p
+    gc.collect()
+    assert not store.exists(key)
+
+
+def test_disown_leaks_to_store(store):
+    p = store.owned_proxy([9])
+    key = get_factory(p).key
+    q = disown(p)
+    del p, q
+    gc.collect()
+    assert store.exists(key)  # intentionally leaked
+
+
+def test_borrow_non_owned_raises(store):
+    plain = store.proxy([1])
+    with pytest.raises(OwnershipError):
+        borrow(plain)

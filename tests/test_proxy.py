@@ -1,0 +1,277 @@
+"""Unit tests for the transparent object proxy (paper §2/§3)."""
+
+from __future__ import annotations
+
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Proxy,
+    ProxyResolveError,
+    SimpleFactory,
+    LambdaFactory,
+    TargetMetadata,
+    extract,
+    get_factory,
+    get_metadata,
+    is_proxy,
+    is_resolved,
+    proxy_token,
+    resolve,
+)
+
+
+def make(obj, **kw):
+    return Proxy(SimpleFactory(obj))
+
+
+# -- transparency: the proxy forwards everything ------------------------------
+
+
+def test_arithmetic_forwarding():
+    p = make(10)
+    assert p + 5 == 15
+    assert 5 + p == 15
+    assert p * 2 == 20
+    assert 2**p == 1024
+    assert p - 3 == 7
+    assert 21 // p == 2
+    assert divmod(p, 3) == (3, 1)
+    assert -p == -10
+    assert abs(make(-3)) == 3
+
+
+def test_proxy_plus_proxy():
+    assert make(2) + make(3) == 5
+
+
+def test_comparison_forwarding():
+    p = make(10)
+    assert p == 10 and p != 11
+    assert p < 11 and p <= 10 and p > 9 and p >= 10
+
+
+def test_container_forwarding():
+    p = make([1, 2, 3])
+    assert len(p) == 3
+    assert p[0] == 1
+    assert list(p) == [1, 2, 3]
+    assert 2 in p
+    assert list(reversed(p)) == [3, 2, 1]
+    p[0] = 99
+    assert p[0] == 99
+    del p[0]
+    assert len(p) == 2
+
+
+def test_dict_forwarding():
+    p = make({"a": 1})
+    assert p["a"] == 1
+    assert "a" in p
+    assert p.keys() == {"a": 1}.keys()
+
+
+def test_string_behavior():
+    p = make("hello")
+    assert str(p) == "hello"
+    assert p.upper() == "HELLO"
+    assert format(p, ">7") == "  hello"
+    assert p + " world" == "hello world"
+
+
+def test_callable_forwarding():
+    p = make(lambda x: x * 2)
+    assert p(21) == 42
+
+
+def test_attribute_get_set():
+    class Obj:
+        x = 1
+
+    o = Obj()
+    p = make(o)
+    assert p.x == 1
+    p.y = 5
+    assert o.y == 5
+    del p.y
+    assert not hasattr(o, "y")
+
+
+def test_bool_bytes():
+    assert bool(make([1]))
+    assert not bool(make([]))
+    assert bytes(make(b"ab")) == b"ab"
+
+
+def test_numpy_transparency():
+    a = np.arange(12.0).reshape(3, 4)
+    p = make(a)
+    np.testing.assert_array_equal(np.asarray(p), a)
+    np.testing.assert_array_equal(p + 1, a + 1)
+    np.testing.assert_array_equal(p @ a.T, a @ a.T)
+    assert (p.sum() == a.sum()).all()
+
+
+def test_jax_array_protocol():
+    import jax
+    import jax.numpy as jnp
+
+    a = np.arange(8.0, dtype=np.float32)
+    p = make(a)
+
+    @jax.jit
+    def f(x):
+        return (x * 2).sum()
+
+    # explicit conversion resolves the proxy at the XLA boundary
+    assert float(f(jnp.array(p))) == float(a.sum() * 2)
+    assert float(f(np.asarray(p))) == float(a.sum() * 2)
+
+
+# -- laziness + metadata caching (paper §3 "Compatibility") --------------------
+
+
+def test_lazy_until_used():
+    calls = []
+
+    def factory():
+        calls.append(1)
+        return 42
+
+    p = Proxy(LambdaFactory(factory))
+    assert not is_resolved(p)
+    assert calls == []
+    assert p + 0 == 42
+    assert is_resolved(p)
+    assert calls == [1]
+    assert p + 0 == 42
+    assert calls == [1]  # resolved once, cached
+
+
+def test_metadata_never_resolves():
+    """Scheduler-style introspection must not fire the factory."""
+    md = TargetMetadata.from_target(np.zeros((3, 4), np.float32))
+
+    def boom():
+        raise AssertionError("resolved!")
+
+    p = Proxy(LambdaFactory(boom, md=md))
+    assert p.__class__ is np.ndarray
+    assert isinstance(p, np.ndarray)  # isinstance consults __class__
+    assert p.__module__ == "numpy"
+    assert p.shape == (3, 4)
+    assert p.dtype == np.float32
+    assert p.nbytes == 48
+    assert len(p) == 3
+    assert not is_resolved(p)
+
+
+def test_hash_cached_for_hashables():
+    md = TargetMetadata.from_target("hello")
+
+    def boom():
+        raise AssertionError("resolved!")
+
+    p = Proxy(LambdaFactory(boom, md=md))
+    assert hash(p) == hash("hello")
+    assert not is_resolved(p)
+
+
+def test_hash_unhashable_raises_without_resolving():
+    md = TargetMetadata.from_target([1, 2])
+    p = Proxy(LambdaFactory(lambda: [1, 2], md=md))
+    with pytest.raises(TypeError):
+        hash(p)
+    assert not is_resolved(p)
+
+
+def test_repr_unresolved_does_not_resolve():
+    p = Proxy(SimpleFactory([1, 2]))
+    r = repr(p)
+    assert "unresolved" in r
+    assert not is_resolved(p)
+    _ = p[0]
+    assert "unresolved" not in repr(p)
+
+
+def test_class_cached_for_jax_arrays():
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.ones((2,))
+    p = make(x)
+    # private jaxlib ArrayImpl is advertised as the public ABC
+    assert p.__class__ is jax.Array
+    assert isinstance(p, jax.Array)
+
+
+# -- serialization of the proxy itself ----------------------------------------
+
+
+def test_pickle_roundtrip_is_cheap_and_lazy(store):
+    big = np.zeros(1_000_000)
+    p = store.proxy(big)  # store-backed: pickles as (config, key) only
+    blob = pickle.dumps(p)
+    assert len(blob) < len(pickle.dumps(big)) // 100  # factory only... tiny
+    q = pickle.loads(blob)
+    assert is_proxy(q)
+    assert not is_resolved(q)
+    np.testing.assert_array_equal(np.asarray(q), big)
+
+
+def test_pickle_preserves_metadata_laziness(store):
+    p = store.proxy(np.zeros((5,)))
+    q = pickle.loads(pickle.dumps(p))
+    # metadata travels with the factory; shape introspection stays lazy
+    assert q.shape == (5,)
+    assert not is_resolved(q)
+
+
+# -- helpers ------------------------------------------------------------------
+
+
+def test_is_proxy_and_extract():
+    p = make(7)
+    assert is_proxy(p)
+    assert not is_proxy(7)
+    assert extract(p) == 7
+    assert extract(7) == 7
+
+
+def test_resolve_eager():
+    p = make("x")
+    assert resolve(p) == "x"
+    assert is_resolved(p)
+
+
+def test_get_factory_and_metadata():
+    f = SimpleFactory(3)
+    p = Proxy(f)
+    assert get_factory(p) is f
+    assert get_metadata(p).cls is int
+
+
+def test_proxy_token_from_metadata():
+    md = TargetMetadata.from_target(1, token="tok-123")
+    p = Proxy(LambdaFactory(lambda: 1, md=md))
+    assert proxy_token(p) == "tok-123"
+    assert proxy_token(42) is None
+
+
+def test_store_factory_missing_object_raises(store):
+    p = store.proxy(np.arange(4))
+    key = get_factory(p).key
+    store.evict(key)
+    # also purge the store-side LRU so resolution truly misses
+    store._cache.pop(key.object_id)
+    with pytest.raises(ProxyResolveError):
+        resolve(p)
+
+
+def test_isinstance_type_check_no_resolution(store):
+    """The paper's motivating bug: Dask type-dispatch resolved proxies."""
+    p = store.proxy(np.arange(4))
+    assert isinstance(p, np.ndarray)
+    assert not is_resolved(p)

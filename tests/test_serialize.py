@@ -1,0 +1,272 @@
+"""Serializer tests: correctness, zero-copy, fast paths, property sweep."""
+
+from __future__ import annotations
+
+import pickle
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.serialize import (
+    SerializedObject,
+    deserialize,
+    estimate_size,
+    pickle_serializer,
+    serialize,
+)
+
+
+def roundtrip(obj):
+    return deserialize(serialize(obj).to_bytes())
+
+
+# -- basic types ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "obj",
+    [
+        42,
+        3.14,
+        "hello",
+        None,
+        True,
+        [1, 2, 3],
+        {"a": 1, "b": [2, 3]},
+        (1, "two", 3.0),
+        {"nested": {"deep": [1, {"x": (2,)}]}},
+        set([1, 2]),
+    ],
+)
+def test_python_roundtrip(obj):
+    assert roundtrip(obj) == obj
+
+
+def test_bytes_roundtrip():
+    assert roundtrip(b"abc\x00def") == b"abc\x00def"
+    assert roundtrip(bytearray(b"xy")) == b"xy"
+
+
+@pytest.mark.parametrize(
+    "dtype",
+    [np.float64, np.float32, np.float16, np.int64, np.int32, np.int8,
+     np.uint8, np.bool_, np.complex64],
+)
+def test_ndarray_dtypes(dtype):
+    a = np.arange(64).astype(dtype)
+    b = roundtrip(a)
+    assert b.dtype == a.dtype
+    np.testing.assert_array_equal(a, b)
+
+
+def test_ndarray_shapes():
+    for shape in [(), (1,), (3, 4), (2, 3, 4, 5), (0,), (5, 0, 2)]:
+        a = np.random.default_rng(0).normal(size=shape).astype(np.float32)
+        b = roundtrip(a)
+        assert b.shape == a.shape
+        np.testing.assert_array_equal(a, b)
+
+
+def test_bfloat16_jax_array():
+    import jax.numpy as jnp
+
+    a = jnp.arange(300, dtype=jnp.bfloat16) / 7
+    b = roundtrip(a)
+    np.testing.assert_array_equal(np.asarray(a).view(np.uint16),
+                                  np.asarray(b).view(np.uint16))
+
+
+def test_noncontiguous_array():
+    a = np.arange(64.0).reshape(8, 8)[::2, ::2]
+    assert not a.flags.c_contiguous
+    np.testing.assert_array_equal(roundtrip(a), a)
+
+
+def test_fortran_order_array():
+    a = np.asfortranarray(np.arange(900.0).reshape(30, 30))
+    np.testing.assert_array_equal(roundtrip(a), a)
+
+
+# -- pytrees --------------------------------------------------------------------
+
+
+def test_pytree_of_arrays():
+    tree = {
+        "params": {"w": np.ones((128, 16), np.float32), "b": np.zeros(16)},
+        "step": 3,
+        "name": "model",
+    }
+    out = roundtrip(tree)
+    np.testing.assert_array_equal(out["params"]["w"], tree["params"]["w"])
+    np.testing.assert_array_equal(out["params"]["b"], tree["params"]["b"])
+    assert out["step"] == 3 and out["name"] == "model"
+
+
+def test_jax_pytree_roundtrip():
+    import jax
+    import jax.numpy as jnp
+
+    tree = {"a": jnp.ones((17, 3)), "b": [jnp.zeros(5, jnp.int32), 7]}
+    out = roundtrip(tree)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    np.testing.assert_array_equal(np.asarray(tree["a"]), out["a"])
+
+
+# -- proxies serialize as references, never as bytes -----------------------------
+
+
+def test_proxy_stays_proxy(store):
+    from repro.core import is_proxy, is_resolved
+
+    big = np.zeros(500_000)
+    p = store.proxy(big)
+    blob = serialize(p).to_bytes()
+    assert len(blob) < 4096  # factory only
+    q = deserialize(blob)
+    assert is_proxy(q) and not is_resolved(q)
+    np.testing.assert_array_equal(np.asarray(q), big)
+
+
+def test_container_of_proxies(store):
+    from repro.core import is_proxy
+
+    arr = np.ones(100_000)
+    msg = {"data": store.proxy(arr), "tag": 1}
+    blob = serialize(msg).to_bytes()
+    assert len(blob) < 8192
+    out = deserialize(blob)
+    assert is_proxy(out["data"])
+
+
+# -- zero-copy claims -------------------------------------------------------------
+
+
+def test_serialize_is_zero_copy_for_big_arrays():
+    a = np.arange(1 << 16, dtype=np.float64)
+    s = serialize(a)
+    # the frame must be a view over a's memory, not a copy
+    assert len(s.buffers) == 1
+    assert np.shares_memory(np.frombuffer(s.buffers[0], np.float64), a)
+
+
+def test_deserialize_returns_views():
+    a = np.arange(1 << 14, dtype=np.float32)
+    blob = serialize(a).to_bytes()
+    out = deserialize(blob)
+    assert not out.flags.writeable  # view over the immutable blob
+    np.testing.assert_array_equal(out, a)
+
+
+def test_frames_vs_to_bytes_consistency():
+    tree = {"w": np.ones(4096, np.float32), "k": "v"}
+    s = serialize(tree)
+    joined = b"".join(bytes(f) for f in s.frames())
+    assert joined == s.to_bytes()
+    assert s.nbytes == len(joined)
+
+
+def test_small_arrays_inline_in_header():
+    s = serialize(np.arange(4, dtype=np.int8))  # < 512B -> header-inline
+    assert len(s.buffers) == 0
+
+
+# -- sizes / fallback ---------------------------------------------------------------
+
+
+def test_magic_check():
+    with pytest.raises(ValueError):
+        deserialize(b"NOPE" + b"\x00" * 16)
+
+
+def test_custom_object_falls_back_to_pickle():
+    class Thing:
+        def __init__(self, x):
+            self.x = x
+
+        def __eq__(self, other):
+            return self.x == other.x
+
+    # class defined in a test function is picklable? no -- use dict instead
+    obj = {"fn": abs, "data": b"\x01" * 2000}
+    out = roundtrip(obj)
+    assert out["fn"] is abs and out["data"] == obj["data"]
+
+
+def test_estimate_size():
+    assert estimate_size(np.zeros(1000, np.float64)) == 8000
+    assert estimate_size(b"x" * 100) == 100
+    assert estimate_size("y" * 50) == 50
+    assert estimate_size([np.zeros(100, np.uint8)]) >= 100
+    d = {"k": np.zeros(256, np.uint8)}
+    assert estimate_size(d) >= 256
+    assert estimate_size(7) > 0
+
+
+def test_pickle_serializer_baseline():
+    a = np.arange(1000.0)
+    s = pickle_serializer(a)
+    assert isinstance(s, SerializedObject)
+    out = pickle.loads(bytes(s.buffers[0]))
+    np.testing.assert_array_equal(out, a)
+
+
+def test_fastpath_smaller_than_pickle_for_arrays():
+    """The 2-3x speed claim comes with near-1x size: header + raw bytes."""
+    a = np.random.default_rng(1).normal(size=(512, 256)).astype(np.float32)
+    fast = serialize(a).nbytes
+    assert fast <= len(pickle.dumps(a, protocol=5)) + 1024
+    assert fast >= a.nbytes  # sanity: can't be smaller than the data
+
+
+# -- property-based sweep ------------------------------------------------------------
+
+
+array_dtypes = st.sampled_from(
+    [np.float32, np.float64, np.int32, np.int64, np.uint8, np.float16]
+)
+small_shapes = st.lists(st.integers(0, 7), min_size=0, max_size=3).map(tuple)
+
+
+@settings(max_examples=60, deadline=None)
+@given(dtype=array_dtypes, shape=small_shapes, seed=st.integers(0, 2**31 - 1))
+def test_property_array_roundtrip(dtype, shape, seed):
+    rng = np.random.default_rng(seed)
+    a = (rng.normal(size=shape) * 100).astype(dtype)
+    b = roundtrip(a)
+    assert b.shape == a.shape and b.dtype == a.dtype
+    np.testing.assert_array_equal(a, b)
+
+
+json_like = st.recursive(
+    st.none() | st.booleans() | st.integers(-10, 10) | st.text(max_size=8),
+    lambda children: st.lists(children, max_size=4)
+    | st.dictionaries(st.text(max_size=4), children, max_size=4),
+    max_leaves=12,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(obj=json_like)
+def test_property_pytree_roundtrip(obj):
+    assert roundtrip(obj) == obj
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.binary(max_size=4096),
+)
+def test_property_bytes_roundtrip(data):
+    assert roundtrip(data) == data
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(0, 200),
+    dtype=array_dtypes,
+)
+def test_property_mixed_tree(n, dtype):
+    tree = {"a": np.arange(n, dtype=dtype), "meta": {"n": n}, "l": [1, "x"]}
+    out = roundtrip(tree)
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    assert out["meta"]["n"] == n and out["l"] == [1, "x"]

@@ -1,0 +1,156 @@
+"""Sharding-rule unit tests over AbstractMesh (no forced device count).
+
+These validate the distribution config cheaply; the full 512-device proof is
+the dry-run (launch/dryrun.py), whose artifacts are checked separately.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.distributed.sharding import ShardingRules
+from repro.models import transformer as tx
+from repro.models import whisper as wh
+from repro.train.train_step import init_train_state
+
+
+def abstract_mesh(multi_pod: bool = False) -> AbstractMesh:
+    if multi_pod:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def assert_spec_divides(mesh, spec: P, shape: tuple[int, ...], path=""):
+    assert len(spec) <= len(shape), f"{path}: spec longer than shape"
+    for dim, axis in zip(shape, tuple(spec) + (None,) * len(shape)):
+        n = _axis_size(mesh, axis)
+        assert dim % n == 0, f"{path}: dim {dim} not divisible by {axis}={n}"
+
+
+@pytest.mark.parametrize("multi_pod", [False, True])
+@pytest.mark.parametrize("arch", list_archs())
+def test_state_shardings_divide(arch, multi_pod):
+    """Every full-config param/opt leaf gets a spec whose axes divide it."""
+    mesh = abstract_mesh(multi_pod)
+    rules = ShardingRules(mesh)
+    cfg = get_config(arch)
+    state_shapes = jax.eval_shape(
+        lambda: init_train_state(cfg, jax.random.PRNGKey(0))
+    )
+    shardings = rules.state_shardings(state_shapes)
+
+    leaves = jax.tree_util.tree_leaves_with_path(state_shapes)
+    shard_leaves = jax.tree.leaves(
+        shardings, is_leaf=lambda x: isinstance(x, NamedSharding)
+    )
+    assert len(leaves) == len(shard_leaves)
+    for (path, leaf), sh in zip(leaves, shard_leaves):
+        assert isinstance(sh, NamedSharding)
+        assert_spec_divides(mesh, sh.spec, leaf.shape, jax.tree_util.keystr(path))
+
+
+@pytest.mark.parametrize("arch", ["granite-20b", "deepseek-v2-lite-16b",
+                                  "mamba2-130m", "hymba-1.5b", "whisper-tiny"])
+def test_cache_shardings_divide(arch):
+    mesh = abstract_mesh()
+    rules = ShardingRules(mesh)
+    cfg = get_config(arch)
+    if cfg.is_encdec:
+        cache_shapes = jax.eval_shape(
+            lambda: wh.init_cache(cfg, 128, 1024, cfg.encoder_seq)
+        )
+    else:
+        cache_shapes = jax.eval_shape(lambda: tx.init_cache(cfg, 128, 1024))
+    shardings = rules.cache_shardings(cache_shapes)
+    leaves = jax.tree_util.tree_leaves_with_path(cache_shapes)
+    shard_leaves = jax.tree.leaves(
+        shardings, is_leaf=lambda x: isinstance(x, NamedSharding)
+    )
+    for (path, leaf), sh in zip(leaves, shard_leaves):
+        assert_spec_divides(mesh, sh.spec, leaf.shape, jax.tree_util.keystr(path))
+
+
+def test_scalars_get_empty_spec():
+    mesh = abstract_mesh()
+    rules = ShardingRules(mesh)
+    tree = {"opt": {"step": jax.ShapeDtypeStruct((), jnp.int32)}}
+    sh = rules.state_shardings(tree)
+    assert sh["opt"]["step"].spec == P()
+
+
+def test_moments_shard_like_params():
+    """ZeRO invariant: Adam moments inherit the param's spec exactly."""
+    mesh = abstract_mesh()
+    rules = ShardingRules(mesh)
+    cfg = get_config("granite-20b")
+    state_shapes = jax.eval_shape(
+        lambda: init_train_state(cfg, jax.random.PRNGKey(0))
+    )
+    sh = rules.state_shardings(state_shapes)
+    p_specs = jax.tree.map(
+        lambda s: s.spec, sh["params"],
+        is_leaf=lambda x: isinstance(x, NamedSharding),
+    )
+    m_specs = jax.tree.map(
+        lambda s: s.spec, sh["opt"]["m"],
+        is_leaf=lambda x: isinstance(x, NamedSharding),
+    )
+    assert jax.tree.all(jax.tree.map(lambda a, b: a == b, p_specs, m_specs))
+
+
+def test_big_weights_are_sharded_not_replicated():
+    """Large matrices must not silently fall back to replication."""
+    mesh = abstract_mesh()
+    rules = ShardingRules(mesh)
+    cfg = get_config("kimi-k2-1t-a32b")
+    state_shapes = jax.eval_shape(
+        lambda: init_train_state(cfg, jax.random.PRNGKey(0))
+    )
+    sh = rules.state_shardings(state_shapes)
+    flat = jax.tree_util.tree_leaves_with_path(state_shapes)
+    shards = jax.tree.leaves(sh, is_leaf=lambda x: isinstance(x, NamedSharding))
+    replicated_big = []
+    for (path, leaf), s in zip(flat, shards):
+        n = math.prod(leaf.shape) if leaf.shape else 1
+        if n >= (1 << 22) and all(a is None for a in s.spec):
+            replicated_big.append((jax.tree_util.keystr(path), leaf.shape))
+    assert not replicated_big, f"replicated big tensors: {replicated_big}"
+
+
+def test_mqa_single_kv_head_replicates():
+    """granite kv=1: the KV head dim must not be sharded 16-way."""
+    mesh = abstract_mesh()
+    rules = ShardingRules(mesh)
+    spec = rules.param_spec("layers/attn/w_k", (6144, 1, 128))
+    assert spec[1] is None  # 1 head can't split
+
+
+def test_pod_axis_only_in_multipod():
+    mesh = abstract_mesh(multi_pod=True)
+    rules = ShardingRules(mesh)
+    assert rules.dp_axes == ("pod", "data")
+    rules_single = ShardingRules(abstract_mesh())
+    assert rules_single.dp_axes == ("data",)
+
+
+def test_fsdp_pod_option_widens_fsdp():
+    mesh = abstract_mesh(multi_pod=True)
+    rules = ShardingRules(mesh, fsdp_pod=True)
+    # embed (V, d): fsdp over (pod, data) = 32-way when it divides
+    spec = rules.param_spec("embedding/embed", (163840, 7168))
+    assert spec[0] == "model" and spec[1] == ("pod", "data")

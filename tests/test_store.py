@@ -1,0 +1,142 @@
+"""Store-level tests: proxy minting, caching, registry, cross-process resolve."""
+
+from __future__ import annotations
+
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Store,
+    get_factory,
+    get_or_create_store,
+    get_store,
+    is_proxy,
+    is_resolved,
+    unregister_store,
+)
+from repro.core.connectors import MemoryConnector, FileConnector
+
+
+def test_put_get_evict(store):
+    key = store.put({"a": np.arange(5)})
+    out = store.get(key)
+    np.testing.assert_array_equal(out["a"], np.arange(5))
+    assert store.exists(key)
+    store.evict(key)
+    assert not store.exists(key)
+
+
+def test_proxy_roundtrip(store):
+    a = np.random.default_rng(0).normal(size=(100,))
+    p = store.proxy(a)
+    assert is_proxy(p)
+    assert not is_resolved(p)
+    np.testing.assert_array_equal(np.asarray(p), a)
+
+
+def test_proxy_idempotent(store):
+    p = store.proxy([1, 2])
+    assert store.proxy(p) is p  # never proxy a proxy
+
+
+def test_proxy_batch(store):
+    objs = [np.full(10, i) for i in range(4)]
+    proxies = store.proxy_batch(objs)
+    assert len(proxies) == 4
+    for p, o in zip(proxies, objs):
+        np.testing.assert_array_equal(np.asarray(p), o)
+
+
+def test_one_shot_evict_semantics(store):
+    p = store.proxy(np.arange(3), evict=True)
+    key = get_factory(p).key
+    assert store.exists(key)
+    _ = p + 0  # first resolution
+    assert not store.exists(key)  # evicted after use
+    _ = p + 0  # target cached on the proxy itself; still usable
+
+
+def test_store_cache_serves_repeat_gets(store):
+    key = store.put(np.arange(8))
+    a = store.get(key)
+    b = store.get(key)
+    assert a is b  # LRU hit returns the same object
+    store.connector.evict(key)
+    c = store.get(key)  # still served from cache even after backend evict
+    assert c is a
+
+
+def test_cache_size_zero_disables(tmp_path):
+    s = Store("nocache", MemoryConnector(), cache_size=0, register=False)
+    key = s.put(np.arange(8))
+    assert s.get(key) is not s.get(key)
+
+
+def test_proxy_from_key(store):
+    key = store.put("payload")
+    p = store.proxy_from_key(key)
+    assert str(p) == "payload"
+
+
+def test_registry_reuse():
+    s = Store("reg-test", MemoryConnector(), register=True)
+    try:
+        assert get_store("reg-test") is s
+        again = get_or_create_store(s.config())
+        assert again is s  # same process, same live store
+    finally:
+        s.close()
+
+
+def test_get_or_create_opens_fresh():
+    unregister_store("fresh-test")
+    cfg = {
+        "name": "fresh-test",
+        "connector": {"connector_type": "memory"},
+        "serializer": "default",
+        "cache_size": 4,
+    }
+    s = get_or_create_store(cfg)
+    try:
+        assert s.name == "fresh-test"
+        assert get_store("fresh-test") is s
+    finally:
+        s.close()
+
+
+def test_cross_process_style_resolution(tmp_path):
+    """Simulates a worker in another address space: the proxy pickles with a
+    file-backed store config; a fresh registry entry re-opens the store."""
+    s = Store("xproc", FileConnector(str(tmp_path / "x")), register=False)
+    arr = np.arange(1000.0)
+    p = s.proxy(arr)
+    blob = pickle.dumps(p)
+
+    # "other process": wipe this process's registry entry for the store
+    unregister_store("xproc")
+    q = pickle.loads(blob)
+    assert not is_resolved(q)
+    np.testing.assert_array_equal(np.asarray(q), arr)
+    unregister_store("xproc")
+
+
+def test_store_config_roundtrip(tmp_path):
+    s = Store("cfg-rt", FileConnector(str(tmp_path / "c")), register=False)
+    key = s.put([1, 2, 3])
+    s2 = Store.from_config(s.config())
+    assert s2.get(key) == [1, 2, 3]
+
+
+def test_missing_get_returns_none(store):
+    from repro.core.connectors import Key
+
+    assert store.get(Key.new()) is None
+
+
+def test_pickle_serializer_store():
+    s = Store("pkl", MemoryConnector(), serializer="pickle", register=False)
+    key = s.put({"x": np.arange(4)})
+    out = s.get(key)
+    np.testing.assert_array_equal(out["x"], np.arange(4))

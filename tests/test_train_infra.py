@@ -1,0 +1,252 @@
+"""Training-infrastructure tests: optimizer, checkpoint/restart, data pipeline,
+graph tokenization, channels."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import is_proxy, is_resolved
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import ProxyPrefetcher, synthetic_batch
+from repro.train.optimizer import AdamWConfig, apply_updates, global_norm, init_opt_state, schedule
+from repro.train.train_step import init_train_state, make_train_step
+
+
+# -- optimizer ------------------------------------------------------------------
+
+
+def test_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    lr0 = float(schedule(cfg, jnp.asarray(0)))
+    lr_mid = float(schedule(cfg, jnp.asarray(10)))
+    lr_end = float(schedule(cfg, jnp.asarray(100)))
+    assert lr0 < lr_mid
+    assert abs(lr_mid - 1e-3) < 1e-9
+    assert abs(lr_end - 1e-4) < 1e-8
+
+
+def test_global_norm():
+    tree = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert abs(float(global_norm(tree)) - 5.0) < 1e-6
+
+
+def test_gradient_clipping_applied():
+    params = {"w": jnp.ones(4)}
+    opt = init_opt_state(params)
+    huge = {"w": jnp.full(4, 1e6)}
+    cfg = AdamWConfig(clip_norm=1.0, warmup_steps=0)
+    _, _, metrics = apply_updates(cfg, params, huge, opt)
+    assert float(metrics["grad_norm"]) > 1.0  # pre-clip norm reported
+
+
+def test_adamw_quadratic_convergence():
+    """AdamW drives a quadratic toward its minimum."""
+    params = {"x": jnp.asarray([5.0])}
+    opt = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.5, warmup_steps=0, weight_decay=0.0,
+                      total_steps=200, min_lr_ratio=1.0)
+    x_hist = []
+    for _ in range(100):
+        grads = {"x": 2 * params["x"]}
+        params, opt, _ = apply_updates(cfg, params, grads, opt)
+        x_hist.append(float(params["x"][0]))
+    assert abs(x_hist[-1]) < 0.5
+
+
+# -- checkpoint/restart (fault tolerance) ---------------------------------------
+
+
+def test_checkpoint_roundtrip(store, tmp_path):
+    cfg = get_smoke_config("qwen2.5-3b")
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    mgr = CheckpointManager(store, str(tmp_path / "index.json"), keep=2)
+    mgr.save(3, state, blocking=True)
+    assert mgr.latest_step() == 3
+    step, restored = mgr.restore()
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_restart_resumes_training(store, tmp_path):
+    """Full restart loop: train, save, 'crash', restore, keep training."""
+    cfg = get_smoke_config("mamba2-130m")
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(0, cfg.vocab_size, (2, 16)).astype(np.int32)}
+    step_fn = jax.jit(make_train_step(cfg, AdamWConfig()))
+
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    for i in range(3):
+        state, _ = step_fn(state, batch)
+    mgr = CheckpointManager(store, str(tmp_path / "idx.json"), keep=3)
+    mgr.save(3, state, blocking=True)
+
+    # "crash": new manager over the same index + store
+    mgr2 = CheckpointManager(store, str(tmp_path / "idx.json"), keep=3)
+    step, restored = mgr2.restore()
+    assert step == 3
+    state2, m2 = step_fn(restored, batch)
+    state_ref, m_ref = step_fn(state, batch)
+    np.testing.assert_allclose(
+        float(m2["loss"]), float(m_ref["loss"]), rtol=1e-6
+    )
+
+
+def test_checkpoint_async_save(store, tmp_path):
+    cfg = get_smoke_config("qwen2.5-3b")
+    state = init_train_state(cfg, jax.random.PRNGKey(1))
+    mgr = CheckpointManager(store, str(tmp_path / "a.json"))
+    mgr.save(1, state, blocking=False)  # returns immediately
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_checkpoint_retention_evicts(store, tmp_path):
+    mgr = CheckpointManager(store, str(tmp_path / "r.json"), keep=2)
+    for s in range(4):
+        mgr.save(s, {"w": np.full(100, s)}, blocking=True)
+    steps = [m["step"] for m in mgr._index["checkpoints"]]
+    assert steps == [2, 3]
+    # evicted checkpoints are gone from the connector
+    assert mgr.restore(step=0) is None
+    got = mgr.restore(step=2)
+    assert got is not None and float(np.asarray(got[1]["w"])[0]) == 2.0
+
+
+def test_lazy_restore_returns_proxies(store, tmp_path):
+    mgr = CheckpointManager(store, str(tmp_path / "l.json"))
+    state = {"layer": {"w": np.ones((64, 64)), "b": np.zeros(64)}}
+    mgr.save(7, state, blocking=True)
+    step, lazy = mgr.restore_lazy()
+    leaves = jax.tree.leaves(
+        lazy, is_leaf=lambda x: is_proxy(x)
+    )
+    assert all(is_proxy(l) for l in leaves)
+    assert all(not is_resolved(l) for l in leaves)
+    # resolving one shard does not resolve the others
+    np.testing.assert_array_equal(np.asarray(leaves[1]), np.ones((64, 64)))
+
+
+# -- data pipeline -----------------------------------------------------------------
+
+
+def test_synthetic_batch_shapes():
+    rng = np.random.default_rng(0)
+    b = synthetic_batch(rng, 4, 16, 100, extras={"emb": (4, 8, 32)})
+    assert b["tokens"].shape == (4, 16) and b["tokens"].dtype == np.int32
+    assert b["tokens"].max() < 100
+    assert b["emb"].shape == (4, 8, 32)
+
+
+def test_prefetcher_yields_proxies(store):
+    rng = np.random.default_rng(0)
+
+    def make(i):
+        return synthetic_batch(rng, 2, 8, 50)
+
+    with ProxyPrefetcher(store, make, depth=2) as pf:
+        seen = 0
+        for p in pf:
+            assert is_proxy(p)
+            tokens = p["tokens"]
+            assert tokens.shape == (2, 8)
+            seen += 1
+            if seen >= 4:
+                break
+    assert seen == 4
+
+
+def test_prefetcher_overlaps_production(store):
+    """While the consumer works, the producer fills the queue (double-buffer)."""
+    calls = []
+
+    def make(i):
+        calls.append(i)
+        return {"x": np.zeros(10)}
+
+    with ProxyPrefetcher(store, make, depth=3) as pf:
+        next(pf)
+        time.sleep(0.3)  # consumer "computes"; producer should run ahead
+        assert len(calls) >= 3
+
+
+# -- graph / tokenize -----------------------------------------------------------------
+
+
+def test_tokenize_deterministic():
+    from repro.runtime.graph import tokenize
+
+    a = np.arange(100)
+    t1 = tokenize(np.sum, [a], [])
+    t2 = tokenize(np.sum, [a.copy()], [])
+    assert t1 == t2
+    t3 = tokenize(np.sum, [a + 1], [])
+    assert t1 != t3
+
+
+def test_tokenize_proxy_uses_token_not_resolution(store):
+    from repro.runtime.graph import tokenize
+
+    p = store.proxy(np.arange(1000))
+    t = tokenize(np.sum, [p], [])
+    assert not is_resolved(p)  # keying a task must not fetch its data
+    assert isinstance(t, str) and len(t) > 8
+
+
+def test_tokenize_distinguishes_functions():
+    from repro.runtime.graph import tokenize
+
+    assert tokenize(np.sum, [1], []) != tokenize(np.prod, [1], [])
+
+
+def test_future_ref_substitution():
+    from repro.runtime.graph import FutureRef, find_refs, substitute_refs
+
+    spec = {"a": FutureRef("k1"), "b": [FutureRef("k2"), 3]}
+    assert sorted(find_refs(spec)) == ["k1", "k2"]
+    out = substitute_refs(spec, {"k1": 10, "k2": 20})
+    assert out == {"a": 10, "b": [20, 3]}
+
+
+# -- channels ---------------------------------------------------------------------------
+
+
+def test_local_channel_roundtrip():
+    from repro.runtime.comm import ChannelClosed, LocalChannel
+
+    ch = LocalChannel("t")
+    a, b = ch.endpoint_a(), ch.endpoint_b()
+    a.send({"x": np.arange(10)})
+    msg = b.recv(timeout=1)
+    np.testing.assert_array_equal(msg["x"], np.arange(10))
+    assert a.counter.snapshot()["sent_bytes"] == b.counter.snapshot()["recv_bytes"]
+    a.close()
+    with pytest.raises(ChannelClosed):
+        b.recv(timeout=1)
+
+
+def test_pipe_channel_across_processes():
+    import multiprocessing as mp
+
+    from repro.runtime.comm import PipeEndpoint
+
+    parent, child = mp.Pipe()
+    pe = PipeEndpoint(parent)
+
+    def child_main(conn):
+        ep = PipeEndpoint(conn)
+        msg = ep.recv(timeout=10)
+        ep.send({"echo": msg["x"] * 2})
+
+    proc = mp.Process(target=child_main, args=(child,))
+    proc.start()
+    pe.send({"x": np.arange(5)})
+    out = pe.recv(timeout=10)
+    np.testing.assert_array_equal(out["echo"], np.arange(5) * 2)
+    proc.join(timeout=10)
