@@ -16,14 +16,13 @@ changes" property.
 from __future__ import annotations
 
 import time
-import uuid
+
 
 import numpy as np
 
-from benchmarks.common import QUICK, record, save_artifact
-from repro.core import SizePolicy, Store
-from repro.core.connectors import MemoryConnector
-from repro.runtime.client import LocalCluster, ProxyClient
+from benchmarks.common import QUICK, bench_store_config, record, save_artifact
+from repro.api import PolicySpec, Session
+from repro.runtime.client import LocalCluster
 
 # -- cholesky -------------------------------------------------------------------
 
@@ -147,12 +146,10 @@ def _run_app(name, fn, *args) -> dict:
             ]
 
     with LocalCluster(n_workers=4) as cluster:
-        store = Store(
-            f"bench-{name}-{uuid.uuid4().hex[:6]}",
-            MemoryConnector(segment=f"{name}-{uuid.uuid4().hex[:6]}"),
-        )
-        with ProxyClient(
-            cluster, ps_store=store, should_proxy=SizePolicy(50_000)
+        with Session(
+            cluster=cluster,
+            store=bench_store_config(f"bench-{name}"),
+            policy=PolicySpec("size", threshold=50_000),
         ) as proxy:
             t0 = time.perf_counter()
             fn(proxy, *args)
@@ -160,8 +157,7 @@ def _run_app(name, fn, *args) -> dict:
             res["proxy_sched_bytes"] = cluster.scheduler.bytes_through()[
                 "in_bytes"
             ]
-        store.connector.clear()
-        store.close()
+        # session exit wiped the session-owned store
 
     res["speedup"] = res["baseline_s"] / res["proxy_s"]
     record(

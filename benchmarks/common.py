@@ -1,4 +1,4 @@
-"""Shared benchmark utilities: timing, CSV rows, artifact output."""
+"""Shared benchmark utilities: timing, CSV rows, artifacts, store configs."""
 
 from __future__ import annotations
 
@@ -6,12 +6,28 @@ import json
 import os
 import statistics
 import time
+import uuid
 from pathlib import Path
 from typing import Any, Callable
+
+from repro.api import ConnectorSpec, StoreConfig
 
 ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 
 QUICK = os.environ.get("BENCH_QUICK", "") == "1"
+
+
+def bench_store_config(prefix: str, connector: str = "memory", **params: Any) -> StoreConfig:
+    """Uniquely-named store config for one benchmark run.
+
+    Unique names keep concurrent/repeated runs from sharing a namespace;
+    handing the *config* (not a live store) to ``Session`` makes the session
+    own the store, so teardown is the session's problem, not the benchmark's.
+    """
+    uid = f"{prefix}-{uuid.uuid4().hex[:6]}"
+    if connector == "memory":
+        params.setdefault("segment", uid)
+    return StoreConfig(uid, ConnectorSpec(connector, **params))
 
 _rows: list[tuple[str, float, str]] = []
 

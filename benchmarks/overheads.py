@@ -10,14 +10,12 @@ exactly as in the paper's figure).
 from __future__ import annotations
 
 import time
-import uuid
 
 import numpy as np
 
-from benchmarks.common import QUICK, record, save_artifact, timeit
-from repro.core import SizePolicy, Store
-from repro.core.connectors import MemoryConnector
-from repro.runtime.client import LocalCluster, ProxyClient
+from benchmarks.common import QUICK, bench_store_config, record, save_artifact, timeit
+from repro.api import PolicySpec, Session
+from repro.runtime.client import LocalCluster
 
 
 def identity(x):
@@ -34,11 +32,11 @@ def run() -> dict:
 
     with LocalCluster(n_workers=1) as cluster:
         base = cluster.get_client()
-        store = Store(
-            f"bench-rtt-{uuid.uuid4().hex[:6]}",
-            MemoryConnector(segment=f"rtt-{uuid.uuid4().hex[:6]}"),
+        proxy = Session(
+            cluster=cluster,
+            store=bench_store_config("bench-rtt"),
+            policy=PolicySpec("size", threshold=0),
         )
-        proxy = ProxyClient(cluster, ps_store=store, should_proxy=SizePolicy(0))
 
         for nbytes in payloads:
             data = np.random.default_rng(0).bytes(nbytes)
@@ -61,7 +59,6 @@ def run() -> dict:
             )
         proxy.close()
         base.close()
-        store.close()
 
     save_artifact("fig3_overheads", out)
     return out

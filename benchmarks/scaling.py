@@ -11,14 +11,12 @@ paper's claim and is what we assert.)
 from __future__ import annotations
 
 import time
-import uuid
 
 import numpy as np
 
-from benchmarks.common import QUICK, record, save_artifact
-from repro.core import SizePolicy, Store
-from repro.core.connectors import MemoryConnector
-from repro.runtime.client import LocalCluster, ProxyClient
+from benchmarks.common import QUICK, bench_store_config, record, save_artifact
+from repro.api import PolicySpec, Session
+from repro.runtime.client import LocalCluster
 
 PAYLOAD = 1_000_000
 
@@ -46,16 +44,13 @@ def run() -> dict:
         with LocalCluster(n_workers=n) as cluster:
             with cluster.get_client() as base:
                 base_tps = _throughput(base, n_tasks)
-            store = Store(
-                f"bench-tp-{uuid.uuid4().hex[:6]}",
-                MemoryConnector(segment=f"tp-{uuid.uuid4().hex[:6]}"),
-            )
-            with ProxyClient(
-                cluster, ps_store=store, should_proxy=SizePolicy(100_000)
+            with Session(
+                cluster=cluster,
+                store=bench_store_config("bench-tp"),
+                policy=PolicySpec("size", threshold=100_000),
             ) as proxy:
                 proxy_tps = _throughput(proxy, n_tasks)
-            store.connector.clear()
-            store.close()
+            # session exit wiped the session-owned store
 
         out["baseline_tps"].append(base_tps)
         out["proxy_tps"].append(proxy_tps)

@@ -14,9 +14,8 @@ import time
 
 import numpy as np
 
-from repro.core import Store
-from repro.core.connectors import MemoryConnector
-from repro.runtime.client import LocalCluster, ProxyClient
+from repro.api import PolicySpec, Session
+from repro.runtime.client import LocalCluster
 
 DIM = 256
 N_CANDIDATES = 48
@@ -67,16 +66,18 @@ def run(client) -> tuple[float, float]:
 
 def main() -> None:
     with LocalCluster(n_workers=4) as cluster:
-        with cluster.get_client() as base:
+        # policy="never": nothing is proxied -> the pure-Dask anti-pattern
+        with Session(cluster=cluster, policy="never", proxy_results=False) as base:
             t_base, w_base = run(base)
             bytes_base = cluster.scheduler.bytes_through()["in_bytes"]
 
     with LocalCluster(n_workers=4) as cluster:
-        store = Store("al-store", MemoryConnector(segment="active-learning"))
-        with ProxyClient(cluster, ps_store=store, ps_threshold=50_000) as proxy:
+        # the same session API, now routing >=50 kB objects via the store
+        with Session(
+            cluster=cluster, policy=PolicySpec("size", threshold=50_000)
+        ) as proxy:
             t_proxy, w_proxy = run(proxy)
             bytes_proxy = cluster.scheduler.bytes_through()["in_bytes"]
-        store.close()
 
     assert abs(w_base - w_proxy) < 1e-6, "proxying changed the result!"
     print(f"baseline : {t_base:.2f}s, {bytes_base/1e6:.1f} MB through scheduler")

@@ -1,51 +1,67 @@
-"""Quickstart: the paper's three integration patterns (Fig 2), end to end.
+"""Quickstart: the paper's three integration patterns (Fig 2) through the
+single unified ``repro.api.Session`` facade.
+
+Everything is configured declaratively -- stores by ``StoreConfig`` +
+``ConnectorSpec``, should-proxy policies by ``PolicySpec`` -- and every
+pattern uses the same ``submit`` / ``scatter`` / ``as_completed`` surface.
+Session exit evicts all session-owned proxies, so nothing leaks.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
+from concurrent.futures import ThreadPoolExecutor
+
 import numpy as np
 
-from repro.core import SizePolicy, Store, StoreExecutor, is_proxy
-from repro.core.connectors import MemoryConnector, ShardedConnector
-from repro.runtime.client import LocalCluster, ProxyClient
+from repro.api import ConnectorSpec, PolicySpec, Session, StoreConfig
+from repro.core import is_proxy
+from repro.runtime.client import LocalCluster
 
 
 def main() -> None:
     data = np.random.default_rng(0).normal(size=(512, 512))  # ~2 MB
 
-    # ---- (a) manual proxies: store once, pass references ---------------------
-    with Store("example-a", MemoryConnector(segment="quickstart")) as store:
-        with LocalCluster(n_workers=2) as cluster:
-            with cluster.get_client() as client:
-                proxy = store.proxy(data)          # cheap wide-area reference
-                future = client.submit(lambda x: float(np.asarray(x).sum()), proxy)
-                print("(a) manual proxy     :", round(future.result(), 3))
+    # ---- (a) manual proxies: scatter once, pass references -------------------
+    # policy="never" disables auto-proxying; you decide what is a reference.
+    with LocalCluster(n_workers=2) as cluster:
+        with Session(cluster=cluster, policy="never") as s:
+            proxy = s.scatter(data)            # cheap wide-area reference
+            future = s.submit(lambda x: float(np.asarray(x).sum()), proxy)
+            print("(a) manual proxy     :", round(future.result(), 3))
+        # <- session exit evicted the scattered object
 
-    # ---- (b) drop-in client: auto-proxy above a threshold --------------------
-    with Store("example-b", MemoryConnector(segment="quickstart")) as store:
-        with LocalCluster(n_workers=2) as cluster:
-            with ProxyClient(cluster, ps_store=store, ps_threshold=1000) as client:
-                future = client.submit(lambda x: float(np.asarray(x).sum()), data)
-                print("(b) auto-proxy client:", round(future.result(), 3))
-                print("    scheduler bytes  :",
-                      cluster.scheduler.bytes_through()["in_bytes"])
+    # ---- (b) drop-in client: auto-proxy above a size threshold ---------------
+    with LocalCluster(n_workers=2) as cluster:
+        with Session(
+            cluster=cluster,
+            policy=PolicySpec("size", threshold=1000),
+        ) as s:
+            future = s.submit(lambda x: float(np.asarray(x).sum()), data)
+            print("(b) auto-proxy submit:", round(future.result(), 3))
+            print("    scheduler bytes  :",
+                  cluster.scheduler.bytes_through()["in_bytes"])
+            print("    store bytes      :", s.stats()["bytes_put"])
 
-    # ---- (c) StoreExecutor: policies + ownership over any executor -----------
-    from concurrent.futures import ThreadPoolExecutor
-
-    with Store("example-c", ShardedConnector("/tmp/quickstart-pool",
-                                             num_shards=4)) as store:
-        with ThreadPoolExecutor(2) as pool:
-            with StoreExecutor(
-                pool, store,
-                should_proxy=SizePolicy(1000),   # proxy objects >= 1 kB
-                ownership=True,                  # results auto-evict when GC'd
-            ) as executor:
-                future = executor.submit(lambda x: np.asarray(x) @ np.asarray(x).T,
-                                         data)
-                result = future.result()
-                print("(c) StoreExecutor    : result is proxy =", is_proxy(result),
-                      "| shape =", result.shape)
+    # ---- (c) policies + any executor: composable data flow -------------------
+    # Same Session facade over a stdlib pool; a declarative composite policy
+    # proxies only large ndarrays, and large results return as proxies.
+    store_cfg = StoreConfig(
+        name="quickstart-pool",
+        connector=ConnectorSpec("sharded", store_dir="/tmp/quickstart-pool",
+                                num_shards=4),
+    )
+    big_ndarray = PolicySpec("all", policies=[
+        PolicySpec("type", types=["numpy.ndarray"]),
+        PolicySpec("size", threshold=1000),
+    ])
+    with ThreadPoolExecutor(2) as pool:
+        with Session(executor=pool, store=store_cfg, policy=big_ndarray) as s:
+            futures = s.map(lambda x: np.asarray(x) @ np.asarray(x).T,
+                            [data, data * 2])
+            for f in s.as_completed(futures):
+                r = f.result()
+                print("(c) executor+policy  : result is proxy =", is_proxy(r),
+                      "| shape =", r.shape)
 
 
 if __name__ == "__main__":

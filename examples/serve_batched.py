@@ -15,9 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ConnectorSpec, StoreConfig
+from repro.core import is_proxy
 from repro.configs import get_smoke_config
-from repro.core import Store, is_proxy
-from repro.core.connectors import MemoryConnector
 from repro.models import transformer as tx
 from repro.models.layers import logits_matmul
 from repro.train.checkpoint import CheckpointManager
@@ -28,7 +28,9 @@ BATCH, PROMPT_LEN, GEN_TOKENS = 4, 16, 24
 
 def main() -> None:
     cfg = get_smoke_config(ARCH)
-    store = Store("serve-store", MemoryConnector(segment="serve"))
+    store = StoreConfig(
+        "serve-store", ConnectorSpec("memory", segment="serve")
+    ).build(register=True)
     ckpt = CheckpointManager(store, "/tmp/serve_ckpt_index.json", keep=1)
 
     # "trainer" published a checkpoint

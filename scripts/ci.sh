@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the whole suite, one command, no manual PYTHONPATH.
+# (pyproject.toml sets pythonpath=src for pytest; the env var below keeps
+# the command working even under pytest<7 or when invoked from elsewhere.)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -1,0 +1,62 @@
+"""Unified, typed public API (the paper's three patterns behind one facade).
+
+The three integration patterns of Fig 2 — manual proxies, the drop-in
+``ProxyClient``, and the policy-driven ``StoreExecutor`` — are all reachable
+through a single :class:`Session`, configured declaratively::
+
+    from repro.api import ConnectorSpec, PolicySpec, Session, StoreConfig
+
+    cfg = StoreConfig(
+        name="demo",
+        connector=ConnectorSpec("sharded", store_dir="/tmp/pool", num_shards=8),
+    )
+    with Session(store=cfg, cluster=cluster,
+                 policy=PolicySpec("size", threshold=50_000)) as s:
+        p = s.scatter(big_array)            # Fig 2a: manual proxy
+        fut = s.submit(fn, p)               # Fig 2b: auto-proxy submit
+        for f in s.as_completed([fut]):     # uniform futures surface
+            print(f.result())
+    # session exit evicts every session-owned proxy
+
+Direct ``Store(...)`` / ``ProxyClient(...)`` / ``StoreExecutor(...)``
+construction still works but emits :class:`DeprecationWarning`.
+"""
+
+from repro.api.config import (
+    ConnectorSpec,
+    PolicySpec,
+    SpecValidationError,
+    StoreConfig,
+)
+from repro.api.session import Session, as_completed
+from repro.core.connectors.base import (
+    connector_registry,
+    list_connectors,
+    register_connector,
+)
+from repro.core.plugins import PluginRegistry, UnknownPluginError
+from repro.core.policy import (
+    list_policies,
+    policy_registry,
+    register_policy,
+)
+from repro.core.store import list_serializers, register_serializer
+
+__all__ = [
+    "ConnectorSpec",
+    "PolicySpec",
+    "SpecValidationError",
+    "StoreConfig",
+    "Session",
+    "as_completed",
+    "PluginRegistry",
+    "UnknownPluginError",
+    "connector_registry",
+    "list_connectors",
+    "register_connector",
+    "list_policies",
+    "policy_registry",
+    "register_policy",
+    "list_serializers",
+    "register_serializer",
+]

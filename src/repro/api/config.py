@@ -1,0 +1,266 @@
+"""Typed, declarative configuration for stores, connectors, and policies.
+
+These dataclasses replace the hand-built config dicts that previously
+plumbed ``core/store.py`` / ``core/connectors`` / ``core/policy.py``
+together.  Each spec:
+
+* names its implementation (looked up in the matching plugin registry),
+* validates eagerly at construction (unknown names and bad params fail at
+  config time, not deep inside a worker),
+* round-trips losslessly through plain dicts (``to_dict``/``from_dict``)
+  using the exact wire format the existing ``Store.from_config`` /
+  ``connector_from_config`` / ``policy_from_config`` functions consume, so
+  a ``StoreConfig`` travels by value inside proxy factories unchanged.
+"""
+
+from __future__ import annotations
+
+import inspect
+import json
+from dataclasses import dataclass, field
+from typing import Any, ClassVar, Mapping
+
+from repro.core._deprecation import api_managed
+from repro.core.connectors.base import Connector, connector_registry
+from repro.core.plugins import UnknownPluginError
+from repro.core.policy import Policy, policy_registry
+from repro.core.store import Store, serializer_registry
+
+
+class SpecValidationError(ValueError):
+    """A spec named a registered plugin but its params don't fit it."""
+
+
+def _check_params(kind_label: str, name: str, cls: type, params: Mapping[str, Any]) -> None:
+    """Bind ``params`` against the plugin constructor when that is decidable.
+
+    Constructors taking ``*args``/``**kwargs`` (e.g. composite policies)
+    define their own config key conventions and are validated at build time
+    instead.
+    """
+    for key in params:
+        if not isinstance(key, str):
+            raise SpecValidationError(
+                f"{kind_label} {name!r}: param names must be strings, got {key!r}"
+            )
+    try:
+        sig = inspect.signature(cls)
+    except (TypeError, ValueError):  # extension types without signatures
+        return
+    if any(
+        p.kind in (p.VAR_POSITIONAL, p.VAR_KEYWORD)
+        for p in sig.parameters.values()
+    ):
+        return
+    try:
+        sig.bind(**params)
+    except TypeError as exc:
+        raise SpecValidationError(
+            f"{kind_label} {name!r} does not accept params {dict(params)!r}: {exc}"
+        ) from None
+
+
+def _encode(value: Any) -> Any:
+    """Specs nested inside params (multi-connector rules, composite policies)
+    serialize in place so ``to_dict`` output is plain JSON-able data."""
+    if isinstance(value, (ConnectorSpec, PolicySpec)):
+        return value.to_dict()
+    if isinstance(value, (list, tuple)):
+        return [_encode(v) for v in value]
+    if isinstance(value, Mapping):
+        return {k: _encode(v) for k, v in value.items()}
+    return value
+
+
+def _decode(value: Any) -> Any:
+    if isinstance(value, Mapping):
+        if "connector_type" in value:
+            return ConnectorSpec.from_dict(value)
+        if "policy_type" in value:
+            return PolicySpec.from_dict(value)
+        return {k: _decode(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [_decode(v) for v in value]
+    return value
+
+
+class _Spec:
+    """Shared machinery for ``name + params`` specs.
+
+    Subclasses set the registry, the wire-format type key, and the label
+    used in error messages; everything else (validated construction, dict
+    round-trips, value equality/hashing) is identical by design.
+    """
+
+    _registry: ClassVar[Any]
+    _type_key: ClassVar[str]
+    _label: ClassVar[str]
+
+    kind: str
+    params: dict[str, Any]
+
+    def __init__(self, kind: str, params: Mapping[str, Any] | None = None, **extra: Any):
+        merged = dict(params or {})
+        merged.update(extra)
+        object.__setattr__(self, "kind", kind)
+        object.__setattr__(self, "params", merged)
+        self.validate()
+
+    def validate(self) -> None:
+        cls = self._registry.get(self.kind)  # UnknownPluginError on typo
+        _check_params(self._label, self.kind, cls, self.params)
+        for v in self.params.values():
+            _validate_nested(v)
+
+    def to_dict(self) -> dict[str, Any]:
+        """The exact wire format the matching ``*_from_config`` consumes."""
+        return {self._type_key: self.kind, **_encode(self.params)}
+
+    @classmethod
+    def from_dict(cls, config: Mapping[str, Any]):
+        config = dict(config)
+        kind = config.pop(cls._type_key)
+        return cls(kind, {k: _decode(v) for k, v in config.items()})
+
+    def __eq__(self, other: Any) -> bool:
+        return (
+            type(other) is type(self)
+            and self.kind == other.kind
+            and self.params == other.params
+        )
+
+    def __hash__(self) -> int:
+        # params is a dict, so hash the canonical wire form instead.
+        return hash(
+            (type(self), json.dumps(self.to_dict(), sort_keys=True, default=repr))
+        )
+
+
+@dataclass(frozen=True, init=False, eq=False)
+class ConnectorSpec(_Spec):
+    """A connector declared by registered name + constructor params.
+
+    ``ConnectorSpec("memory", segment="demo")`` or, for nesting,
+    ``ConnectorSpec("multi", rules=[[4096, ConnectorSpec("memory")],
+    [None, ConnectorSpec("file", store_dir=...)]])``.
+    """
+
+    kind: str
+    params: dict[str, Any] = field(default_factory=dict)
+
+    _registry: ClassVar[Any] = connector_registry
+    _type_key: ClassVar[str] = "connector_type"
+    _label: ClassVar[str] = "connector"
+
+    def build(self) -> Connector:
+        from repro.core.connectors.base import connector_from_config
+
+        return connector_from_config(self.to_dict())
+
+
+@dataclass(frozen=True, init=False, eq=False)
+class PolicySpec(_Spec):
+    """A should-proxy policy declared by registered name + params.
+
+    ``PolicySpec("size", threshold=50_000)``, ``PolicySpec("never")``, or
+    composites: ``PolicySpec("all", policies=[PolicySpec("type",
+    types=["numpy.ndarray"]), PolicySpec("size", threshold=100)])``.
+    """
+
+    kind: str
+    params: dict[str, Any] = field(default_factory=dict)
+
+    _registry: ClassVar[Any] = policy_registry
+    _type_key: ClassVar[str] = "policy_type"
+    _label: ClassVar[str] = "policy"
+
+    def build(self) -> Policy:
+        from repro.core.policy import policy_from_config
+
+        return policy_from_config(self.to_dict())
+
+
+def _validate_nested(value: Any) -> None:
+    """Nested specs were validated by their own __init__; raw dicts that look
+    like specs get validated here so errors surface at config time."""
+    if isinstance(value, Mapping):
+        if "connector_type" in value:
+            ConnectorSpec.from_dict(value)
+        elif "policy_type" in value:
+            PolicySpec.from_dict(value)
+    elif isinstance(value, (list, tuple)):
+        for v in value:
+            _validate_nested(v)
+
+
+@dataclass(frozen=True, init=False)
+class StoreConfig:
+    """Declarative description of a :class:`repro.core.store.Store`.
+
+    Travels by value (``to_dict`` output is what proxy factories carry) and
+    builds live stores on demand.  ``Store.from_config(cfg.to_dict())``
+    round-trips for every registered connector.
+    """
+
+    name: str
+    connector: ConnectorSpec
+    serializer: str = "default"
+    cache_size: int = 16
+
+    def __init__(
+        self,
+        name: str,
+        connector: ConnectorSpec | Mapping[str, Any] | tuple | str,
+        serializer: str = "default",
+        cache_size: int = 16,
+    ):
+        if isinstance(connector, str):
+            connector = ConnectorSpec(connector)
+        elif isinstance(connector, Mapping):
+            connector = ConnectorSpec.from_dict(connector)
+        elif isinstance(connector, tuple):
+            connector = ConnectorSpec(*connector)
+        object.__setattr__(self, "name", name)
+        object.__setattr__(self, "connector", connector)
+        object.__setattr__(self, "serializer", serializer)
+        object.__setattr__(self, "cache_size", int(cache_size))
+        self.validate()
+
+    def validate(self) -> None:
+        if not self.name or not isinstance(self.name, str):
+            raise SpecValidationError("store name must be a non-empty string")
+        if self.cache_size < 0:
+            raise SpecValidationError("cache_size must be >= 0")
+        from repro.core.store import _ensure_lazy_serializers
+
+        _ensure_lazy_serializers()
+        serializer_registry.get(self.serializer)
+        self.connector.validate()
+
+    def to_dict(self) -> dict[str, Any]:
+        """The exact wire format ``Store.from_config`` consumes."""
+        return {
+            "name": self.name,
+            "connector": self.connector.to_dict(),
+            "serializer": self.serializer,
+            "cache_size": self.cache_size,
+        }
+
+    @classmethod
+    def from_dict(cls, config: Mapping[str, Any]) -> "StoreConfig":
+        return cls(
+            config["name"],
+            ConnectorSpec.from_dict(config["connector"]),
+            serializer=config.get("serializer", "default"),
+            cache_size=config.get("cache_size", 16),
+        )
+
+    def build(self, *, register: bool = False) -> Store:
+        with api_managed():
+            return Store(
+                self.name,
+                self.connector.build(),
+                serializer=self.serializer,
+                cache_size=self.cache_size,
+                register=register,
+            )

@@ -1,0 +1,285 @@
+"""Session: one facade over the paper's three integration patterns.
+
+A ``Session`` composes an execution backend, a store, and a should-proxy
+policy behind a uniform ``submit`` / ``map`` / ``gather`` / ``scatter`` /
+``as_completed`` surface:
+
+* ``Session()``                      — bare in-process execution,
+* ``Session(executor=pool)``         — any ``concurrent.futures`` executor
+  (policy-driven auto-proxying, Fig 2c),
+* ``Session(cluster=LocalCluster())``— the runtime scheduler with drop-in
+  pass-by-proxy (Fig 2b),
+
+while ``session.scatter`` / ``session.proxy`` cover the manual pattern
+(Fig 2a).  Every proxy the session mints client-side is *session-owned*:
+closing the session (or leaving its ``with`` block) evicts the backing
+objects, so no storage leaks past the session's lifetime.
+"""
+
+from __future__ import annotations
+
+import uuid
+from concurrent.futures import Future
+from concurrent.futures import as_completed as _futures_as_completed
+from typing import Any, Callable, Iterable, Iterator, Sequence, TypeVar
+
+from repro.api.config import PolicySpec, StoreConfig
+from repro.core._deprecation import api_managed
+from repro.core.connectors.base import Key
+from repro.core.executor import StoreExecutor
+from repro.core.policy import Policy, SizePolicy
+from repro.core.proxy import Proxy, get_factory, is_proxy
+from repro.core.store import Store
+
+T = TypeVar("T")
+
+
+def as_completed(futures: Iterable[Future], timeout: float | None = None) -> Iterator[Future]:
+    """Yield futures as they finish (works for every Session backend)."""
+    return _futures_as_completed(list(futures), timeout=timeout)
+
+
+class SessionClosedError(RuntimeError):
+    pass
+
+
+class Session:
+    """Cluster + store + policy behind one uniform futures interface."""
+
+    def __init__(
+        self,
+        *,
+        store: StoreConfig | Store | None = None,
+        cluster: Any = None,
+        executor: Any = None,
+        policy: PolicySpec | Policy | str | None = None,
+        proxy_results: bool = True,
+        ownership: bool = False,
+        name: str | None = None,
+    ):
+        if cluster is not None and executor is not None:
+            raise ValueError("pass either cluster= or executor=, not both")
+        self.name = name or f"session-{uuid.uuid4().hex[:8]}"
+
+        # -- store: build from config (owned) or adopt a live one (borrowed)
+        if store is None:
+            store = StoreConfig(self.name, ("memory", {"segment": self.name}))
+        if isinstance(store, StoreConfig):
+            self.store = store.build(register=True)
+            self._owns_store = True
+        else:
+            self.store = store
+            self._owns_store = False
+
+        # -- policy: spec, registered name, or bare callable
+        if policy is None:
+            policy = SizePolicy()
+        elif isinstance(policy, str):
+            policy = PolicySpec(policy).build()
+        elif isinstance(policy, PolicySpec):
+            policy = policy.build()
+        self.policy: Policy = policy
+
+        self.proxy_results = proxy_results
+        self.ownership = ownership
+        self._owned_keys: dict[str, Key] = {}
+        self._closed = False
+
+        # -- execution backend
+        self._client = None
+        self._executor = None
+        if cluster is not None:
+            with api_managed():
+                self._client = _make_session_client(
+                    self,
+                    cluster,
+                    store=self.store,
+                    policy=self.policy,
+                    proxy_results=proxy_results,
+                )
+        elif executor is not None:
+            with api_managed():
+                self._executor = _SessionStoreExecutor(
+                    self,
+                    executor,
+                    self.store,
+                    should_proxy=self.policy,
+                    proxy_results=proxy_results,
+                    ownership=ownership,
+                )
+
+    # -- proxy lifetime scoping ------------------------------------------------
+
+    def _track(self, proxy: Proxy) -> Proxy:
+        key = getattr(get_factory(proxy), "key", None)
+        if isinstance(key, Key):
+            self._owned_keys[key.object_id] = key
+        return proxy
+
+    def owned_count(self) -> int:
+        return len(self._owned_keys)
+
+    # -- manual pattern (Fig 2a) -----------------------------------------------
+
+    def proxy(self, obj: T, *, evict: bool = False, owned: bool = True) -> Proxy[T]:
+        """Store ``obj`` and return a transparent proxy (manual pattern)."""
+        self._check_open()
+        p = self.store.proxy(obj, evict=evict)
+        return self._track(p) if owned and not evict else p
+
+    def scatter(
+        self, data: T | Sequence[T], *, owned: bool = True
+    ) -> Proxy[T] | list[Proxy]:
+        """Place data in the session store, returning session-owned proxies.
+
+        Lists/tuples scatter element-wise (one proxy per element), matching
+        Dask's ``Client.scatter`` shape.
+        """
+        self._check_open()
+        if isinstance(data, (list, tuple)):
+            proxies = self.store.proxy_batch(list(data))
+            if owned:
+                for p in proxies:
+                    self._track(p)
+            return proxies
+        p = self.store.proxy(data)
+        return self._track(p) if owned else p
+
+    # -- uniform execution surface ----------------------------------------------
+
+    def submit(self, fn: Callable[..., T], /, *args: Any, **kwargs: Any) -> Future:
+        """Run ``fn`` on the session backend; always returns a Future."""
+        self._check_open()
+        if self._client is not None:
+            return self._client.submit(fn, *args, **kwargs)
+        if self._executor is not None:
+            return self._executor.submit(fn, *args, **kwargs)
+        return self._submit_inprocess(fn, *args, **kwargs)
+
+    def map(self, fn: Callable[..., T], *iterables: Iterable) -> list[Future]:
+        return [self.submit(fn, *args) for args in zip(*iterables)]
+
+    def gather(self, futures: Sequence[Future] | Future) -> list[Any] | Any:
+        if isinstance(futures, Future):
+            return futures.result()
+        return [f.result() for f in futures]
+
+    def as_completed(
+        self, futures: Iterable[Future], timeout: float | None = None
+    ) -> Iterator[Future]:
+        return as_completed(futures, timeout=timeout)
+
+    def _submit_inprocess(self, fn: Callable, /, *args: Any, **kwargs: Any) -> Future:
+        kwargs.pop("pure", None)
+        kwargs.pop("retries", None)
+        f: Future = Future()
+        try:
+            result = fn(*args, **kwargs)  # proxy args resolve transparently
+        except BaseException as exc:
+            f.set_exception(exc)
+            return f
+        if self.proxy_results and not is_proxy(result) and self.policy(result):
+            result = self._track(self.store.proxy(result))
+        f.set_result(result)
+        return f
+
+    # -- introspection -----------------------------------------------------------
+
+    def stats(self) -> dict[str, int]:
+        """Connector byte/op counters, when the connector keeps them."""
+        stats = getattr(self.store.connector, "stats", None)
+        return stats.snapshot() if stats is not None else {}
+
+    @property
+    def backend(self) -> str:
+        if self._client is not None:
+            return "cluster"
+        if self._executor is not None:
+            return "executor"
+        return "in-process"
+
+    # -- lifecycle ----------------------------------------------------------------
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise SessionClosedError(f"session {self.name!r} is closed")
+
+    def close(self) -> None:
+        """Evict session-owned proxies and release session-created resources.
+
+        A store the session built from a :class:`StoreConfig` is a
+        session-private namespace, so its connector is wiped wholesale --
+        this also reclaims result proxies minted worker-side, which the
+        client never sees and so cannot track key-by-key.  A borrowed live
+        ``Store`` (and the caller's cluster/executor) is left running; only
+        the keys this session minted are evicted from it.
+        """
+        if self._closed:
+            return
+        self._closed = True
+        for key in self._owned_keys.values():
+            try:
+                self.store.evict(key)
+            except Exception:  # connector already gone: nothing to leak
+                pass
+        self._owned_keys.clear()
+        if self._client is not None:
+            self._client.close()
+        if self._owns_store:
+            clear = getattr(self.store.connector, "clear", None)
+            if clear is not None:
+                try:
+                    clear()
+                except Exception:
+                    pass
+            self.store.close()
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __repr__(self) -> str:
+        state = "closed" if self._closed else "open"
+        return (
+            f"Session(name={self.name!r}, backend={self.backend!r}, "
+            f"store={self.store.name!r}, {state})"
+        )
+
+
+# -- session-tracking backend adapters ----------------------------------------
+#
+# Thin subclasses whose only job is to report client-side auto-minted arg
+# proxies back to the session, so session exit can evict them.
+
+
+class _SessionStoreExecutor(StoreExecutor):
+    def __init__(self, session: Session, *args: Any, **kwargs: Any):
+        super().__init__(*args, **kwargs)
+        self._session = session
+
+    def _maybe_proxy(self, obj: Any) -> Any:
+        out = super()._maybe_proxy(obj)
+        # One-shot arg proxies self-evict after first resolution; only
+        # lasting ones need session-lifetime scoping.
+        if out is not obj and is_proxy(out) and not self.evict_args_after_use:
+            self._session._track(out)
+        return out
+
+
+def _make_session_client(
+    session: Session, cluster: Any, *, store: Store, policy: Policy, proxy_results: bool
+):
+    from repro.runtime.client import ProxyClient
+
+    class _SessionProxyClient(ProxyClient):
+        def _maybe_proxy(self, obj: Any) -> Any:
+            out = super()._maybe_proxy(obj)
+            if out is not obj and is_proxy(out):
+                session._track(out)
+            return out
+
+    return _SessionProxyClient(
+        cluster, ps_store=store, should_proxy=policy, proxy_results=proxy_results
+    )

@@ -21,6 +21,7 @@ from repro.core.ownership import (
     release,
     transfer,
 )
+from repro.core.plugins import PluginRegistry, UnknownPluginError
 from repro.core.policy import (
     AllPolicy,
     AlwaysPolicy,
@@ -28,6 +29,9 @@ from repro.core.policy import (
     NeverPolicy,
     SizePolicy,
     TypePolicy,
+    list_policies,
+    policy_from_config,
+    register_policy,
 )
 from repro.core.proxy import (
     Factory,
@@ -50,6 +54,8 @@ from repro.core.store import (
     Store,
     get_or_create_store,
     get_store,
+    list_serializers,
+    register_serializer,
     register_store,
     unregister_store,
 )
@@ -68,8 +74,13 @@ __all__ = [
     "AlwaysPolicy",
     "AnyPolicy",
     "NeverPolicy",
+    "PluginRegistry",
     "SizePolicy",
     "TypePolicy",
+    "UnknownPluginError",
+    "list_policies",
+    "policy_from_config",
+    "register_policy",
     "Factory",
     "LambdaFactory",
     "Proxy",
@@ -88,6 +99,8 @@ __all__ = [
     "Store",
     "get_or_create_store",
     "get_store",
+    "list_serializers",
+    "register_serializer",
     "register_store",
     "unregister_store",
 ]

@@ -1,0 +1,42 @@
+"""Deprecation shims for the pre-``repro.api`` construction paths.
+
+Direct construction of ``Store`` / ``ProxyClient`` / ``StoreExecutor`` is
+deprecated in favour of the :class:`repro.api.Session` facade and typed
+configs.  The old call-sites must keep working, so the classes themselves
+stay; their ``__init__`` calls :func:`warn_legacy`, which is silenced when
+the construction happens *inside* the new API (or inside internal
+machinery such as ``Store.from_config`` re-opening a store on a worker).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import warnings
+from typing import Iterator
+
+_SUPPRESS: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_suppress_legacy_warnings", default=False
+)
+
+
+@contextlib.contextmanager
+def api_managed() -> Iterator[None]:
+    """Mark the enclosed constructions as driven by the new typed API."""
+    token = _SUPPRESS.set(True)
+    try:
+        yield
+    finally:
+        _SUPPRESS.reset(token)
+
+
+def warn_legacy(old: str, new: str) -> None:
+    """Emit a DeprecationWarning for a legacy construction path."""
+    if _SUPPRESS.get():
+        return
+    warnings.warn(
+        f"direct {old} construction is deprecated; use {new} "
+        "(the old call-sites keep working for now)",
+        DeprecationWarning,
+        stacklevel=3,
+    )

@@ -5,6 +5,8 @@ from repro.core.connectors.base import (
     ConnectorStats,
     Key,
     connector_from_config,
+    connector_registry,
+    list_connectors,
     register_connector,
 )
 from repro.core.connectors.file import FileConnector
@@ -19,6 +21,8 @@ __all__ = [
     "ConnectorStats",
     "Key",
     "connector_from_config",
+    "connector_registry",
+    "list_connectors",
     "register_connector",
     "FileConnector",
     "KVConnector",

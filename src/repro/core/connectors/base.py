@@ -13,6 +13,7 @@ import uuid
 from dataclasses import dataclass
 from typing import Any, Iterable, Protocol, Sequence, runtime_checkable
 
+from repro.core.plugins import PluginRegistry
 from repro.core.serialize import SerializedObject
 
 
@@ -109,25 +110,26 @@ class ConnectorStats:
             }
 
 
-_CONNECTOR_TYPES: dict[str, type] = {}
+connector_registry: PluginRegistry[type] = PluginRegistry("connector")
 
 
 def register_connector(name: str):
     """Class decorator registering a connector type for config round-trips."""
 
     def deco(cls: type) -> type:
-        _CONNECTOR_TYPES[name] = cls
+        connector_registry.register(name, cls)
         cls.connector_type = name
         return cls
 
     return deco
 
 
+def list_connectors() -> list[str]:
+    """Names of every registered connector type."""
+    return connector_registry.names()
+
+
 def connector_from_config(config: dict[str, Any]) -> "Connector":
     config = dict(config)
     kind = config.pop("connector_type")
-    try:
-        cls = _CONNECTOR_TYPES[kind]
-    except KeyError:
-        raise ValueError(f"unknown connector type {kind!r}") from None
-    return cls.from_config(config)
+    return connector_registry.get(kind).from_config(config)

@@ -83,6 +83,14 @@ class FileConnector:
     def close(self) -> None:
         pass
 
+    def clear(self) -> None:
+        """Remove every stored object (namespace-owner teardown)."""
+        for path in Path(self.store_dir).glob("*"):
+            try:
+                path.unlink()
+            except (FileNotFoundError, IsADirectoryError):
+                pass
+
     def config(self) -> dict[str, Any]:
         return {"connector_type": "file", "store_dir": self.store_dir}
 

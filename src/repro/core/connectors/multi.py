@@ -79,6 +79,12 @@ class MultiConnector:
         for _, conn in self.rules:
             conn.close()
 
+    def clear(self) -> None:
+        for _, conn in self.rules:
+            clear = getattr(conn, "clear", None)
+            if clear is not None:
+                clear()
+
     def config(self) -> dict[str, Any]:
         return {
             "connector_type": "multi",

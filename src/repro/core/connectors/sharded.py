@@ -174,6 +174,15 @@ class ShardedConnector:
     def close(self) -> None:
         pass
 
+    def clear(self) -> None:
+        """Remove every stored object across all shards."""
+        for s in range(self.num_shards):
+            for path in self._shard_dir(s).glob("*"):
+                try:
+                    path.unlink()
+                except (FileNotFoundError, IsADirectoryError):
+                    pass
+
     def config(self) -> dict[str, Any]:
         return {
             "connector_type": "sharded",

@@ -25,6 +25,19 @@ from repro.core.connectors.base import (
 )
 
 
+def _open_segment(
+    name: str, *, create: bool = False, size: int = 0
+) -> shared_memory.SharedMemory:
+    """Create/attach a segment; ``track=False`` (no resource-tracker unlink
+    races across processes) exists only on Python >= 3.13."""
+    try:
+        return shared_memory.SharedMemory(
+            name=name, create=create, size=size, track=False
+        )
+    except TypeError:
+        return shared_memory.SharedMemory(name=name, create=create, size=size)
+
+
 @register_connector("shm")
 class SharedMemoryConnector:
     def __init__(self, prefix: str = "psx", zero_copy: bool = False) -> None:
@@ -45,9 +58,7 @@ class SharedMemoryConnector:
         frames = [memoryview(f).cast("B") for f in payload_frames(data)]
         total = sum(f.nbytes for f in frames) or 1
         key = Key.new()
-        seg = shared_memory.SharedMemory(
-            name=self._name(key.object_id), create=True, size=total, track=False
-        )
+        seg = _open_segment(self._name(key.object_id), create=True, size=total)
         off = 0
         for f in frames:
             seg.buf[off : off + f.nbytes] = f
@@ -66,9 +77,7 @@ class SharedMemoryConnector:
         if seg is not None:
             return seg
         try:
-            seg = shared_memory.SharedMemory(
-                name=self._name(key.object_id), create=False, track=False
-            )
+            seg = _open_segment(self._name(key.object_id))
         except FileNotFoundError:
             return None
         with self._lock:
@@ -112,6 +121,22 @@ class SharedMemoryConnector:
         for seg in segs:
             try:
                 seg.close()
+            except Exception:
+                pass
+
+    def clear(self) -> None:
+        """Unlink every segment this connector is attached to.
+
+        Only locally-attached segments can be enumerated; segments created
+        by *other* processes under the same prefix are theirs to unlink.
+        """
+        with self._lock:
+            segs = list(self._attached.values())
+            self._attached.clear()
+        for seg in segs:
+            try:
+                seg.close()
+                seg.unlink()
             except Exception:
                 pass
 

@@ -19,6 +19,7 @@ import functools
 from concurrent.futures import Future
 from typing import Any, Callable, TypeVar
 
+from repro.core._deprecation import warn_legacy
 from repro.core.policy import Policy, SizePolicy
 from repro.core.proxy import Proxy, StoreFactory, TargetMetadata, is_proxy
 from repro.core.store import Store, get_or_create_store
@@ -62,6 +63,7 @@ class StoreExecutor:
         ownership: bool = False,
         evict_args_after_use: bool = True,
     ):
+        warn_legacy("StoreExecutor(...)", "repro.api.Session(executor=...)")
         self.executor = executor
         self.store = store
         self.should_proxy: Policy = should_proxy or SizePolicy(100_000)

@@ -13,7 +13,9 @@ import threading
 from collections import OrderedDict
 from typing import Any, Callable, Iterable, Sequence, TypeVar
 
+from repro.core._deprecation import api_managed, warn_legacy
 from repro.core.connectors.base import Connector, Key, connector_from_config
+from repro.core.plugins import PluginRegistry
 from repro.core.proxy import (
     Proxy,
     StoreFactory,
@@ -30,22 +32,32 @@ T = TypeVar("T")
 _REGISTRY: dict[str, "Store"] = {}
 _REGISTRY_LOCK = threading.Lock()
 
-_SERIALIZERS: dict[str, tuple[Callable, Callable]] = {
-    "default": (default_serializer, default_deserializer),
-}
+serializer_registry: PluginRegistry[tuple[Callable, Callable]] = PluginRegistry(
+    "serializer"
+)
+serializer_registry.register("default", (default_serializer, default_deserializer))
 
 
 def register_serializer(name: str, ser: Callable, deser: Callable) -> None:
-    _SERIALIZERS[name] = (ser, deser)
+    serializer_registry.register(name, (ser, deser))
 
 
-def _load_serializer(name: str) -> tuple[Callable, Callable]:
+def list_serializers() -> list[str]:
+    _ensure_lazy_serializers()
+    return serializer_registry.names()
+
+
+def _ensure_lazy_serializers() -> None:
     # Lazy-register the pickle baseline to avoid import cycles.
-    if name == "pickle" and "pickle" not in _SERIALIZERS:
+    if "pickle" not in serializer_registry:
         from repro.core.serialize import deserialize, pickle_serializer
 
         register_serializer("pickle", pickle_serializer, deserialize)
-    return _SERIALIZERS[name]
+
+
+def _load_serializer(name: str) -> tuple[Callable, Callable]:
+    _ensure_lazy_serializers()
+    return serializer_registry.get(name)
 
 
 class _LRUCache:
@@ -87,6 +99,7 @@ class Store:
         cache_size: int = 16,
         register: bool = True,
     ):
+        warn_legacy("Store(...)", "repro.api.StoreConfig(...).build() or repro.api.Session")
         self.name = name
         self.connector = connector
         self.serializer_name = serializer
@@ -108,13 +121,14 @@ class Store:
 
     @classmethod
     def from_config(cls, config: dict[str, Any]) -> "Store":
-        return cls(
-            config["name"],
-            connector_from_config(config["connector"]),
-            serializer=config.get("serializer", "default"),
-            cache_size=config.get("cache_size", 16),
-            register=False,
-        )
+        with api_managed():  # internal re-open, not a legacy call-site
+            return cls(
+                config["name"],
+                connector_from_config(config["connector"]),
+                serializer=config.get("serializer", "default"),
+                cache_size=config.get("cache_size", 16),
+                register=False,
+            )
 
     # -- byte-level ------------------------------------------------------------
 

@@ -20,8 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core import Store, is_proxy
-from repro.core.connectors import MemoryConnector, ShardedConnector
+from repro.api import ConnectorSpec, StoreConfig
+from repro.core import is_proxy
 from repro.distributed.sharding import ShardingRules
 from repro.models import transformer as tx
 from repro.models import whisper as wh
@@ -38,8 +38,11 @@ def serve(args) -> dict:
 
     # -- weights: from checkpoint store (lazy proxies) or fresh ---------------
     if args.run_dir:
-        connector = ShardedConnector(f"{args.run_dir}/objects", num_shards=8)
-        store = Store(f"train-{args.arch}", connector)
+        store = StoreConfig(
+            f"train-{args.arch}",
+            ConnectorSpec("sharded", store_dir=f"{args.run_dir}/objects",
+                          num_shards=8),
+        ).build(register=True)
         ckpt = CheckpointManager(store, f"{args.run_dir}/ckpt_index.json")
         restored = ckpt.restore_lazy()
         if restored is None:

@@ -25,8 +25,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core.connectors import MemoryConnector, ShardedConnector
-from repro.core.store import Store
+from repro.api import ConnectorSpec, StoreConfig
 from repro.distributed.sharding import ShardingRules
 from repro.models import transformer as tx
 from repro.train.checkpoint import CheckpointManager
@@ -59,10 +58,11 @@ def train(args) -> dict[str, Any]:
     run_dir = Path(args.run_dir)
     run_dir.mkdir(parents=True, exist_ok=True)
     if args.connector == "sharded":
-        connector = ShardedConnector(str(run_dir / "objects"), num_shards=8)
+        spec = ConnectorSpec("sharded", store_dir=str(run_dir / "objects"),
+                             num_shards=8)
     else:
-        connector = MemoryConnector(segment=f"train-{args.arch}")
-    store = Store(f"train-{args.arch}", connector)
+        spec = ConnectorSpec("memory", segment=f"train-{args.arch}")
+    store = StoreConfig(f"train-{args.arch}", spec).build(register=True)
     ckpt = CheckpointManager(store, str(run_dir / "ckpt_index.json"),
                              keep=args.keep_checkpoints)
 

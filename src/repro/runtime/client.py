@@ -17,6 +17,7 @@ import uuid
 from concurrent.futures import Future
 from typing import Any, Callable, Iterable, Sequence
 
+from repro.core._deprecation import warn_legacy
 from repro.core.executor import _proxy_result_task
 from repro.core.policy import Policy, SizePolicy
 from repro.core.proxy import is_proxy
@@ -204,6 +205,7 @@ class ProxyClient(Client):
         should_proxy: Policy | None = None,
         proxy_results: bool = True,
     ):
+        warn_legacy("ProxyClient(...)", "repro.api.Session(cluster=...)")
         super().__init__(cluster)
         self.store = ps_store
         self.should_proxy: Policy = should_proxy or SizePolicy(ps_threshold)

@@ -8,15 +8,16 @@ import uuid
 import numpy as np
 import pytest
 
-from repro.core.connectors import MemoryConnector
-from repro.core.store import Store, unregister_store
+from repro.api import ConnectorSpec, StoreConfig
+from repro.core.store import unregister_store
 
 
 @pytest.fixture
 def store():
     """A registered in-memory store on a fresh segment, cleaned up after."""
     seg = f"test-{uuid.uuid4().hex[:8]}"
-    s = Store("test-store", MemoryConnector(segment=seg), register=True)
+    cfg = StoreConfig("test-store", ConnectorSpec("memory", segment=seg))
+    s = cfg.build(register=True)
     yield s
     s.connector.clear()
     s.close()
@@ -25,11 +26,11 @@ def store():
 
 @pytest.fixture
 def unregistered_store():
-    s = Store(
+    cfg = StoreConfig(
         "test-store-unreg",
-        MemoryConnector(segment=f"test-{uuid.uuid4().hex[:8]}"),
-        register=False,
+        ConnectorSpec("memory", segment=f"test-{uuid.uuid4().hex[:8]}"),
     )
+    s = cfg.build(register=False)
     yield s
     s.connector.clear()
 

@@ -1,0 +1,327 @@
+"""Tests for the unified ``repro.api`` layer.
+
+Covers: typed spec round-trips (incl. every registered connector), plugin
+registry lookup/errors, the Session facade over all three backends,
+session-exit eviction, and the deprecation shims on the legacy
+constructors.
+"""
+
+from __future__ import annotations
+
+import uuid
+import warnings
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ConnectorSpec,
+    PolicySpec,
+    Session,
+    SpecValidationError,
+    StoreConfig,
+    UnknownPluginError,
+    list_connectors,
+    list_policies,
+)
+from repro.api.session import SessionClosedError
+from repro.core import is_proxy, resolve
+from repro.core.connectors.kv import KVServer
+from repro.core.policy import policy_from_config
+from repro.core.store import Store
+
+
+def seg() -> str:
+    return f"api-test-{uuid.uuid4().hex[:8]}"
+
+
+# -- connector specs for every registered connector ----------------------------
+
+
+@pytest.fixture(scope="module")
+def kv_server():
+    server = KVServer().start()
+    yield server
+    server.stop()
+
+
+def connector_spec(kind: str, tmp_path, kv_server) -> ConnectorSpec:
+    host, port = kv_server.address
+    return {
+        "memory": lambda: ConnectorSpec("memory", segment=seg()),
+        "file": lambda: ConnectorSpec("file", store_dir=str(tmp_path / "file")),
+        "shm": lambda: ConnectorSpec("shm", prefix=f"t{uuid.uuid4().hex[:6]}"),
+        "kv": lambda: ConnectorSpec("kv", host=host, port=port),
+        "sharded": lambda: ConnectorSpec(
+            "sharded", store_dir=str(tmp_path / "pool"), num_shards=2
+        ),
+        "multi": lambda: ConnectorSpec(
+            "multi",
+            rules=[
+                [1024, ConnectorSpec("memory", segment=seg())],
+                [None, ConnectorSpec("file", store_dir=str(tmp_path / "big"))],
+            ],
+        ),
+    }[kind]()
+
+
+def test_all_builtin_connectors_registered():
+    assert {"memory", "file", "shm", "kv", "multi", "sharded"} <= set(
+        list_connectors()
+    )
+
+
+@pytest.mark.parametrize("kind", ["memory", "file", "shm", "kv", "multi", "sharded"])
+def test_store_config_round_trips_every_connector(kind, tmp_path, kv_server):
+    """Acceptance: Store.from_config(StoreConfig(...).to_dict()) round-trips."""
+    cfg = StoreConfig(f"rt-{kind}", connector_spec(kind, tmp_path, kv_server))
+
+    # spec-level round-trip is lossless
+    assert StoreConfig.from_dict(cfg.to_dict()) == cfg
+
+    # and the dict is exactly what the legacy loader consumes
+    store = Store.from_config(cfg.to_dict())
+    try:
+        key = store.put({"x": list(range(10))})
+        assert store.get(key) == {"x": list(range(10))}
+        # a store built this way reports the same config it came from
+        assert Store.from_config(store.config()).config() == store.config()
+    finally:
+        store.connector.close()
+
+
+def test_connector_spec_unknown_name():
+    with pytest.raises(UnknownPluginError, match="unknown connector 'redis'"):
+        ConnectorSpec("redis", host="localhost")
+
+
+def test_connector_spec_bad_params():
+    with pytest.raises(SpecValidationError, match="does not accept params"):
+        ConnectorSpec("memory", segmnt="typo")
+    with pytest.raises(SpecValidationError):  # missing required param
+        ConnectorSpec("file")
+
+
+def test_policy_spec_round_trip_and_build():
+    spec = PolicySpec(
+        "all",
+        policies=[
+            PolicySpec("type", types=["numpy.ndarray"]),
+            PolicySpec("size", threshold=64),
+        ],
+    )
+    assert PolicySpec.from_dict(spec.to_dict()) == spec
+
+    policy = spec.build()
+    assert policy(np.zeros(1000))
+    assert not policy(b"\0" * 1000)  # right size, wrong type
+    assert not policy(np.zeros(1))  # right type, too small
+
+    # the built policy's own config() round-trips through the registry
+    assert policy_from_config(policy.config()).config() == policy.config()
+
+
+def test_policy_spec_unknown_name_lists_known():
+    with pytest.raises(UnknownPluginError) as err:
+        PolicySpec("sized")
+    for name in ("size", "type", "never", "always"):
+        assert name in str(err.value)
+    assert {"size", "type", "all", "any", "never", "always"} <= set(list_policies())
+
+
+def test_store_config_validation_errors():
+    with pytest.raises(SpecValidationError):
+        StoreConfig("", ConnectorSpec("memory"))
+    with pytest.raises(UnknownPluginError, match="serializer"):
+        StoreConfig("s", ConnectorSpec("memory"), serializer="nope")
+
+
+# -- Session facade ------------------------------------------------------------
+
+
+def double(x):
+    return np.asarray(x) * 2
+
+
+def test_session_inprocess_submit_map_gather():
+    with Session(policy=PolicySpec("size", threshold=100)) as s:
+        assert s.backend == "in-process"
+        f = s.submit(double, np.arange(8))
+        assert np.array_equal(f.result(), np.arange(8) * 2)
+        futures = s.map(double, [np.arange(4), np.arange(6)])
+        a, b = s.gather(futures)
+        assert np.array_equal(np.asarray(a), np.arange(4) * 2)
+        assert np.array_equal(np.asarray(b), np.arange(6) * 2)
+
+
+def test_session_inprocess_error_propagates():
+    with Session() as s:
+        f = s.submit(lambda: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            f.result()
+
+
+def test_session_scatter_and_as_completed():
+    with Session(policy="never") as s:
+        proxies = s.scatter([np.arange(10), np.arange(20), np.arange(30)])
+        assert len(proxies) == 3 and all(is_proxy(p) for p in proxies)
+        assert s.owned_count() == 3
+        futures = [s.submit(lambda x: int(np.asarray(x).sum()), p) for p in proxies]
+        done = list(s.as_completed(futures))
+        assert sorted(f.result() for f in done) == sorted(
+            int(np.arange(n).sum()) for n in (10, 20, 30)
+        )
+
+
+def test_session_exit_evicts_owned_proxies():
+    s = Session(policy="never")
+    store = s.store
+    p = s.scatter(np.arange(100))
+    key = _factory_key(p)
+    assert store.exists(key)
+    s.close()
+    assert not store.connector.exists(key)
+    with pytest.raises(SessionClosedError):
+        s.scatter(np.arange(3))
+
+
+def test_specs_are_hashable_value_objects():
+    a = ConnectorSpec("memory", segment="h1")
+    b = ConnectorSpec("memory", segment="h1")
+    assert a == b and hash(a) == hash(b)
+    assert len({a, b, ConnectorSpec("memory", segment="h2")}) == 2
+    assert hash(PolicySpec("size", threshold=1)) != hash(
+        PolicySpec("size", threshold=2)
+    )
+
+
+def test_session_owned_store_wipes_worker_minted_results(tmp_path):
+    """Result proxies minted worker-side are reclaimed by session close."""
+    cfg = StoreConfig(
+        f"wipe-{uuid.uuid4().hex[:6]}",
+        ConnectorSpec("sharded", store_dir=str(tmp_path / "pool"), num_shards=2),
+    )
+    with ThreadPoolExecutor(1) as pool:
+        s = Session(executor=pool, store=cfg, policy=PolicySpec("size", threshold=100))
+        big = np.random.default_rng(3).normal(size=(64, 64))
+        out = s.submit(lambda x: np.asarray(x) * 2, big).result()
+        assert is_proxy(out)  # stored worker-side, never tracked client-side
+        assert any((tmp_path / "pool").rglob("*"))
+        s.close()
+    leftover = [p for p in (tmp_path / "pool").rglob("*") if p.is_file()]
+    assert leftover == []
+
+
+def test_session_borrowed_store_survives_close(store):
+    """Closing a session around a live Store evicts owned keys only."""
+    s = Session(store=store, policy="never")
+    p = s.scatter(np.arange(50))
+    key = _factory_key(p)
+    unowned_key = store.put(b"keep me")
+    s.close()
+    assert not store.exists(key)  # session-owned: gone
+    assert store.get(unowned_key) is not None  # not session-owned: kept
+    assert store.connector is not None  # store itself still open
+
+
+def test_session_over_executor_proxies_args_and_results():
+    with ThreadPoolExecutor(2) as pool:
+        with Session(
+            executor=pool, policy=PolicySpec("size", threshold=1000)
+        ) as s:
+            assert s.backend == "executor"
+            big = np.random.default_rng(0).normal(size=(64, 64))
+            f = s.submit(lambda x: np.asarray(x) @ np.asarray(x).T, big)
+            out = f.result()
+            assert is_proxy(out)  # large result came back by proxy
+            assert np.allclose(np.asarray(out), big @ big.T)
+
+
+def test_session_over_cluster(cluster):
+    with Session(cluster=cluster, policy=PolicySpec("size", threshold=1000)) as s:
+        assert s.backend == "cluster"
+        data = np.random.default_rng(1).normal(size=(100, 100))
+        f = s.submit(lambda x: float(np.asarray(x).sum()), data)
+        assert abs(f.result() - float(data.sum())) < 1e-6
+        # the big argument travelled by proxy and is session-owned
+        assert s.owned_count() >= 1
+        assert s.stats().get("puts", 0) >= 1
+
+
+def test_session_cluster_exit_evicts_auto_proxied_args(cluster):
+    s = Session(cluster=cluster, policy=PolicySpec("size", threshold=1000))
+    store = s.store
+    data = np.random.default_rng(2).normal(size=(100, 100))
+    f = s.submit(lambda x: float(np.asarray(x).sum()), data)
+    f.result()
+    keys = [k for k in s._owned_keys.values()]
+    assert keys and all(store.exists(k) for k in keys)
+    s.close()
+    assert all(not store.connector.exists(k) for k in keys)
+
+
+def test_session_rejects_cluster_and_executor(cluster):
+    with ThreadPoolExecutor(1) as pool:
+        with pytest.raises(ValueError, match="not both"):
+            Session(cluster=cluster, executor=pool)
+
+
+def _factory_key(p):
+    from repro.core.proxy import get_factory
+
+    return get_factory(p).key
+
+
+# -- deprecation shims ---------------------------------------------------------
+
+
+def test_legacy_store_construction_warns_and_works():
+    from repro.core.connectors import MemoryConnector
+
+    with pytest.warns(DeprecationWarning, match="Store"):
+        s = Store("legacy", MemoryConnector(segment=seg()), register=False)
+    p = s.proxy(np.arange(32))
+    assert np.array_equal(resolve(p), np.arange(32))
+    s.connector.close()
+
+
+def test_legacy_store_executor_warns_and_works():
+    from repro.core.connectors import MemoryConnector
+    from repro.core.executor import StoreExecutor
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        store = Store("legacy-exec", MemoryConnector(segment=seg()), register=False)
+    with ThreadPoolExecutor(1) as pool:
+        with pytest.warns(DeprecationWarning, match="StoreExecutor"):
+            ex = StoreExecutor(pool, store)
+        assert ex.submit(lambda x: x + 1, 41).result() == 42
+    store.connector.close()
+
+
+def test_legacy_proxy_client_warns_and_works(cluster):
+    from repro.core.connectors import MemoryConnector
+    from repro.runtime.client import ProxyClient
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        store = Store("legacy-pc", MemoryConnector(segment=seg()), register=False)
+    with pytest.warns(DeprecationWarning, match="ProxyClient"):
+        client = ProxyClient(cluster, ps_store=store, ps_threshold=100)
+    try:
+        assert client.submit(lambda x: x * 2, 21).result() == 42
+    finally:
+        client.close()
+        store.connector.close()
+
+
+def test_new_api_paths_do_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg = StoreConfig("quiet", ConnectorSpec("memory", segment=seg()))
+        store = cfg.build()
+        Store.from_config(cfg.to_dict()).connector.close()
+        with Session(store=store):
+            pass
+        store.connector.close()

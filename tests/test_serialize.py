@@ -6,7 +6,12 @@ import pickle
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep (pip install -e .[test])
+    # Property tests skip cleanly; the rest of the module still runs.
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.serialize import (
     SerializedObject,

@@ -11,20 +11,21 @@ import math
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, NamedSharding
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, list_archs
 from repro.distributed.sharding import ShardingRules
+from repro.distributed.sharding import abstract_mesh as make_abstract_mesh
 from repro.models import transformer as tx
 from repro.models import whisper as wh
 from repro.train.train_step import init_train_state
 
 
-def abstract_mesh(multi_pod: bool = False) -> AbstractMesh:
+def abstract_mesh(multi_pod: bool = False):
     if multi_pod:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 def _axis_size(mesh, axis) -> int:
