@@ -20,8 +20,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import QUICK, bench_store_config, record, save_artifact
-from repro.api import PolicySpec, Session
+from benchmarks.common import QUICK, bench_session, record, save_artifact
 from repro.runtime.client import LocalCluster
 
 # -- cholesky -------------------------------------------------------------------
@@ -145,19 +144,17 @@ def _run_app(name, fn, *args) -> dict:
                 "in_bytes"
             ]
 
-    with LocalCluster(n_workers=4) as cluster:
-        with Session(
-            cluster=cluster,
-            store=bench_store_config(f"bench-{name}"),
-            policy=PolicySpec("size", threshold=50_000),
-        ) as proxy:
-            t0 = time.perf_counter()
-            fn(proxy, *args)
-            res["proxy_s"] = time.perf_counter() - t0
-            res["proxy_sched_bytes"] = cluster.scheduler.bytes_through()[
-                "in_bytes"
-            ]
-        # session exit wiped the session-owned store
+    # The proxy side rides the one-knob backend (BENCH_BACKEND); the session
+    # owns its cluster, so exit also wipes the data plane and the store.
+    with bench_session(f"bench-{name}", policy_threshold=50_000, n_workers=4) as proxy:
+        t0 = time.perf_counter()
+        fn(proxy, *args)
+        res["proxy_s"] = time.perf_counter() - t0
+        res["proxy_sched_bytes"] = (
+            proxy.cluster.scheduler.bytes_through()["in_bytes"]
+            if proxy.cluster is not None
+            else 0
+        )
 
     res["speedup"] = res["baseline_s"] / res["proxy_s"]
     record(

@@ -10,11 +10,37 @@ import uuid
 from pathlib import Path
 from typing import Any, Callable
 
-from repro.api import ConnectorSpec, StoreConfig
+from repro.api import ClusterSpec, ConnectorSpec, PolicySpec, Session, StoreConfig
 
 ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 
 QUICK = os.environ.get("BENCH_QUICK", "") == "1"
+
+#: One-knob execution backend for benchmarks that don't need a raw client:
+#: BENCH_BACKEND=in-process|executor|cluster (default cluster).
+BACKEND = os.environ.get("BENCH_BACKEND", "cluster")
+
+
+def bench_session(
+    prefix: str,
+    *,
+    policy_threshold: int = 100_000,
+    n_workers: int = 2,
+    **spec_kw: Any,
+) -> Session:
+    """Session on the ``BENCH_BACKEND`` knob, owning its store *and* its
+    backend -- teardown (including cluster data-plane eviction) is the
+    session's problem, not the benchmark's."""
+    store = bench_store_config(prefix)
+    policy = PolicySpec("size", threshold=policy_threshold)
+    if BACKEND == "cluster":
+        return Session(
+            backend="cluster",
+            cluster=ClusterSpec(n_workers=n_workers, **spec_kw),
+            store=store,
+            policy=policy,
+        )
+    return Session(backend=BACKEND, store=store, policy=policy)
 
 
 def bench_store_config(prefix: str, connector: str = "memory", **params: Any) -> StoreConfig:

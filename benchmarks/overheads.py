@@ -1,20 +1,25 @@
-"""Paper Fig 3: no-op task round-trip time vs payload size.
+"""Paper Fig 3: no-op task round-trip time vs payload size, plus the hub
+byte attribution behind it.
 
-Worst case for the scheduler: every byte flows client -> scheduler ->
-worker -> scheduler -> client and nothing is reused.  ``baseline`` embeds
-payloads in the task graph; ``proxystore`` passes references (SizePolicy(0):
-*everything* is proxied, so the sub-100kB fixed proxy overhead is visible,
-exactly as in the paper's figure).
+Worst case for the scheduler: every payload is fresh and nothing is
+reused.  ``baseline`` embeds payloads in the task graph, so the bytes
+cross the scheduler mailbox on submit and dispatch; ``proxystore`` passes
+references (SizePolicy(0): *everything* is proxied, so the sub-100kB
+fixed proxy overhead is visible, exactly as in the paper's figure).
+
+Since the runtime's data plane went peer-to-peer, task *results* pass by
+reference on both paths -- no result blob ever crosses the scheduler
+mailbox.  This module reports, per payload size, the measured
+``in_bytes + out_bytes`` through the scheduler for both paths and the
+reduction ratio; the acceptance bar is a >=10x drop at >=1 MiB payloads.
 """
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from benchmarks.common import QUICK, bench_store_config, record, save_artifact, timeit
-from repro.api import PolicySpec, Session
+from repro.api import ClusterSpec, PolicySpec, Session
 from repro.runtime.client import LocalCluster
 
 
@@ -25,10 +30,30 @@ def identity(x):
 PAYLOADS = [1_000, 10_000, 100_000, 1_000_000, 10_000_000]
 
 
-def run() -> dict:
-    payloads = PAYLOADS[:3] if QUICK else PAYLOADS
-    reps = 3 if QUICK else 7
-    out: dict = {"payload_bytes": payloads, "baseline_s": [], "proxy_s": []}
+def _hub_bytes(cluster: LocalCluster) -> int:
+    snap = cluster.scheduler.bytes_through()
+    return snap["in_bytes"] + snap["out_bytes"]
+
+
+def _measure(cluster, submit, data, reps: int) -> tuple[float, float]:
+    """Median RTT and mean hub bytes per task (warmup included in bytes)."""
+    hub0 = _hub_bytes(cluster)
+    t = timeit(lambda: submit(identity, data, pure=False).result(), reps=reps)
+    per_task = (_hub_bytes(cluster) - hub0) / (reps + 1)  # +1 warmup
+    return t["median"], per_task
+
+
+def run(payloads: list[int] | None = None, reps: int | None = None) -> dict:
+    payloads = payloads if payloads is not None else (PAYLOADS[:3] if QUICK else PAYLOADS)
+    reps = reps if reps is not None else (3 if QUICK else 7)
+    out: dict = {
+        "payload_bytes": payloads,
+        "baseline_s": [],
+        "proxy_s": [],
+        "baseline_hub_bytes": [],
+        "proxy_hub_bytes": [],
+        "hub_reduction": [],
+    }
 
     with LocalCluster(n_workers=1) as cluster:
         base = cluster.get_client()
@@ -41,24 +66,85 @@ def run() -> dict:
         for nbytes in payloads:
             data = np.random.default_rng(0).bytes(nbytes)
 
-            t_base = timeit(
-                lambda: base.submit(identity, data, pure=False).result(),
-                reps=reps,
-            )["median"]
-            t_proxy = timeit(
-                lambda: proxy.submit(identity, data, pure=False).result(),
-                reps=reps,
-            )["median"]
+            t_base, hub_base = _measure(cluster, base.submit, data, reps)
+            t_proxy, hub_proxy = _measure(cluster, proxy.submit, data, reps)
 
             out["baseline_s"].append(t_base)
             out["proxy_s"].append(t_proxy)
+            out["baseline_hub_bytes"].append(hub_base)
+            out["proxy_hub_bytes"].append(hub_proxy)
+            reduction = hub_base / max(hub_proxy, 1)
+            out["hub_reduction"].append(reduction)
             improvement = 100.0 * (1 - t_proxy / t_base)
             record(
                 f"fig3/rtt/{nbytes}B/baseline", t_base * 1e6,
                 f"proxy={t_proxy*1e6:.0f}us improvement={improvement:.0f}%",
             )
+            record(
+                f"fig3/hub_bytes/{nbytes}B/baseline", hub_base,
+                f"proxy={hub_proxy:.0f}B reduction={reduction:.1f}x",
+            )
+
+        # Result-path invariant: a task *producing* a large result adds only
+        # metadata to the hub (bytes travel the peer-to-peer data plane).
+        big = 1_000_000
+        hub0 = _hub_bytes(cluster)
+        base.submit(np.random.default_rng(1).bytes, big, pure=False).result()
+        out["result_ref_hub_bytes"] = _hub_bytes(cluster) - hub0
+        record(
+            f"fig3/result_by_ref/{big}B", out["result_ref_hub_bytes"],
+            f"result blob ({big}B) never crossed the scheduler",
+        )
+
         proxy.close()
         base.close()
 
     save_artifact("fig3_overheads", out)
     return out
+
+
+def smoke(payload: int = 65_536, reps: int = 3) -> bool:
+    """CI guard: tiny-payload overheads on the cluster backend.
+
+    Fails (returns False) when the data-plane invariants regress:
+    pass-by-proxy must cut scheduler bytes >=10x versus embedding the
+    payload, and large task results must travel by reference.
+    """
+    spec = ClusterSpec(n_workers=2, inline_result_max=1024)
+    cluster = spec.build()
+    ok = True
+    try:
+        base = cluster.get_client()
+        proxy = Session(
+            cluster=cluster,
+            store=bench_store_config("smoke-rtt"),
+            policy=PolicySpec("size", threshold=0),
+        )
+        data = np.random.default_rng(0).bytes(payload)
+        t_base, hub_base = _measure(cluster, base.submit, data, reps)
+        t_proxy, hub_proxy = _measure(cluster, proxy.submit, data, reps)
+        reduction = hub_base / max(hub_proxy, 1)
+        record(
+            f"smoke/hub_bytes/{payload}B/baseline", hub_base,
+            f"proxy={hub_proxy:.0f}B reduction={reduction:.1f}x",
+        )
+        if reduction < 10:
+            print(f"# SMOKE FAIL: hub-byte reduction {reduction:.1f}x < 10x")
+            ok = False
+
+        hub0 = _hub_bytes(cluster)
+        fut = base.submit(np.random.default_rng(1).bytes, payload, pure=False)
+        fut.result()
+        result_hub = _hub_bytes(cluster) - hub0
+        record(f"smoke/result_by_ref/{payload}B", result_hub, "")
+        if result_hub > payload // 2:
+            print(
+                f"# SMOKE FAIL: {result_hub}B crossed the scheduler for a "
+                f"{payload}B result -- result blobs must pass by reference"
+            )
+            ok = False
+        proxy.close()
+        base.close()
+    finally:
+        cluster.close()
+    return ok

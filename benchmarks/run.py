@@ -6,6 +6,12 @@ Prints ``name,us_per_call,derived`` CSV rows and writes JSON artifacts under
     PYTHONPATH=src python -m benchmarks.run              # everything
     PYTHONPATH=src python -m benchmarks.run fig3 fig5    # a subset
     BENCH_QUICK=1 ... python -m benchmarks.run           # CI-sized
+    PYTHONPATH=src python -m benchmarks.run --smoke      # CI data-plane guard
+
+``--smoke`` runs the Fig-3 overheads with tiny payloads on the cluster
+backend and exits non-zero when a data-plane invariant regresses
+(scheduler hub-byte reduction, results-by-reference) -- wired into
+``scripts/ci.sh`` so regressions fail CI.
 """
 
 from __future__ import annotations
@@ -17,6 +23,14 @@ SUITES = ("serializer", "fig3", "fig4", "fig5", "roofline")
 
 
 def main() -> None:
+    if "--smoke" in sys.argv:
+        from benchmarks import overheads
+
+        print("name,us_per_call,derived")
+        ok = overheads.smoke()
+        print(f"# smoke {'PASS' if ok else 'FAIL'}", flush=True)
+        sys.exit(0 if ok else 1)
+
     picked = [a for a in sys.argv[1:] if not a.startswith("-")] or list(SUITES)
     t0 = time.perf_counter()
     print("name,us_per_call,derived")

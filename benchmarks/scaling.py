@@ -6,6 +6,10 @@ moves those bytes through mediated storage and the scheduler handles only
 references.  (On this 1-core container absolute throughput is modest; the
 *relative* curve -- proxy sustains higher throughput as n grows -- is the
 paper's claim and is what we assert.)
+
+Clusters are built from a :class:`ClusterSpec` (the ``Session`` backend
+knob), and the per-run attribution now includes the peer-to-peer data
+plane: scheduler hub bytes vs direct worker-to-worker bytes.
 """
 
 from __future__ import annotations
@@ -15,8 +19,7 @@ import time
 import numpy as np
 
 from benchmarks.common import QUICK, bench_store_config, record, save_artifact
-from repro.api import PolicySpec, Session
-from repro.runtime.client import LocalCluster
+from repro.api import ClusterSpec, PolicySpec, Session
 
 PAYLOAD = 1_000_000
 
@@ -24,7 +27,6 @@ PAYLOAD = 1_000_000
 def one_mb_task(x):
     _ = np.asarray(x)  # consume 1 MB
     return np.random.default_rng(0).bytes(PAYLOAD)  # produce 1 MB
-
 
 def _throughput(client, n_tasks: int) -> float:
     data = np.random.default_rng(1).bytes(PAYLOAD)
@@ -38,10 +40,16 @@ def _throughput(client, n_tasks: int) -> float:
 def run() -> dict:
     workers = [1, 2, 4] if QUICK else [1, 2, 4, 8, 16]
     n_tasks = 40 if QUICK else 120
-    out: dict = {"workers": workers, "baseline_tps": [], "proxy_tps": []}
+    out: dict = {
+        "workers": workers,
+        "baseline_tps": [],
+        "proxy_tps": [],
+        "hub_bytes": [],
+        "peer_bytes": [],
+    }
 
     for n in workers:
-        with LocalCluster(n_workers=n) as cluster:
+        with ClusterSpec(n_workers=n).build() as cluster:
             with cluster.get_client() as base:
                 base_tps = _throughput(base, n_tasks)
             with Session(
@@ -51,6 +59,9 @@ def run() -> dict:
             ) as proxy:
                 proxy_tps = _throughput(proxy, n_tasks)
             # session exit wiped the session-owned store
+            snap = cluster.scheduler.bytes_through()
+            out["hub_bytes"].append(snap["in_bytes"] + snap["out_bytes"])
+            out["peer_bytes"].append(cluster.transfers.snapshot()["peer_bytes"])
 
         out["baseline_tps"].append(base_tps)
         out["proxy_tps"].append(proxy_tps)

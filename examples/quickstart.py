@@ -13,7 +13,7 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
-from repro.api import ConnectorSpec, PolicySpec, Session, StoreConfig
+from repro.api import ClusterSpec, ConnectorSpec, PolicySpec, Session, StoreConfig
 from repro.core import is_proxy
 from repro.runtime.client import LocalCluster
 
@@ -23,12 +23,15 @@ def main() -> None:
 
     # ---- (a) manual proxies: scatter once, pass references -------------------
     # policy="never" disables auto-proxying; you decide what is a reference.
-    with LocalCluster(n_workers=2) as cluster:
-        with Session(cluster=cluster, policy="never") as s:
-            proxy = s.scatter(data)            # cheap wide-area reference
-            future = s.submit(lambda x: float(np.asarray(x).sum()), proxy)
-            print("(a) manual proxy     :", round(future.result(), 3))
-        # <- session exit evicted the scattered object
+    # backend="cluster" makes the session build (and own) the distributed
+    # runtime from a declarative ClusterSpec -- the one-knob backend flip.
+    with Session(
+        backend="cluster", cluster=ClusterSpec(n_workers=2), policy="never"
+    ) as s:
+        proxy = s.scatter(data)            # cheap wide-area reference
+        future = s.submit(lambda x: float(np.asarray(x).sum()), proxy)
+        print("(a) manual proxy     :", round(future.result(), 3))
+    # <- session exit evicted the scattered object and closed the cluster
 
     # ---- (b) drop-in client: auto-proxy above a size threshold ---------------
     with LocalCluster(n_workers=2) as cluster:

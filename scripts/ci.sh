@@ -1,9 +1,14 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the whole suite, one command, no manual PYTHONPATH.
+# Tier-1 verification: the whole suite + the data-plane smoke benchmark.
 # (pyproject.toml sets pythonpath=src for pytest; the env var below keeps
-# the command working even under pytest<7 or when invoked from elsewhere.)
+# the commands working even under pytest<7 or when invoked from elsewhere.)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+
+# Data-plane regression guard: tiny-payload overheads on the cluster
+# backend; fails when scheduler bytes stop dropping or results stop
+# passing by reference.
+BENCH_QUICK=1 python -m benchmarks.run --smoke

@@ -23,6 +23,7 @@ construction still works but emits :class:`DeprecationWarning`.
 """
 
 from repro.api.config import (
+    ClusterSpec,
     ConnectorSpec,
     PolicySpec,
     SpecValidationError,
@@ -43,6 +44,7 @@ from repro.core.policy import (
 from repro.core.store import list_serializers, register_serializer
 
 __all__ = [
+    "ClusterSpec",
     "ConnectorSpec",
     "PolicySpec",
     "SpecValidationError",

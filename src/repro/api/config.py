@@ -21,7 +21,12 @@ from dataclasses import dataclass, field
 from typing import Any, ClassVar, Mapping
 
 from repro.core._deprecation import api_managed
-from repro.core.connectors.base import Connector, connector_registry
+from repro.core.connectors.base import (
+    PEER_CAPABILITY,
+    Connector,
+    connector_capabilities,
+    connector_registry,
+)
 from repro.core.plugins import UnknownPluginError
 from repro.core.policy import Policy, policy_registry
 from repro.core.store import Store, serializer_registry
@@ -264,3 +269,121 @@ class StoreConfig:
                 cache_size=self.cache_size,
                 register=register,
             )
+
+
+@dataclass(frozen=True, init=False)
+class ClusterSpec:
+    """Declarative description of a :class:`repro.runtime.client.LocalCluster`.
+
+    The ``Session(backend="cluster")`` knob: scheduler sizing, speculation
+    and fault-tolerance tuning, the inline-result threshold, and the data
+    plane's connector all travel by value and round-trip through
+    ``to_dict``/``from_dict`` like the other specs.
+
+    ``data_plane`` names the connector backing the cluster's shared result
+    namespace; it must have the ``peer`` capability (deterministic-key
+    ``put_at``), which is what keeps speculative duplicate publishes
+    idempotent.  ``None`` (the default) means a cluster-private in-memory
+    segment created at build time.
+    """
+
+    n_workers: int = 2
+    threads_per_worker: int = 1
+    heartbeat_timeout: float = 5.0
+    speculation_factor: float = 4.0
+    speculation_min: float = 1.0
+    inline_result_max: int = 64 * 1024
+    worker_cache_bytes: int = 256 * 1024 * 1024
+    data_plane: ConnectorSpec | None = None
+
+    def __init__(
+        self,
+        n_workers: int = 2,
+        *,
+        threads_per_worker: int = 1,
+        heartbeat_timeout: float = 5.0,
+        speculation_factor: float = 4.0,
+        speculation_min: float = 1.0,
+        inline_result_max: int = 64 * 1024,
+        worker_cache_bytes: int = 256 * 1024 * 1024,
+        data_plane: ConnectorSpec | Mapping[str, Any] | str | None = None,
+    ):
+        if isinstance(data_plane, str):
+            data_plane = ConnectorSpec(data_plane)
+        elif isinstance(data_plane, Mapping):
+            data_plane = ConnectorSpec.from_dict(data_plane)
+        object.__setattr__(self, "n_workers", int(n_workers))
+        object.__setattr__(self, "threads_per_worker", int(threads_per_worker))
+        object.__setattr__(self, "heartbeat_timeout", float(heartbeat_timeout))
+        object.__setattr__(self, "speculation_factor", float(speculation_factor))
+        object.__setattr__(self, "speculation_min", float(speculation_min))
+        object.__setattr__(self, "inline_result_max", int(inline_result_max))
+        object.__setattr__(self, "worker_cache_bytes", int(worker_cache_bytes))
+        object.__setattr__(self, "data_plane", data_plane)
+        self.validate()
+
+    def validate(self) -> None:
+        if self.n_workers < 1:
+            raise SpecValidationError("n_workers must be >= 1")
+        if self.threads_per_worker < 1:
+            raise SpecValidationError("threads_per_worker must be >= 1")
+        if self.inline_result_max < 0:
+            raise SpecValidationError("inline_result_max must be >= 0")
+        if self.worker_cache_bytes < 0:
+            raise SpecValidationError("worker_cache_bytes must be >= 0")
+        if self.data_plane is not None:
+            self.data_plane.validate()
+            if PEER_CAPABILITY not in connector_capabilities(self.data_plane.kind):
+                raise SpecValidationError(
+                    f"connector {self.data_plane.kind!r} lacks the "
+                    f"{PEER_CAPABILITY!r} capability (deterministic-key "
+                    "put_at) required for the cluster data plane"
+                )
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "n_workers": self.n_workers,
+            "threads_per_worker": self.threads_per_worker,
+            "heartbeat_timeout": self.heartbeat_timeout,
+            "speculation_factor": self.speculation_factor,
+            "speculation_min": self.speculation_min,
+            "inline_result_max": self.inline_result_max,
+            "worker_cache_bytes": self.worker_cache_bytes,
+            "data_plane": (
+                self.data_plane.to_dict() if self.data_plane is not None else None
+            ),
+        }
+
+    @classmethod
+    def from_dict(cls, config: Mapping[str, Any]) -> "ClusterSpec":
+        config = dict(config)
+        data_plane = config.pop("data_plane", None)
+        return cls(
+            config.pop("n_workers", 2),
+            data_plane=(
+                ConnectorSpec.from_dict(data_plane) if data_plane else None
+            ),
+            **config,
+        )
+
+    def build(self) -> Any:
+        """Instantiate a live LocalCluster from this spec."""
+        from repro.runtime.client import LocalCluster
+
+        store = None
+        if self.data_plane is not None:
+            import uuid as _uuid
+
+            store = StoreConfig(
+                f"cluster-{_uuid.uuid4().hex[:8]}", self.data_plane, cache_size=0
+            )
+        return LocalCluster(
+            self.n_workers,
+            threads_per_worker=self.threads_per_worker,
+            heartbeat_timeout=self.heartbeat_timeout,
+            speculation_factor=self.speculation_factor,
+            speculation_min=self.speculation_min,
+            store=store,
+            inline_result_max=self.inline_result_max,
+            worker_cache_bytes=self.worker_cache_bytes,
+        )

@@ -10,7 +10,18 @@ policy behind a uniform ``submit`` / ``map`` / ``gather`` / ``scatter`` /
 * ``Session(cluster=LocalCluster())``— the runtime scheduler with drop-in
   pass-by-proxy (Fig 2b),
 
-while ``session.scatter`` / ``session.proxy`` cover the manual pattern
+or declaratively via the one-knob ``backend`` selector::
+
+    Session(backend="in-process")
+    Session(backend="executor")                     # owns a thread pool
+    Session(backend="cluster")                      # owns a LocalCluster
+    Session(backend="cluster", cluster=ClusterSpec(n_workers=8))
+
+A backend built by the session (from a :class:`ClusterSpec`, a worker
+count, or the defaults) is session-owned and shut down on close — for the
+cluster backend that also evicts every ref the data plane still holds.
+
+``session.scatter`` / ``session.proxy`` cover the manual pattern
 (Fig 2a).  Every proxy the session mints client-side is *session-owned*:
 closing the session (or leaving its ``with`` block) evicts the backing
 objects, so no storage leaks past the session's lifetime.
@@ -19,11 +30,11 @@ objects, so no storage leaks past the session's lifetime.
 from __future__ import annotations
 
 import uuid
-from concurrent.futures import Future
+from concurrent.futures import Future, ThreadPoolExecutor
 from concurrent.futures import as_completed as _futures_as_completed
 from typing import Any, Callable, Iterable, Iterator, Sequence, TypeVar
 
-from repro.api.config import PolicySpec, StoreConfig
+from repro.api.config import ClusterSpec, PolicySpec, StoreConfig
 from repro.core._deprecation import api_managed
 from repro.core.connectors.base import Key
 from repro.core.executor import StoreExecutor
@@ -49,6 +60,7 @@ class Session:
     def __init__(
         self,
         *,
+        backend: str | None = None,
         store: StoreConfig | Store | None = None,
         cluster: Any = None,
         executor: Any = None,
@@ -59,54 +71,78 @@ class Session:
     ):
         if cluster is not None and executor is not None:
             raise ValueError("pass either cluster= or executor=, not both")
+        backend, cluster, executor, owns_backend = _resolve_backend(
+            backend, cluster, executor
+        )
+        self._backend = backend
+        self._owns_backend = owns_backend
         self.name = name or f"session-{uuid.uuid4().hex[:8]}"
 
-        # -- store: build from config (owned) or adopt a live one (borrowed)
-        if store is None:
-            store = StoreConfig(self.name, ("memory", {"segment": self.name}))
-        if isinstance(store, StoreConfig):
-            self.store = store.build(register=True)
-            self._owns_store = True
-        else:
-            self.store = store
-            self._owns_store = False
+        try:
+            # -- store: build from config (owned) or adopt a live one (borrowed)
+            if store is None:
+                store = StoreConfig(self.name, ("memory", {"segment": self.name}))
+            if isinstance(store, StoreConfig):
+                self.store = store.build(register=True)
+                self._owns_store = True
+            else:
+                self.store = store
+                self._owns_store = False
 
-        # -- policy: spec, registered name, or bare callable
-        if policy is None:
-            policy = SizePolicy()
-        elif isinstance(policy, str):
-            policy = PolicySpec(policy).build()
-        elif isinstance(policy, PolicySpec):
-            policy = policy.build()
-        self.policy: Policy = policy
+            # -- policy: spec, registered name, or bare callable
+            if policy is None:
+                policy = SizePolicy()
+            elif isinstance(policy, str):
+                policy = PolicySpec(policy).build()
+            elif isinstance(policy, PolicySpec):
+                policy = policy.build()
+            self.policy: Policy = policy
 
-        self.proxy_results = proxy_results
-        self.ownership = ownership
-        self._owned_keys: dict[str, Key] = {}
-        self._closed = False
+            self.proxy_results = proxy_results
+            self.ownership = ownership
+            self._owned_keys: dict[str, Key] = {}
+            self._closed = False
 
-        # -- execution backend
-        self._client = None
-        self._executor = None
-        if cluster is not None:
-            with api_managed():
-                self._client = _make_session_client(
-                    self,
-                    cluster,
-                    store=self.store,
-                    policy=self.policy,
-                    proxy_results=proxy_results,
-                )
-        elif executor is not None:
-            with api_managed():
-                self._executor = _SessionStoreExecutor(
-                    self,
-                    executor,
-                    self.store,
-                    should_proxy=self.policy,
-                    proxy_results=proxy_results,
-                    ownership=ownership,
-                )
+            # -- execution backend
+            self._client = None
+            self._executor = None
+            self._cluster = cluster
+            self._raw_executor = executor
+            if cluster is not None:
+                with api_managed():
+                    self._client = _make_session_client(
+                        self,
+                        cluster,
+                        store=self.store,
+                        policy=self.policy,
+                        proxy_results=proxy_results,
+                    )
+            elif executor is not None:
+                with api_managed():
+                    self._executor = _SessionStoreExecutor(
+                        self,
+                        executor,
+                        self.store,
+                        should_proxy=self.policy,
+                        proxy_results=proxy_results,
+                        ownership=ownership,
+                    )
+        except BaseException:
+            # A backend this constructor built must not outlive a failed
+            # construction (bad store spec, unknown policy, ...): tear down
+            # the cluster threads / thread pool before propagating.
+            if owns_backend:
+                if cluster is not None:
+                    try:
+                        cluster.close()
+                    except Exception:
+                        pass
+                if executor is not None:
+                    try:
+                        executor.shutdown(wait=False)
+                    except Exception:
+                        pass
+            raise
 
     # -- proxy lifetime scoping ------------------------------------------------
 
@@ -148,10 +184,22 @@ class Session:
     # -- uniform execution surface ----------------------------------------------
 
     def submit(self, fn: Callable[..., T], /, *args: Any, **kwargs: Any) -> Future:
-        """Run ``fn`` on the session backend; always returns a Future."""
+        """Run ``fn`` on the session backend; always returns a Future.
+
+        Futures are accepted as arguments on every backend: the cluster
+        client turns them into graph dependencies; the executor and
+        in-process backends resolve them before dispatch, so task chains
+        written once run unchanged under any backend.
+        """
         self._check_open()
         if self._client is not None:
             return self._client.submit(fn, *args, **kwargs)
+        # Dask-style scheduling hints are cluster-backend concepts; the
+        # executor and in-process backends must not pass them to user code.
+        kwargs.pop("pure", None)
+        kwargs.pop("retries", None)
+        args = tuple(_resolve_future_args(a) for a in args)
+        kwargs = {k: _resolve_future_args(v) for k, v in kwargs.items()}
         if self._executor is not None:
             return self._executor.submit(fn, *args, **kwargs)
         return self._submit_inprocess(fn, *args, **kwargs)
@@ -170,8 +218,6 @@ class Session:
         return as_completed(futures, timeout=timeout)
 
     def _submit_inprocess(self, fn: Callable, /, *args: Any, **kwargs: Any) -> Future:
-        kwargs.pop("pure", None)
-        kwargs.pop("retries", None)
         f: Future = Future()
         try:
             result = fn(*args, **kwargs)  # proxy args resolve transparently
@@ -192,11 +238,12 @@ class Session:
 
     @property
     def backend(self) -> str:
-        if self._client is not None:
-            return "cluster"
-        if self._executor is not None:
-            return "executor"
-        return "in-process"
+        return self._backend
+
+    @property
+    def cluster(self) -> Any:
+        """The live cluster backend, if any (owned or borrowed)."""
+        return self._cluster
 
     # -- lifecycle ----------------------------------------------------------------
 
@@ -225,6 +272,20 @@ class Session:
         self._owned_keys.clear()
         if self._client is not None:
             self._client.close()
+        if self._owns_backend:
+            # Session-built backend: tear it down.  Closing an owned cluster
+            # also wipes its data plane, so every cluster-published ref is
+            # evicted with the session.
+            if self._cluster is not None:
+                try:
+                    self._cluster.close()
+                except Exception:
+                    pass
+            if self._raw_executor is not None:
+                try:
+                    self._raw_executor.shutdown(wait=True)
+                except Exception:
+                    pass
         if self._owns_store:
             clear = getattr(self.store.connector, "clear", None)
             if clear is not None:
@@ -246,6 +307,81 @@ class Session:
             f"Session(name={self.name!r}, backend={self.backend!r}, "
             f"store={self.store.name!r}, {state})"
         )
+
+
+def _resolve_future_args(obj: Any) -> Any:
+    """Replace Futures (possibly nested in containers) with their results."""
+    if isinstance(obj, Future):
+        return obj.result()
+    if isinstance(obj, list):
+        return [_resolve_future_args(x) for x in obj]
+    if isinstance(obj, tuple):
+        return tuple(_resolve_future_args(x) for x in obj)
+    if isinstance(obj, dict):
+        return {k: _resolve_future_args(v) for k, v in obj.items()}
+    return obj
+
+
+# -- backend resolution --------------------------------------------------------
+
+
+_BACKEND_ALIASES = {
+    "in-process": "in-process",
+    "inprocess": "in-process",
+    "local": "in-process",
+    "executor": "executor",
+    "cluster": "cluster",
+}
+
+
+def _resolve_backend(
+    backend: str | None, cluster: Any, executor: Any
+) -> tuple[str, Any, Any, bool]:
+    """Normalize the one-knob backend selection.
+
+    Returns ``(backend, cluster, executor, owns_backend)``.  A ClusterSpec,
+    an integer worker count, or a ``backend=`` name with no live object
+    makes the session build -- and therefore own and later close -- the
+    backend; live objects passed in are borrowed.
+    """
+    if backend is None:
+        backend = (
+            "cluster"
+            if cluster is not None
+            else "executor"
+            if executor is not None
+            else "in-process"
+        )
+    try:
+        backend = _BACKEND_ALIASES[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {backend!r}; pick one of "
+            f"{sorted(set(_BACKEND_ALIASES.values()))}"
+        ) from None
+
+    owns = False
+    if backend == "cluster":
+        if executor is not None:
+            raise ValueError("backend='cluster' does not take executor=")
+        if cluster is None:
+            cluster = ClusterSpec()
+        if isinstance(cluster, ClusterSpec):
+            cluster = cluster.build()
+            owns = True
+    elif backend == "executor":
+        if cluster is not None:
+            raise ValueError("backend='executor' does not take cluster=")
+        if executor is None:
+            executor = 4
+        if isinstance(executor, int):
+            executor = ThreadPoolExecutor(executor)
+            owns = True
+    else:  # in-process
+        if cluster is not None or executor is not None:
+            raise ValueError("backend='in-process' takes neither cluster= nor executor=")
+        cluster = executor = None
+    return backend, cluster, executor, owns
 
 
 # -- session-tracking backend adapters ----------------------------------------

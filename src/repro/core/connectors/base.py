@@ -32,6 +32,12 @@ class Key:
 
 Payload = SerializedObject | bytes | bytearray | memoryview
 
+#: Capability name for connectors that support deterministic-key writes
+#: (``put_at``).  The runtime's peer-to-peer data plane requires it: workers
+#: publish task results under the task key, so speculative duplicates
+#: overwrite the same entry instead of leaking a second copy.
+PEER_CAPABILITY = "peer"
+
 
 def payload_frames(data: Payload) -> list[bytes | memoryview]:
     if isinstance(data, SerializedObject):
@@ -68,6 +74,32 @@ class Connector(Protocol):
     def close(self) -> None: ...
 
     def config(self) -> dict[str, Any]: ...
+
+
+@runtime_checkable
+class PeerCapable(Protocol):
+    """Connectors usable as a shared cluster data plane (``peer`` capability).
+
+    ``put_at`` writes under a caller-chosen key: every worker that produces
+    the same task result publishes to the same entry, which is what makes
+    release-time eviction exactly-once across speculation and recovery.
+    """
+
+    def put_at(self, key: Key, data: Payload) -> Key: ...
+
+
+def has_peer_capability(connector: Any) -> bool:
+    """True when a connector instance or class supports ``put_at``."""
+    return callable(getattr(connector, "put_at", None))
+
+
+def connector_capabilities(kind: str) -> frozenset[str]:
+    """Capability names of a registered connector type."""
+    cls = connector_registry.get(kind)
+    caps = set(getattr(cls, "CAPABILITIES", ()))
+    if has_peer_capability(cls):
+        caps.add(PEER_CAPABILITY)
+    return frozenset(caps)
 
 
 class ConnectorStats:

@@ -56,6 +56,14 @@ class FileConnector:
         self.stats.record_put(nbytes)
         return Key(key.object_id, size=nbytes)
 
+    def put_at(self, key: Key, data: Payload) -> Key:
+        """Deterministic-key write (``peer`` capability); atomic via rename,
+        so a speculative duplicate publishing the same key is an overwrite,
+        never a torn read."""
+        nbytes = self._write(self._path(key), data)
+        self.stats.record_put(nbytes)
+        return Key(key.object_id, size=nbytes, tag=key.tag)
+
     def put_batch(self, datas: Sequence[Payload]) -> list[Key]:
         return [self.put(d) for d in datas]
 

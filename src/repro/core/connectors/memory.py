@@ -40,6 +40,13 @@ class MemoryConnector:
         self.stats.record_put(len(blob))
         return key
 
+    def put_at(self, key: Key, data: Payload) -> Key:
+        """Deterministic-key write (``peer`` capability): idempotent publish."""
+        blob = data.to_bytes() if isinstance(data, SerializedObject) else bytes(data)
+        self._data[key.object_id] = blob
+        self.stats.record_put(len(blob))
+        return Key(key.object_id, size=len(blob), tag=key.tag)
+
     def put_batch(self, datas: Sequence[Payload]) -> list[Key]:
         return [self.put(d) for d in datas]
 

@@ -18,7 +18,8 @@ without requiring a distributed lock service.
 
 from __future__ import annotations
 
-from typing import Any, TypeVar
+import threading
+from typing import Any, Callable, TypeVar
 
 from repro.core.proxy import (
     Factory,
@@ -33,6 +34,52 @@ T = TypeVar("T")
 
 class OwnershipError(RuntimeError):
     pass
+
+
+class RefLedger:
+    """Exactly-once release of shared data-plane refs.
+
+    The scheduler's control plane never holds result bytes, only refs into
+    the cluster store.  Every published ref is tracked here, and however
+    many paths later ask for its release -- client RELEASE, speculative
+    duplicates, lineage-recovery republication, worker-loss cleanup -- the
+    backing entry is evicted at most once: ``release`` pops the ref, so a
+    second call is a no-op rather than a double eviction.
+    """
+
+    def __init__(self, evict: Callable[[str], None]):
+        self._evict = evict
+        self._live: dict[str, int] = {}  # ref -> nbytes
+        self._lock = threading.Lock()
+
+    def track(self, ref: str, nbytes: int = 0) -> None:
+        """Record a published ref (idempotent across duplicate publishes)."""
+        with self._lock:
+            self._live.setdefault(ref, nbytes)
+
+    def release(self, ref: str) -> bool:
+        """Evict the ref's store entry; True only on the call that evicted."""
+        with self._lock:
+            if self._live.pop(ref, None) is None:
+                return False
+        try:
+            self._evict(ref)
+        except Exception:
+            pass  # store already gone: nothing left to leak
+        return True
+
+    def forget(self, ref: str) -> None:
+        """Drop tracking without evicting (entry adopted by another owner)."""
+        with self._lock:
+            self._live.pop(ref, None)
+
+    def live_refs(self) -> list[str]:
+        with self._lock:
+            return list(self._live)
+
+    def live_bytes(self) -> int:
+        with self._lock:
+            return sum(self._live.values())
 
 
 @register_proxy_type

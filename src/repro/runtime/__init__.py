@@ -1,8 +1,19 @@
-"""Mini-Dask-Distributed runtime: the substrate the paper integrates with."""
+"""Mini-Dask-Distributed runtime: the substrate the paper integrates with.
+
+Control plane (``scheduler``) and data plane (``transfer``) are separate:
+the scheduler moves metadata; result bytes move worker-to-worker or
+through the shared cluster store.
+"""
 
 from repro.runtime.client import Client, LocalCluster, ProxyClient, RuntimeFuture
 from repro.runtime.graph import FutureRef, tokenize
 from repro.runtime.scheduler import Scheduler
+from repro.runtime.transfer import (
+    BlobCache,
+    MissingDependencyError,
+    PeerTransfer,
+    ResultStore,
+)
 from repro.runtime.worker import ThreadWorker
 
 __all__ = [
@@ -14,4 +25,8 @@ __all__ = [
     "tokenize",
     "Scheduler",
     "ThreadWorker",
+    "BlobCache",
+    "MissingDependencyError",
+    "PeerTransfer",
+    "ResultStore",
 ]

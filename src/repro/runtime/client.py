@@ -5,6 +5,11 @@
 but task inputs and outputs larger than ``ps_threshold`` are automatically
 routed through a ProxyStore ``Store``, so the scheduler only ever moves
 lightweight references.
+
+Gather rides the peer-to-peer data plane: ``FINISHED`` carries either a
+tiny inline blob or a ``(ref, nbytes)`` descriptor, and the client fetches
+the bytes straight from the cluster store -- result blobs never pass
+through the scheduler mailbox.
 """
 
 from __future__ import annotations
@@ -12,7 +17,6 @@ from __future__ import annotations
 import functools
 import queue
 import threading
-import time
 import uuid
 from concurrent.futures import Future
 from typing import Any, Callable, Iterable, Sequence
@@ -26,6 +30,7 @@ from repro.core.store import Store
 from repro.runtime import messages as M
 from repro.runtime.graph import FutureRef, find_refs, tokenize
 from repro.runtime.scheduler import Mailbox, Scheduler
+from repro.runtime.transfer import PeerTransfer, ResultStore
 from repro.runtime.worker import ThreadWorker, dumps_function
 
 
@@ -50,8 +55,8 @@ class Client:
         self.client_id = f"client-{uuid.uuid4().hex[:8]}"
         self.mailbox = Mailbox(self.client_id)
         self.scheduler.register_client(self.client_id, self.mailbox)
+        self._results: ResultStore | None = getattr(cluster, "data_plane", None)
         self._futures: dict[str, list[RuntimeFuture]] = {}
-        self._gathering: dict[str, list[RuntimeFuture]] = {}
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._pump = threading.Thread(target=self._pump_loop, daemon=True)
@@ -138,8 +143,6 @@ class Client:
                 self._on_finished(p)
             elif tag == M.FAILED:
                 self._on_failed(p)
-            elif tag == M.DATA:
-                self._on_data(p)
 
     def _take_futures(self, table: dict, key: str) -> list[RuntimeFuture]:
         with self._lock:
@@ -147,31 +150,34 @@ class Client:
 
     def _on_finished(self, p: dict[str, Any]) -> None:
         key = p["key"]
+        futures = self._take_futures(self._futures, key)
+        if not futures:
+            return
         if p.get("result") is not None:
-            result = deserialize(p["result"])
-            for f in self._take_futures(self._futures, key):
-                if not f.done():
-                    f.set_result(result)
-        else:
-            # Large result stayed on the worker: gather it now.
-            with self._lock:
-                futures = self._futures.pop(key, [])
-                if not futures:
-                    return
-                self._gathering.setdefault(key, []).extend(futures)
-            self.scheduler.inbox.put_msg(
-                M.msg(M.GATHER, key=key, client=self.client_id)
-            )
-
-    def _on_data(self, p: dict[str, Any]) -> None:
-        key = p["key"]
-        futures = self._take_futures(self._gathering, key)
-        if p.get("error"):
+            self._resolve(futures, p["result"])
+            return
+        # Large result: fetch it from the data plane by reference -- the
+        # scheduler only relayed (ref, nbytes).
+        ref = p.get("ref")
+        if ref is None or self._results is None:
             for f in futures:
                 if not f.done():
-                    f.set_exception(RuntimeError(p["error"]))
+                    f.set_exception(
+                        RuntimeError(f"result of {key} has no inline blob or ref")
+                    )
             return
-        result = deserialize(p["data"]) if p.get("data") is not None else None
+        blob = self._results.fetch(ref, p.get("nbytes", -1))
+        if blob is None:
+            for f in futures:
+                if not f.done():
+                    f.set_exception(
+                        RuntimeError(f"result of {key} missing from cluster store")
+                    )
+            return
+        self._resolve(futures, blob)
+
+    def _resolve(self, futures: list[RuntimeFuture], blob: bytes) -> None:
+        result = deserialize(blob)
         for f in futures:
             if not f.done():
                 f.set_result(result)
@@ -237,10 +243,13 @@ class ProxyClient(Client):
 
 
 class LocalCluster:
-    """Scheduler + N workers in one process (thread workers).
+    """Scheduler + N workers + a shared data plane in one process.
 
-    Supports elastic scaling (``add_worker``/``remove_worker``) and fault
-    injection (``kill_worker``) for the fault-tolerance tests.
+    The scheduler is a metadata-only control plane; every worker and
+    client shares a cluster store namespace (``data_plane``) plus a
+    direct worker-to-worker transfer mesh (``transfers``).  Supports
+    elastic scaling (``add_worker``/``remove_worker``) and fault injection
+    (``kill_worker``) for the fault-tolerance tests.
     """
 
     def __init__(
@@ -251,11 +260,31 @@ class LocalCluster:
         heartbeat_timeout: float = 5.0,
         speculation_factor: float = 4.0,
         speculation_min: float = 1.0,
+        store: Any = None,  # StoreConfig | config dict | None
+        inline_result_max: int = 64 * 1024,
+        worker_cache_bytes: int = 256 * 1024 * 1024,
     ):
+        uid = uuid.uuid4().hex[:8]
+        if store is None:
+            store_config = {
+                "name": f"cluster-{uid}",
+                "connector": {"connector_type": "memory", "segment": f"cluster-{uid}"},
+                "serializer": "default",
+                "cache_size": 0,
+            }
+        elif hasattr(store, "to_dict"):  # api.StoreConfig without importing api
+            store_config = store.to_dict()
+        else:
+            store_config = dict(store)
+        self.data_plane = ResultStore(store_config)
+        self.transfers = PeerTransfer()
+        self.worker_cache_bytes = worker_cache_bytes
         self.scheduler = Scheduler(
             heartbeat_timeout=heartbeat_timeout,
             speculation_factor=speculation_factor,
             speculation_min=speculation_min,
+            inline_result_max=inline_result_max,
+            result_store=self.data_plane,
         ).start()
         self.workers: dict[str, ThreadWorker] = {}
         for _ in range(n_workers):
@@ -263,7 +292,14 @@ class LocalCluster:
 
     def add_worker(self, nthreads: int = 1) -> str:
         worker_id = f"worker-{len(self.workers)}-{uuid.uuid4().hex[:6]}"
-        w = ThreadWorker(worker_id, self.scheduler, nthreads=nthreads).start()
+        w = ThreadWorker(
+            worker_id,
+            self.scheduler,
+            nthreads=nthreads,
+            result_store=self.data_plane,
+            transfers=self.transfers,
+            cache_bytes=self.worker_cache_bytes,
+        ).start()
         self.workers[worker_id] = w
         return worker_id
 
@@ -285,7 +321,11 @@ class LocalCluster:
     def close(self) -> None:
         for w in list(self.workers.values()):
             w.stop()
+        self.workers.clear()
         self.scheduler.stop()
+        # The data-plane namespace is cluster-owned: closing the cluster
+        # evicts every still-published ref.
+        self.data_plane.close()
 
     def __enter__(self) -> "LocalCluster":
         return self

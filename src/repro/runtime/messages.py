@@ -1,12 +1,22 @@
 """Message types for the runtime protocol (plain tuples for cheap encode).
 
-Every message is ``(tag, payload_dict)``.  Tags:
+Every message is ``(tag, payload_dict)``.  The protocol is **metadata
+only**: result bytes never ride on these messages except for inline
+results below ``inline_result_max``.  Large results travel the peer-to-peer
+data plane (``runtime/transfer.py``) and are referenced here by
+``(ref, nbytes, locations)``.
 
-client -> scheduler:   submit, release, gather, client_shutdown
+Tags:
+
+client -> scheduler:   submit, release, client_shutdown
 worker -> scheduler:   register, heartbeat, task_done, task_failed,
-                       need_data, deregister
-scheduler -> worker:   run_task, send_data, data, cancel, stop
-scheduler -> client:   finished, failed, data
+                       deregister
+scheduler -> worker:   run_task, cancel, stop
+scheduler -> client:   finished, failed
+
+The hub-mediated forwarding tags of the old data plane (``need_data`` /
+``send_data`` / ``data`` / ``gather``) are gone, not deprecated: there is
+no code path left that ships a result blob through the scheduler mailbox.
 """
 
 from __future__ import annotations
@@ -15,19 +25,15 @@ from typing import Any
 
 SUBMIT = "submit"
 RELEASE = "release"
-GATHER = "gather"
 CLIENT_SHUTDOWN = "client_shutdown"
 
 REGISTER = "register"
 HEARTBEAT = "heartbeat"
 TASK_DONE = "task_done"
 TASK_FAILED = "task_failed"
-NEED_DATA = "need_data"
 DEREGISTER = "deregister"
 
 RUN_TASK = "run_task"
-SEND_DATA = "send_data"
-DATA = "data"
 CANCEL = "cancel"
 STOP = "stop"
 

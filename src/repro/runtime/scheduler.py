@@ -1,20 +1,30 @@
-"""Centralized scheduler: the Dask-Distributed analogue.
+"""Centralized scheduler: the Dask-Distributed analogue, metadata-only.
 
-Hub-and-spoke: all peers (client, workers) push *encoded* messages into the
-scheduler's mailbox; the scheduler pushes encoded messages to per-peer
-mailboxes.  Everything crossing the hub is byte-counted, which is the
-instrument behind the paper's Fig 3/4 attribution: pass-by-proxy shrinks
-``scheduler.bytes_through`` without changing task semantics.
+Hub-and-spoke for *control*: all peers (client, workers) push encoded
+messages into the scheduler's mailbox; the scheduler pushes encoded
+messages to per-peer mailboxes.  Everything crossing the hub is
+byte-counted -- the instrument behind the paper's Fig 3/4 attribution.
+
+Unlike stock Dask (and the previous revision of this file), the hub is a
+pure control plane.  Workers publish results >= ``inline_result_max`` into
+the cluster store and report only ``(key, ref, nbytes, location)``;
+dependents and clients fetch the bytes themselves over the peer-to-peer
+data plane (``runtime/transfer.py``).  The old ``NEED_DATA``/``SEND_DATA``/
+``DATA`` forwarding path is deleted, so no result blob can cross the
+scheduler mailbox by construction.
 
 Production features (per the 1000+-node mandate):
 
 * **Fault tolerance** -- worker heartbeats; lost workers' running tasks are
-  rescheduled; lost *results* are recomputed from retained task specs
-  (lineage recovery).  Task specs are retained until the client releases
-  their futures.
+  rescheduled.  Lost *bytes* (all cache holders dead and the store entry
+  gone) surface as ``TASK_FAILED(missing_deps=...)`` from the fetching
+  worker, answered with lineage recovery: the upstream task is recomputed
+  from its retained spec and the dependent re-queued.
 * **Straggler mitigation** -- tasks running longer than
   ``speculation_factor x median`` get a speculative duplicate on another
-  worker; first completion wins.
+  worker; first completion wins.  Duplicate publishes share a
+  deterministic ref, and release funnels through a ``RefLedger``, so the
+  store entry is evicted exactly once.
 * **Elasticity** -- workers register/deregister at any time; queued work
   rebalances automatically because dispatch is pull-from-ready-queue.
 * **Locality** -- ready tasks prefer the worker already holding the most
@@ -28,9 +38,11 @@ from __future__ import annotations
 import queue
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any
 
+from repro.core.ownership import RefLedger
 from repro.runtime import messages as M
 from repro.runtime.comm import ByteCounter, decode_message, encode_message
 
@@ -70,9 +82,11 @@ class TaskState:
     state: str = "waiting"  # waiting|ready|running|done|error
     attempts: int = 0
     max_retries: int = 2
+    recoveries: int = 0  # lineage-recovery re-queues (not the task's fault)
     workers: set[str] = field(default_factory=set)  # currently running on
-    locations: set[str] = field(default_factory=set)  # result locations
+    locations: set[str] = field(default_factory=set)  # workers caching result
     result_blob: bytes | None = None  # inline result (small)
+    ref: str | None = None  # data-plane ref for published results
     nbytes: int = 0
     error: str | None = None
     submitted_at: float = 0.0
@@ -95,6 +109,16 @@ class WorkerState:
     total_done: int = 0
 
 
+#: Bound on the task-duration history feeding speculation's median.  The
+#: median of the most recent window tracks workload shifts and keeps the
+#: scheduler from leaking one float per task forever.
+DURATION_WINDOW = 512
+
+#: Lineage-recovery re-queues allowed per task before giving up.  Guards
+#: against a store that keeps losing the same dependency bytes.
+MAX_RECOVERIES = 3
+
+
 class Scheduler:
     def __init__(
         self,
@@ -103,6 +127,7 @@ class Scheduler:
         speculation_factor: float = 4.0,
         speculation_min: float = 1.0,
         inline_result_max: int = 64 * 1024,
+        result_store: Any = None,
     ):
         self.inbox = Mailbox("scheduler")
         self.tasks: dict[str, TaskState] = {}
@@ -113,12 +138,16 @@ class Scheduler:
         self.speculation_factor = speculation_factor
         self.speculation_min = speculation_min
         self.inline_result_max = inline_result_max
-        self._durations: list[float] = []
+        self.result_store = result_store  # transfer.ResultStore | None
+        self.ledger = RefLedger(self._evict_ref)
+        self._durations: deque[float] = deque(maxlen=DURATION_WINDOW)
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self._lock = threading.Lock()
-        # pending data requests: key -> list of (kind, peer_id)
-        self._waiting_data: dict[str, list[tuple[str, str]]] = {}
+
+    def _evict_ref(self, ref: str) -> None:
+        if self.result_store is not None:
+            self.result_store.evict(ref)
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -137,9 +166,13 @@ class Scheduler:
 
     # -- control-plane registration (direct calls; data plane stays bytes) ----
 
-    def register_worker(self, worker_id: str, mailbox: Any, nthreads: int = 1) -> None:
+    def _register_worker(self, worker_id: str, mailbox: Any, nthreads: int = 1) -> None:
+        """Single registration path for both the direct call and M.REGISTER."""
         with self._lock:
             self.workers[worker_id] = WorkerState(worker_id, mailbox, nthreads=nthreads)
+
+    def register_worker(self, worker_id: str, mailbox: Any, nthreads: int = 1) -> None:
+        self._register_worker(worker_id, mailbox, nthreads)
 
     def register_client(self, client_id: str, mailbox: Any) -> None:
         with self._lock:
@@ -200,8 +233,8 @@ class Scheduler:
         if tag == M.SUBMIT:
             self._on_submit(p)
         elif tag == M.REGISTER:
-            self.workers[p["worker"]] = WorkerState(
-                p["worker"], p["mailbox"], nthreads=p.get("nthreads", 1)
+            self._register_worker(
+                p["worker"], p["mailbox"], p.get("nthreads", 1)
             )
         elif tag == M.DEREGISTER:
             self._on_worker_lost(p["worker"], graceful=True)
@@ -213,12 +246,6 @@ class Scheduler:
             self._on_task_done(p)
         elif tag == M.TASK_FAILED:
             self._on_task_failed(p)
-        elif tag == M.NEED_DATA:
-            self._on_need_data(p)
-        elif tag == M.DATA:  # worker uploading result bytes for forwarding
-            self.on_data_upload(p)
-        elif tag == M.GATHER:
-            self._on_gather(p)
         elif tag == M.RELEASE:
             self._on_release(p)
         elif tag == M.STOP:
@@ -250,11 +277,27 @@ class Scheduler:
             submitted_at=time.monotonic(),
         )
         ts.waiting_clients.append(client_id)
+        unknown = [d for d in ts.deps if d not in self.tasks]
+        if unknown:
+            # A dependency spec the scheduler no longer holds (released or
+            # never submitted) can never be computed: fail fast, don't hang.
+            ts.state = "error"
+            ts.error = f"unknown or released dependencies: {unknown}"
+            self.tasks[key] = ts
+            self._send_client(client_id, M.msg(M.FAILED, key=key, error=ts.error))
+            ts.waiting_clients.clear()
+            return
         self.tasks[key] = ts
         for dep in ts.deps:
-            dts = self.tasks.get(dep)
-            if dts is not None:
-                dts.dependents.add(key)
+            self.tasks[dep].dependents.add(key)
+        failed = [d for d in ts.deps if self.tasks[d].state == "error"]
+        if failed:
+            # The dep already errored before this submission, so no future
+            # completion will ever cascade here: fail now, don't hang.
+            self._fail_task(
+                ts, f"dependency {failed[0]} failed: {self.tasks[failed[0]].error}"
+            )
+            return
         if self._deps_ready(ts):
             ts.state = "ready"
             self.ready.append(key)
@@ -306,14 +349,22 @@ class Scheduler:
         ts.started_at = time.monotonic()
         ts.workers.add(ws.worker_id)
         ws.running.add(ts.key)
-        dep_locations = {
-            d: sorted(self.tasks[d].locations) for d in ts.deps if d in self.tasks
-        }
-        inline_deps = {
-            d: self.tasks[d].result_blob
-            for d in ts.deps
-            if d in self.tasks and self.tasks[d].result_blob is not None
-        }
+        # Dependency *metadata* only: inline blobs for tiny results, a
+        # (ref, nbytes, locations) descriptor for everything published.
+        inline_deps: dict[str, bytes] = {}
+        dep_info: dict[str, dict[str, Any]] = {}
+        for d in ts.deps:
+            dts = self.tasks.get(d)
+            if dts is None:
+                continue
+            if dts.result_blob is not None:
+                inline_deps[d] = dts.result_blob
+            else:
+                dep_info[d] = {
+                    "ref": dts.ref,
+                    "nbytes": dts.nbytes,
+                    "locations": sorted(dts.locations),
+                }
         self._send_worker(
             ws,
             M.msg(
@@ -322,7 +373,7 @@ class Scheduler:
                 func=ts.func_blob,
                 args=ts.args_blob,
                 deps=ts.deps,
-                dep_locations=dep_locations,
+                dep_info=dep_info,
                 inline_deps=inline_deps,
             ),
         )
@@ -331,19 +382,36 @@ class Scheduler:
 
     def _on_task_done(self, p: dict[str, Any]) -> None:
         key, worker_id = p["key"], p["worker"]
+        ref = p.get("ref")
         ts = self.tasks.get(key)
         ws = self.workers.get(worker_id)
         if ws is not None:
             ws.running.discard(key)
             ws.total_done += 1
         if ts is None or ts.state == "done":
-            return  # duplicate speculative completion: first one won
+            # Duplicate speculative completion (or completion after release).
+            if ref is not None:
+                if ts is not None and ref == ts.ref:
+                    # Same deterministic ref: the duplicate overwrote the
+                    # same entry; just record the extra holder.
+                    ts.locations.add(worker_id)
+                    if ws is not None:
+                        ws.has_data.add(key)
+                else:
+                    # Distinct ref (non-peer connector) or task already
+                    # released: reclaim the orphan publish exactly once.
+                    self.ledger.track(ref)
+                    self.ledger.release(ref)
+            return
         ts.state = "done"
         ts.finished_at = time.monotonic()
         ts.nbytes = p.get("nbytes", 0)
         self._durations.append(ts.finished_at - ts.started_at)
         if p.get("result") is not None:
             ts.result_blob = p["result"]
+        if ref is not None:
+            ts.ref = ref
+            self.ledger.track(ref, ts.nbytes)
         ts.locations.add(worker_id)
         if ws is not None:
             ws.has_data.add(key)
@@ -355,7 +423,6 @@ class Scheduler:
                     other.running.discard(key)
                     self._send_worker(other, M.msg(M.CANCEL, key=key))
         self._notify_done(ts)
-        self._serve_waiting_data(ts)
         for dep_key in ts.dependents:
             dts = self.tasks.get(dep_key)
             if dts is not None and dts.state == "waiting" and self._deps_ready(dts):
@@ -370,6 +437,7 @@ class Scheduler:
                     M.FINISHED,
                     key=ts.key,
                     result=ts.result_blob,
+                    ref=ts.ref,
                     nbytes=ts.nbytes,
                 ),
             )
@@ -383,102 +451,86 @@ class Scheduler:
             ws.running.discard(key)
         if ts is None or ts.state == "done":
             return
+        missing = p.get("missing_deps") or []
+        if missing:
+            self._recover_lineage(ts, worker_id, missing)
+            return
         ts.attempts += 1
         if ts.attempts <= ts.max_retries:
             ts.state = "ready"
             ts.workers.clear()
             self.ready.append(key)
             return
+        self._fail_task(ts, p.get("error", "unknown error"))
+
+    def _fail_task(self, ts: TaskState, error: str) -> None:
+        """Mark a task failed, notify its clients, and cascade the failure
+        to dependents that can now never run -- a recomputation that dies
+        during lineage recovery must not leave its dependents (whose
+        clients were already notified of the *first* completion) hanging."""
         ts.state = "error"
-        ts.error = p.get("error", "unknown error")
+        ts.error = error
         for client_id in ts.waiting_clients:
-            self._send_client(client_id, M.msg(M.FAILED, key=key, error=ts.error))
+            self._send_client(client_id, M.msg(M.FAILED, key=ts.key, error=error))
         ts.waiting_clients.clear()
+        for dep_key in ts.dependents:
+            dts = self.tasks.get(dep_key)
+            if dts is not None and dts.state in ("waiting", "ready"):
+                self._fail_task(dts, f"dependency {ts.key} failed: {error}")
 
-    # -- data plane (hub-mediated fetch) ----------------------------------------
+    # -- lineage recovery -------------------------------------------------------
 
-    def _on_need_data(self, p: dict[str, Any]) -> None:
-        """A worker or client needs a result that lives on some worker."""
-        key = p["key"]
-        kind, peer = p["kind"], p["peer"]  # kind: "worker" | "client"
-        ts = self.tasks.get(key)
-        if ts is None:
-            self._reply_data(kind, peer, key, None, "unknown key")
+    def _recover_lineage(self, ts: TaskState, worker_id: str, missing: list[str]) -> None:
+        """A worker could not fetch dependency bytes from any holder or the
+        store: recompute the upstream tasks from their retained specs and
+        re-queue the dependent.  Data loss is not the dependent's fault, so
+        it costs a bounded ``recoveries`` budget, not a retry attempt."""
+        ts.recoveries += 1
+        ts.workers.discard(worker_id)
+        recoverable = True
+        for dep in missing:
+            dts = self.tasks.get(dep)
+            if dts is None or ts.recoveries > MAX_RECOVERIES:
+                recoverable = False
+                continue
+            if dts.state == "done":
+                # Invalidate the lost result; the ref entry (if any) will be
+                # overwritten by the recomputation's publish.
+                dts.state = "ready"
+                dts.result_blob = None
+                dts.workers.clear()
+                for holder in dts.locations:
+                    hws = self.workers.get(holder)
+                    if hws is not None:
+                        hws.has_data.discard(dep)
+                dts.locations.clear()
+                self.ready.append(dep)
+        if not recoverable:
+            self._fail_task(ts, f"dependencies {missing} lost and unrecoverable")
             return
-        if ts.result_blob is not None:
-            self._reply_data(kind, peer, key, ts.result_blob, None)
-            return
-        if ts.state == "done":
-            live = [w for w in ts.locations if self._worker_ok(w)]
-            if live:
-                self._waiting_data.setdefault(key, []).append((kind, peer))
-                self._send_worker(
-                    self.workers[live[0]], M.msg(M.SEND_DATA, key=key)
-                )
-                return
-            # All holders died: lineage recovery -- recompute.
-            ts.state = "ready"
-            ts.locations.clear()
-            ts.workers.clear()
-            self.ready.append(key)
-        self._waiting_data.setdefault(key, []).append((kind, peer))
+        ts.state = "waiting"  # re-queued by _on_task_done of the recomputed dep
 
-    def _worker_ok(self, worker_id: str) -> bool:
-        ws = self.workers.get(worker_id)
-        return ws is not None and ws.alive
-
-    def _reply_data(
-        self, kind: str, peer: str, key: str, blob: bytes | None, error: str | None
-    ) -> None:
-        message = M.msg(M.DATA, key=key, data=blob, error=error)
-        if kind == "client":
-            self._send_client(peer, message)
-        else:
-            ws = self.workers.get(peer)
-            if ws is not None:
-                self._send_worker(ws, message)
-
-    def _serve_waiting_data(self, ts: TaskState) -> None:
-        waiters = self._waiting_data.pop(ts.key, [])
-        if not waiters:
-            return
-        if ts.result_blob is not None:
-            for kind, peer in waiters:
-                self._reply_data(kind, peer, ts.key, ts.result_blob, None)
-            return
-        # Result lives on a worker: ask it to upload, then forward.
-        self._waiting_data[ts.key] = waiters
-        live = [w for w in ts.locations if self._worker_ok(w)]
-        if live:
-            self._send_worker(self.workers[live[0]], M.msg(M.SEND_DATA, key=ts.key))
-
-    def on_data_upload(self, p: dict[str, Any]) -> None:
-        """Worker uploaded result bytes for forwarding (hub-mediated)."""
-        key = p["key"]
-        ts = self.tasks.get(key)
-        if ts is not None and p.get("data") is not None:
-            ts.result_blob = p["data"]  # cache at hub for further waiters
-        waiters = self._waiting_data.pop(key, [])
-        for kind, peer in waiters:
-            self._reply_data(kind, peer, key, p.get("data"), p.get("error"))
-
-    # -- gather / release -----------------------------------------------------------
-
-    def _on_gather(self, p: dict[str, Any]) -> None:
-        self._on_need_data(
-            {"key": p["key"], "kind": "client", "peer": p["client"]}
-        )
+    # -- release -----------------------------------------------------------
 
     def _on_release(self, p: dict[str, Any]) -> None:
-        for key in p["keys"]:
+        released = set(p["keys"])
+        for key in released:
             ts = self.tasks.pop(key, None)
             if ts is None:
                 continue
+            if ts.ref is not None:
+                # Exactly-once store eviction, no matter how many duplicate
+                # publishes or repeated releases hit this ref.
+                self.ledger.release(ts.ref)
             for worker_id in ts.locations:
                 ws = self.workers.get(worker_id)
                 if ws is not None:
                     ws.has_data.discard(key)
                     self._send_worker(ws, M.msg(M.CANCEL, key=key, release=True))
+        # Purge released keys from the ready queue so they can never be
+        # dispatched (and so the list does not grow unboundedly).
+        if released:
+            self.ready = [k for k in self.ready if k not in released]
 
     # -- periodic maintenance: heartbeats + speculation ---------------------------
 
@@ -503,11 +555,14 @@ class Scheduler:
                         ts.state = "ready"
                         self.ready.append(key)
                     else:
-                        ts.state = "error"
-                        ts.error = f"worker {worker_id} lost"
+                        self._fail_task(ts, f"worker {worker_id} lost")
         for key in ws.has_data:
             ts = self.tasks.get(key)
             if ts is not None:
+                # The worker's cached copy is gone; the store entry (ts.ref)
+                # survives, so done tasks stay done -- only peer locality is
+                # lost.  Bytes lost from the store too surface later as
+                # missing_deps and go through lineage recovery.
                 ts.locations.discard(worker_id)
         del self.workers[worker_id]
 

@@ -1,0 +1,217 @@
+"""Peer-to-peer data plane: the bytes path that bypasses the scheduler.
+
+The refactored runtime splits Dask's hub topology in two, following the
+lesson of "Runtime vs Scheduler: Analyzing Dask's Overheads" (the hub is
+the bottleneck) and MPI4Dask (give the data its own point-to-point path):
+
+* **control plane** -- the scheduler sees only metadata:
+  ``(key, ref, nbytes, locations)``.  No result blob ever enters its
+  mailbox.
+* **data plane** -- workers publish results >= ``inline_result_max`` into a
+  shared ``Store`` namespace (:class:`ResultStore`) and keep the serialized
+  bytes in a per-worker LRU (:class:`BlobCache`).  Dependents pull bytes
+  themselves: local cache, then a direct worker-to-worker fetch
+  (:class:`PeerTransfer`), then the shared store.
+
+Both sides of every peer fetch are byte-counted, so benchmarks can
+attribute traffic the way the paper's Figs 3-4 do: scheduler bytes vs
+peer bytes vs mediated-store bytes.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Any
+
+from repro.core.connectors.base import Key, has_peer_capability
+from repro.core.store import get_or_create_store, unregister_store
+from repro.runtime.comm import ByteCounter
+
+
+class MissingDependencyError(RuntimeError):
+    """A dependency's bytes are gone from every holder and the store.
+
+    Workers surface this to the scheduler (``TASK_FAILED`` with
+    ``missing_deps``), which answers with lineage recovery: the upstream
+    task is recomputed from its retained spec and the dependent re-queued.
+    """
+
+    def __init__(self, keys: list[str]):
+        self.keys = list(keys)
+        super().__init__(f"dependency bytes unavailable for {self.keys}")
+
+
+class BlobCache:
+    """Byte-bounded LRU of serialized task results (one per worker)."""
+
+    def __init__(self, max_bytes: int = 256 * 1024 * 1024):
+        self.max_bytes = max_bytes
+        self._data: OrderedDict[str, bytes] = OrderedDict()
+        self._nbytes = 0
+        self._lock = threading.Lock()
+
+    def get(self, key: str) -> bytes | None:
+        with self._lock:
+            blob = self._data.get(key)
+            if blob is not None:
+                self._data.move_to_end(key)
+            return blob
+
+    def put(self, key: str, blob: bytes) -> None:
+        if len(blob) > self.max_bytes:
+            return  # larger than the whole cache: the store is its home
+        with self._lock:
+            old = self._data.pop(key, None)
+            if old is not None:
+                self._nbytes -= len(old)
+            self._data[key] = blob
+            self._nbytes += len(blob)
+            while self._nbytes > self.max_bytes and self._data:
+                _, evicted = self._data.popitem(last=False)
+                self._nbytes -= len(evicted)
+
+    def pop(self, key: str) -> None:
+        with self._lock:
+            blob = self._data.pop(key, None)
+            if blob is not None:
+                self._nbytes -= len(blob)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self._nbytes = 0
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    @property
+    def nbytes(self) -> int:
+        with self._lock:
+            return self._nbytes
+
+
+class PeerTransfer:
+    """Cluster-scoped directory of worker caches for direct transfers.
+
+    The thread-worker analogue of a worker-to-worker socket mesh: a fetch
+    reads straight from the producing worker's :class:`BlobCache`, never
+    touching the scheduler, and is byte-counted on the shared counter so
+    the benchmarks can report the peer-path volume.  A worker that dies is
+    unregistered, so fetches from it fail fast and callers fall back to
+    the shared store (or trigger lineage recovery).
+    """
+
+    def __init__(self) -> None:
+        self._peers: dict[str, BlobCache] = {}
+        self._lock = threading.Lock()
+        self.counter = ByteCounter()
+
+    def register(self, worker_id: str, cache: BlobCache) -> None:
+        with self._lock:
+            self._peers[worker_id] = cache
+
+    def unregister(self, worker_id: str) -> None:
+        with self._lock:
+            self._peers.pop(worker_id, None)
+
+    def peers(self) -> list[str]:
+        with self._lock:
+            return list(self._peers)
+
+    def fetch(self, worker_id: str, key: str) -> bytes | None:
+        """Fetch ``key``'s serialized bytes directly from a peer's cache."""
+        with self._lock:
+            cache = self._peers.get(worker_id)
+        if cache is None:
+            return None
+        blob = cache.get(key)
+        if blob is not None:
+            self.counter.add_sent(len(blob))
+            self.counter.add_recv(len(blob))
+        return blob
+
+    def snapshot(self) -> dict[str, int]:
+        snap = self.counter.snapshot()
+        return {
+            "peer_fetches": snap["recv_msgs"],
+            "peer_bytes": snap["recv_bytes"],
+        }
+
+
+class ResultStore:
+    """Byte-level view of the shared result namespace for one process.
+
+    Wraps the cluster store's connector (re-opened from config, shared via
+    the process-global store registry) and publishes serialized result
+    blobs under *deterministic* refs -- the task key -- which requires the
+    connector's ``peer`` capability (``put_at``).  Deterministic refs make
+    speculative duplicate publishes idempotent overwrites, so release-time
+    eviction stays exactly-once.  Connectors without the capability still
+    work (random keys per publish); the scheduler then reclaims the losing
+    duplicate's ref explicitly.
+    """
+
+    def __init__(self, store_config: dict[str, Any]):
+        self._config = dict(store_config)
+        self._lock = threading.Lock()
+        self._connector: Any = None
+
+    @property
+    def name(self) -> str:
+        return self._config["name"]
+
+    @property
+    def connector(self) -> Any:
+        with self._lock:
+            if self._connector is None:
+                self._connector = get_or_create_store(self._config).connector
+            return self._connector
+
+    def config(self) -> dict[str, Any]:
+        return dict(self._config)
+
+    # -- publish / fetch -----------------------------------------------------
+
+    def publish(self, task_key: str, blob: bytes) -> str:
+        """Store a serialized result; returns the ref dependents fetch by."""
+        connector = self.connector
+        if has_peer_capability(connector):
+            key = connector.put_at(Key(object_id=task_key, size=len(blob)), blob)
+        else:
+            key = connector.put(blob)
+        return key.object_id
+
+    def fetch(self, ref: str, nbytes: int = -1) -> bytes | None:
+        blob = self.connector.get(Key(object_id=ref, size=nbytes))
+        if blob is None:
+            return None
+        return bytes(blob) if not isinstance(blob, bytes) else blob
+
+    def exists(self, ref: str) -> bool:
+        return self.connector.exists(Key(object_id=ref))
+
+    def evict(self, ref: str) -> None:
+        self.connector.evict(Key(object_id=ref))
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def clear(self) -> None:
+        """Wipe the namespace (cluster teardown evicts every published ref)."""
+        clear = getattr(self.connector, "clear", None)
+        if clear is not None:
+            clear()
+
+    def close(self) -> None:
+        try:
+            self.clear()
+        except Exception:
+            pass
+        unregister_store(self.name)
+        with self._lock:
+            self._connector = None

@@ -1,9 +1,15 @@
-"""Workers: task execution peers.
+"""Workers: task execution peers on the peer-to-peer data plane.
 
-Thread workers (default on this 1-core container) and process workers share
-the same protocol; both serialize every message to bytes, so the measured
-data path is identical.  Process workers additionally prove that proxy
-factories re-open stores across address spaces.
+Thread workers (default on this 1-core container) speak a metadata-only
+protocol with the scheduler; result bytes never ride on scheduler
+messages (beyond the inline threshold).  Each worker:
+
+* keeps every serialized result in a byte-bounded LRU ``BlobCache``,
+* publishes results >= ``inline_result_max`` into the shared cluster
+  store (``ResultStore``) and reports only ``(key, ref, nbytes)``,
+* resolves dependencies itself: local cache -> direct peer fetch
+  (``PeerTransfer``) -> shared store -- the scheduler only supplied the
+  ``(ref, nbytes, locations)`` metadata.
 
 Function payloads are pickled by reference when possible; non-picklable
 callables (lambdas/closures) fall back to a process-local registry token,
@@ -14,20 +20,27 @@ tasks be picklable.
 from __future__ import annotations
 
 import pickle
-import queue
 import threading
 import time
 import traceback
 from typing import Any
 
+import queue
+
 from repro.core.serialize import deserialize, serialize
 from repro.runtime import messages as M
 from repro.runtime.graph import substitute_refs
 from repro.runtime.scheduler import Mailbox, Scheduler
+from repro.runtime.transfer import BlobCache, MissingDependencyError
 
 # Registry for non-picklable callables (thread mode only).
 _LOCAL_FUNCS: dict[str, Any] = {}
 _LOCAL_FUNCS_LOCK = threading.Lock()
+
+#: Bounded retry for dependency fetches: covers the tiny race between a
+#: dependent's dispatch and the publish landing in a slow store backend.
+_FETCH_RETRIES = 3
+_FETCH_RETRY_SLEEP = 0.02
 
 
 def dumps_function(fn: Any) -> bytes:
@@ -58,17 +71,27 @@ def loads_function(blob: bytes) -> Any:
 class ThreadWorker:
     """In-process worker thread speaking the byte protocol."""
 
-    def __init__(self, worker_id: str, scheduler: Scheduler, nthreads: int = 1):
+    def __init__(
+        self,
+        worker_id: str,
+        scheduler: Scheduler,
+        nthreads: int = 1,
+        *,
+        result_store: Any = None,  # transfer.ResultStore | None
+        transfers: Any = None,  # transfer.PeerTransfer | None
+        cache_bytes: int = 256 * 1024 * 1024,
+    ):
         self.worker_id = worker_id
         self.scheduler = scheduler
         self.mailbox = Mailbox(worker_id)
-        self.data: dict[str, bytes] = {}  # key -> serialized result
+        self.results = result_store
+        self.transfers = transfers
+        self.cache = BlobCache(cache_bytes)  # key -> serialized result
         self.nthreads = nthreads
         self._stop = threading.Event()
         self._cancelled: set[str] = set()
         self._threads: list[threading.Thread] = []
         self._heartbeat_thread: threading.Thread | None = None
-        self._pending_data: dict[str, list[dict[str, Any]]] = {}
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -76,6 +99,8 @@ class ThreadWorker:
         # Registration is control-plane (passes the live mailbox handle),
         # so it is a direct call rather than a byte message.
         self.scheduler.register_worker(self.worker_id, self.mailbox, self.nthreads)
+        if self.transfers is not None:
+            self.transfers.register(self.worker_id, self.cache)
         for i in range(self.nthreads):
             t = threading.Thread(
                 target=self._loop, daemon=True, name=f"{self.worker_id}-{i}"
@@ -90,10 +115,18 @@ class ThreadWorker:
 
     def stop(self) -> None:
         self._stop.set()
+        if self.transfers is not None:
+            self.transfers.unregister(self.worker_id)
+        self.cache.clear()
 
     def kill(self) -> None:
-        """Simulate abrupt node failure: stop heartbeats and execution."""
+        """Simulate abrupt node failure: heartbeats stop and the worker's
+        cached result bytes vanish with it (peers must fall back to the
+        store or lineage recovery)."""
         self._stop.set()
+        if self.transfers is not None:
+            self.transfers.unregister(self.worker_id)
+        self.cache.clear()
 
     def _heartbeat_loop(self) -> None:
         while not self._stop.is_set():
@@ -120,40 +153,53 @@ class ThreadWorker:
     def _handle(self, message: tuple[str, dict[str, Any]]) -> None:
         tag, p = message
         if tag == M.RUN_TASK:
+            # A fresh dispatch supersedes any stale CANCEL from an earlier
+            # speculative round -- otherwise a once-cancelled key would be
+            # silently dropped forever on this worker.
+            self._cancelled.discard(p["key"])
             self._run_task(p)
-        elif tag == M.SEND_DATA:
-            blob = self.data.get(p["key"])
-            self._send(M.msg(M.DATA, key=p["key"], data=blob, worker=self.worker_id))
-        elif tag == M.DATA:
-            self._pending_data.setdefault(p["key"], []).append(p)
         elif tag == M.CANCEL:
             self._cancelled.add(p["key"])
             if p.get("release"):
-                self.data.pop(p["key"], None)
+                self.cache.pop(p["key"])
         elif tag == M.STOP:
             self._stop.set()
 
-    # -- task execution -----------------------------------------------------------
+    # -- dependency resolution (data plane) ---------------------------------
 
-    def _fetch_dep(self, key: str, inline: bytes | None) -> Any:
+    def _fetch_dep(self, key: str, info: dict[str, Any] | None, inline: bytes | None) -> Any:
         if inline is not None:
             return deserialize(inline)
-        if key in self.data:
-            return deserialize(self.data[key])
-        # Hub-mediated fetch: ask the scheduler, wait for DATA reply.
-        self._send(M.msg(M.NEED_DATA, key=key, kind="worker", peer=self.worker_id))
-        deadline = time.monotonic() + 30
-        while time.monotonic() < deadline and not self._stop.is_set():
-            lst = self._pending_data.get(key)
-            if lst:
-                p = lst.pop(0)
-                if p.get("error"):
-                    raise RuntimeError(f"dep fetch failed: {p['error']}")
-                blob = p["data"]
-                self.data[key] = blob
-                return deserialize(blob)
-            time.sleep(0.005)
-        raise TimeoutError(f"dependency {key} not received")
+        blob = self.cache.get(key)
+        if blob is None:
+            blob = self._fetch_remote(key, info or {})
+        return deserialize(blob)
+
+    def _fetch_remote(self, key: str, info: dict[str, Any]) -> bytes:
+        """Pull dependency bytes without touching the scheduler: direct
+        peer-to-peer first (the producer's cache is hot), shared store as
+        the durable fallback."""
+        ref = info.get("ref")
+        locations = info.get("locations") or []
+        for attempt in range(_FETCH_RETRIES):
+            if self.transfers is not None:
+                for loc in locations:
+                    if loc == self.worker_id:
+                        continue
+                    blob = self.transfers.fetch(loc, key)
+                    if blob is not None:
+                        self.cache.put(key, blob)
+                        return blob
+            if self.results is not None and ref is not None:
+                blob = self.results.fetch(ref, info.get("nbytes", -1))
+                if blob is not None:
+                    self.cache.put(key, blob)
+                    return blob
+            if attempt + 1 < _FETCH_RETRIES:
+                time.sleep(_FETCH_RETRY_SLEEP)
+        raise MissingDependencyError([key])
+
+    # -- task execution -----------------------------------------------------------
 
     def _run_task(self, p: dict[str, Any]) -> None:
         key = p["key"]
@@ -162,24 +208,46 @@ class ThreadWorker:
         try:
             fn = loads_function(p["func"])
             args_spec = deserialize(p["args"])
-            dep_results = {
-                d: self._fetch_dep(d, p.get("inline_deps", {}).get(d))
-                for d in p.get("deps", [])
-            }
+            dep_info = p.get("dep_info", {})
+            inline_deps = p.get("inline_deps", {})
+            dep_results: dict[str, Any] = {}
+            missing: list[str] = []
+            for d in p.get("deps", []):
+                try:
+                    dep_results[d] = self._fetch_dep(
+                        d, dep_info.get(d), inline_deps.get(d)
+                    )
+                except MissingDependencyError as exc:
+                    missing.extend(exc.keys)
+            if missing:
+                self._send(
+                    M.msg(
+                        M.TASK_FAILED,
+                        key=key,
+                        worker=self.worker_id,
+                        missing_deps=missing,
+                        error=f"dependency bytes unavailable: {missing}",
+                    )
+                )
+                return
             args = substitute_refs(args_spec["args"], dep_results)
             kwargs = substitute_refs(args_spec["kwargs"], dep_results)
             result = fn(*list(args), **kwargs)
             blob = serialize(result).to_bytes()
-            self.data[key] = blob
-            inline = (
-                blob if len(blob) <= self.scheduler.inline_result_max else None
-            )
+            self.cache.put(key, blob)
+            if len(blob) <= self.scheduler.inline_result_max or self.results is None:
+                inline, ref = blob, None
+            else:
+                # Publish-then-report: by the time the scheduler dispatches
+                # any dependent, the bytes are already fetchable.
+                inline, ref = None, self.results.publish(key, blob)
             self._send(
                 M.msg(
                     M.TASK_DONE,
                     key=key,
                     worker=self.worker_id,
                     result=inline,
+                    ref=ref,
                     nbytes=len(blob),
                 )
             )

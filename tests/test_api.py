@@ -16,6 +16,7 @@ import numpy as np
 import pytest
 
 from repro.api import (
+    ClusterSpec,
     ConnectorSpec,
     PolicySpec,
     Session,
@@ -271,6 +272,86 @@ def _factory_key(p):
     from repro.core.proxy import get_factory
 
     return get_factory(p).key
+
+
+# -- ClusterSpec + Session(backend=...) ----------------------------------------
+
+
+def test_cluster_spec_round_trips():
+    spec = ClusterSpec(
+        n_workers=3,
+        threads_per_worker=2,
+        inline_result_max=1024,
+        data_plane=ConnectorSpec("memory", segment="rt-seg"),
+    )
+    assert ClusterSpec.from_dict(spec.to_dict()) == spec
+    # default (cluster-private) data plane round-trips as None
+    plain = ClusterSpec(n_workers=1)
+    assert ClusterSpec.from_dict(plain.to_dict()) == plain
+
+
+def test_cluster_spec_validation():
+    with pytest.raises(SpecValidationError):
+        ClusterSpec(n_workers=0)
+    # kv has no deterministic-key put_at: not a valid cluster data plane
+    with pytest.raises(SpecValidationError, match="peer"):
+        ClusterSpec(data_plane=ConnectorSpec("kv", host="localhost", port=1))
+
+
+def test_session_backend_knob_all_three():
+    with Session(backend="in-process") as s:
+        assert s.backend == "in-process"
+        assert s.submit(lambda: 1).result() == 1
+    with Session(backend="executor") as s:
+        assert s.backend == "executor"
+        assert s.submit(lambda: 2).result() == 2
+    with Session(
+        backend="cluster", cluster=ClusterSpec(n_workers=2), policy="never"
+    ) as s:
+        assert s.backend == "cluster"
+        assert s.submit(lambda: 3).result() == 3
+    with pytest.raises(ValueError, match="unknown backend"):
+        Session(backend="mainframe")
+
+
+def test_session_cluster_backend_defaults_and_owns_cluster():
+    s = Session(backend="cluster", policy=PolicySpec("size", threshold=1000))
+    cluster = s._cluster
+    assert cluster is not None and s._owns_backend
+    data = np.random.default_rng(7).normal(size=(64, 64))
+    out = s.submit(lambda x: float(np.asarray(x).sum()), data).result()
+    assert abs(out - float(data.sum())) < 1e-6
+    s.close()
+    # owned cluster was shut down with the session
+    assert not cluster.workers
+
+
+def test_session_cluster_close_evicts_published_refs():
+    """Plain (non-proxied) large results live in the cluster data plane;
+    closing the session that owns the cluster evicts them."""
+    s = Session(
+        backend="cluster",
+        cluster=ClusterSpec(n_workers=1, inline_result_max=256),
+        policy="never",
+        proxy_results=False,
+    )
+    fut = s.submit(np.arange, 10_000)
+    np.testing.assert_array_equal(fut.result(), np.arange(10_000))
+    cluster = s._cluster
+    refs = [ts.ref for ts in cluster.scheduler.tasks.values() if ts.ref]
+    assert refs and all(cluster.data_plane.exists(r) for r in refs)
+    connector = cluster.data_plane.connector
+    s.close()
+    from repro.core.connectors.base import Key
+
+    assert all(not connector.exists(Key(object_id=r)) for r in refs)
+
+
+def test_session_backend_mismatch_rejected(cluster):
+    with pytest.raises(ValueError, match="does not take"):
+        Session(backend="executor", cluster=cluster)
+    with pytest.raises(ValueError, match="takes neither"):
+        Session(backend="in-process", cluster=cluster)
 
 
 # -- deprecation shims ---------------------------------------------------------

@@ -1,0 +1,353 @@
+"""Peer-to-peer data plane tests: the metadata-only scheduler contract.
+
+Covers the tentpole invariants:
+
+* result blobs above ``inline_result_max`` never cross the scheduler
+  mailbox -- they travel worker-to-worker or through the cluster store;
+* ``RELEASE`` evicts published store entries exactly once (RefLedger),
+  even across speculative duplicate publishes;
+* lineage recovery recomputes upstream tasks when every holder of a
+  result's bytes is gone;
+* the transfer primitives (BlobCache LRU, PeerTransfer, ResultStore,
+  connector ``peer`` capability) behave on their own.
+"""
+
+from __future__ import annotations
+
+import time
+import uuid
+
+import numpy as np
+import pytest
+
+from repro.core.connectors.base import (
+    PEER_CAPABILITY,
+    Key,
+    connector_capabilities,
+    has_peer_capability,
+)
+from repro.core.ownership import RefLedger
+from repro.runtime import messages as M
+from repro.runtime.client import LocalCluster
+from repro.runtime.transfer import BlobCache, PeerTransfer, ResultStore
+
+
+def make_big(n):
+    return np.ones(n, np.float64)
+
+
+def make_blob(n):
+    return b"x" * n
+
+
+def double(x):
+    return x * 2
+
+
+def consume(x):
+    return float(np.asarray(x).sum())
+
+
+def wait_until(pred, timeout=5.0, interval=0.02):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(interval)
+    return pred()
+
+
+# -- transfer primitives -------------------------------------------------------
+
+
+def test_blob_cache_lru_byte_bound():
+    cache = BlobCache(max_bytes=100)
+    cache.put("a", b"x" * 40)
+    cache.put("b", b"y" * 40)
+    cache.put("c", b"z" * 40)  # evicts "a" (LRU)
+    assert "a" not in cache and "b" in cache and "c" in cache
+    assert cache.nbytes == 80
+    cache.get("b")  # refresh b
+    cache.put("d", b"w" * 40)  # evicts "c", not the freshly-used "b"
+    assert "c" not in cache and "b" in cache
+    cache.put("huge", b"!" * 200)  # larger than the cache: not admitted
+    assert "huge" not in cache
+
+
+def test_peer_transfer_fetch_and_accounting():
+    mesh = PeerTransfer()
+    cache = BlobCache()
+    cache.put("k", b"payload")
+    mesh.register("w0", cache)
+    assert mesh.fetch("w0", "k") == b"payload"
+    assert mesh.fetch("w0", "nope") is None
+    assert mesh.fetch("ghost", "k") is None
+    snap = mesh.snapshot()
+    assert snap["peer_fetches"] == 1 and snap["peer_bytes"] == len(b"payload")
+    mesh.unregister("w0")
+    assert mesh.fetch("w0", "k") is None
+
+
+def test_result_store_publish_is_deterministic_and_idempotent():
+    seg = f"dp-{uuid.uuid4().hex[:8]}"
+    rs = ResultStore(
+        {
+            "name": seg,
+            "connector": {"connector_type": "memory", "segment": seg},
+            "serializer": "default",
+            "cache_size": 0,
+        }
+    )
+    ref1 = rs.publish("task-key", b"first")
+    ref2 = rs.publish("task-key", b"second")  # speculative duplicate
+    assert ref1 == ref2 == "task-key"  # deterministic: same entry, no leak
+    assert rs.fetch(ref1) == b"second"
+    rs.evict(ref1)
+    assert not rs.exists(ref1)
+    rs.close()
+
+
+def test_peer_capability_registry():
+    for kind in ("memory", "file", "shm"):
+        assert PEER_CAPABILITY in connector_capabilities(kind), kind
+    assert PEER_CAPABILITY not in connector_capabilities("kv")
+    from repro.core.connectors import MemoryConnector
+
+    conn = MemoryConnector(segment=f"cap-{uuid.uuid4().hex[:6]}")
+    assert has_peer_capability(conn)
+    key = conn.put_at(Key(object_id="fixed"), b"abc")
+    assert key.object_id == "fixed"
+    assert bytes(conn.get(Key(object_id="fixed"))) == b"abc"
+
+
+def test_ref_ledger_exactly_once():
+    evictions: list[str] = []
+    ledger = RefLedger(evictions.append)
+    ledger.track("r1")
+    ledger.track("r1")  # duplicate publish: still one live entry
+    assert ledger.release("r1") is True
+    assert ledger.release("r1") is False  # second release: no double evict
+    assert evictions == ["r1"]
+    ledger.track("r2", nbytes=10)
+    ledger.forget("r2")
+    assert ledger.release("r2") is False
+    assert evictions == ["r1"]
+
+
+# -- cluster integration -------------------------------------------------------
+
+
+@pytest.fixture
+def dp_cluster():
+    """Cluster with a tiny inline threshold so small results still travel
+    the data plane."""
+    c = LocalCluster(n_workers=2, heartbeat_timeout=2.0, inline_result_max=256)
+    yield c
+    c.close()
+
+
+def test_results_never_cross_scheduler_mailbox(dp_cluster):
+    """The tentpole invariant: a large result adds only metadata bytes to
+    the hub; the blob goes through the store / peer path."""
+    with dp_cluster.get_client() as client:
+        before = dp_cluster.scheduler.bytes_through()
+        fut = client.submit(make_big, 500_000)  # ~4 MB result
+        out = fut.result()
+        after = dp_cluster.scheduler.bytes_through()
+    assert out.shape == (500_000,)
+    hub_delta = (after["in_bytes"] + after["out_bytes"]) - (
+        before["in_bytes"] + before["out_bytes"]
+    )
+    assert hub_delta < 100_000  # metadata only, no 4 MB blob
+    ts = dp_cluster.scheduler.tasks[fut.key]
+    assert ts.ref is not None and ts.result_blob is None
+
+
+def test_worker_to_worker_dep_fetch(dp_cluster):
+    """A dependent scheduled on a different worker pulls the dependency
+    straight from the producer's cache -- peer bytes move, hub bytes don't."""
+    with dp_cluster.get_client() as client:
+        a = client.submit(make_big, 50_000)
+        a.result()
+        producer = next(iter(dp_cluster.scheduler.tasks[a.key].locations))
+        # Pin the producer with a sleeper (ties broken toward the worker
+        # with more completed tasks), forcing the dependent elsewhere.
+        blocker = client.submit(time.sleep, 0.8, pure=False)
+        time.sleep(0.15)  # let the sleeper occupy the producer
+        b = client.submit(consume, a)
+        assert b.result(timeout=30) == 50_000.0
+        blocker.result(timeout=30)
+        b_loc = next(iter(dp_cluster.scheduler.tasks[b.key].locations))
+    peer = dp_cluster.transfers.snapshot()
+    if b_loc != producer:  # dependent really did land on the other worker
+        assert peer["peer_fetches"] >= 1
+        assert peer["peer_bytes"] >= 50_000 * 8
+
+
+def test_release_evicts_store_entry_exactly_once(dp_cluster):
+    with dp_cluster.get_client() as client:
+        fut = client.submit(make_blob, 5000, pure=False)
+        fut.result()
+        ts = dp_cluster.scheduler.tasks[fut.key]
+        ref = ts.ref
+        assert ref is not None and dp_cluster.data_plane.exists(ref)
+        evicts_before = dp_cluster.data_plane.connector.stats.snapshot()["evicts"]
+        client.release([fut])
+        assert wait_until(lambda: not dp_cluster.data_plane.exists(ref))
+        assert wait_until(lambda: fut.key not in dp_cluster.scheduler.tasks)
+        # a second release of the same key must not evict anything else
+        client.release([fut])
+        time.sleep(0.2)
+        evicts_after = dp_cluster.data_plane.connector.stats.snapshot()["evicts"]
+    assert evicts_after - evicts_before == 1
+
+
+def test_speculative_duplicate_publish_single_evict(dp_cluster):
+    """Two workers publishing the same deterministic ref (speculation) must
+    not leak a copy nor evict twice on release."""
+    with dp_cluster.get_client() as client:
+        fut = client.submit(make_blob, 4000, pure=False)
+        fut.result()
+        sched = dp_cluster.scheduler
+        ts = sched.tasks[fut.key]
+        ref = ts.ref
+        winner = next(iter(ts.locations))
+        other = next(w for w in sched.workers if w != winner)
+        # Simulate the speculative duplicate completing on the other worker
+        # with the same deterministic ref (put_at overwrote the same entry).
+        sched.inbox.put_msg(
+            M.msg(M.TASK_DONE, key=fut.key, worker=other, ref=ref, nbytes=ts.nbytes)
+        )
+        assert wait_until(lambda: other in ts.locations)
+        assert dp_cluster.data_plane.exists(ref)  # duplicate didn't evict
+        evicts_before = dp_cluster.data_plane.connector.stats.snapshot()["evicts"]
+        client.release([fut])
+        assert wait_until(lambda: not dp_cluster.data_plane.exists(ref))
+        time.sleep(0.1)
+        evicts_after = dp_cluster.data_plane.connector.stats.snapshot()["evicts"]
+    assert evicts_after - evicts_before == 1
+
+
+def test_orphan_publish_from_distinct_ref_is_reclaimed(dp_cluster):
+    """A losing duplicate that published under a *different* ref (non-peer
+    connector fallback) is evicted immediately when its TASK_DONE arrives."""
+    with dp_cluster.get_client() as client:
+        fut = client.submit(make_blob, 3000, pure=False)
+        fut.result()
+        sched = dp_cluster.scheduler
+        ts = sched.tasks[fut.key]
+        other = next(w for w in sched.workers if w not in ts.locations)
+        orphan_ref = dp_cluster.data_plane.publish("orphan-copy", b"o" * 3000)
+        sched.inbox.put_msg(
+            M.msg(M.TASK_DONE, key=fut.key, worker=other, ref=orphan_ref, nbytes=3000)
+        )
+        assert wait_until(lambda: not dp_cluster.data_plane.exists(orphan_ref))
+        assert dp_cluster.data_plane.exists(ts.ref)  # canonical copy untouched
+
+
+def test_lineage_recovery_when_all_holders_die():
+    """Store entry gone + every caching worker dead => the scheduler
+    recomputes the upstream task from its retained spec and the dependent
+    still completes."""
+    with LocalCluster(
+        n_workers=1, heartbeat_timeout=1.0, inline_result_max=256
+    ) as cluster:
+        with cluster.get_client() as client:
+            a = client.submit(make_big, 10_000)
+            a.result()
+            ts = cluster.scheduler.tasks[a.key]
+            ref = ts.ref
+            assert ref is not None
+            # Lose the bytes everywhere: wipe the store entry and kill the
+            # only worker holding a cached copy.
+            cluster.data_plane.evict(ref)
+            cluster.kill_worker(next(iter(cluster.workers)))
+            cluster.add_worker()
+            b = client.submit(consume, a)
+            assert b.result(timeout=30) == 10_000.0
+            # the recomputed result was re-published under the same ref
+            assert cluster.data_plane.exists(ref)
+
+
+def test_unrecoverable_missing_dep_fails_cleanly():
+    """If the upstream spec is gone too (released), the dependent errors
+    instead of hanging."""
+    with LocalCluster(
+        n_workers=1, heartbeat_timeout=1.0, inline_result_max=256
+    ) as cluster:
+        with cluster.get_client() as client:
+            a = client.submit(make_big, 10_000)
+            a.result()
+            ref = cluster.scheduler.tasks[a.key].ref
+            b = client.submit(consume, a)
+            b.result(timeout=30)  # warm path works
+            # now release upstream, wipe its bytes, and ask again (impure to
+            # bypass the pure-task result cache)
+            key_a = a.key
+            client.release([a])
+            assert wait_until(lambda: key_a not in cluster.scheduler.tasks)
+            cluster.data_plane.evict(ref)
+            cluster.kill_worker(next(iter(cluster.workers)))
+            cluster.add_worker()
+            c = client.submit(lambda x: float(np.asarray(x).sum()), a, pure=False)
+            with pytest.raises(RuntimeError):
+                c.result(timeout=30)
+
+
+def test_failed_dependency_cascades_to_dependents(dp_cluster):
+    """A dependency that errors out must fail its dependents (whichever
+    order they were submitted in), never leave them waiting forever."""
+
+    def boom():
+        raise ValueError("dead dep")
+
+    with dp_cluster.get_client() as client:
+        a = client.submit(boom, retries=0, pure=False)
+        b = client.submit(double, a, pure=False)  # may land before/after error
+        with pytest.raises(RuntimeError, match="dead dep"):
+            a.result(timeout=30)
+        with pytest.raises(RuntimeError):
+            b.result(timeout=30)
+        # submitted strictly after the error: must fail fast, not hang
+        c = client.submit(double, a, pure=False)
+        with pytest.raises(RuntimeError, match="dependency"):
+            c.result(timeout=30)
+
+
+def test_stale_cancel_does_not_poison_redispatch():
+    """A worker that once received CANCEL for a key must still execute a
+    later re-dispatch of that key (e.g. lineage recovery)."""
+    with LocalCluster(
+        n_workers=1, heartbeat_timeout=2.0, inline_result_max=256
+    ) as cluster:
+        with cluster.get_client() as client:
+            f = client.submit(make_blob, 2000, pure=False)
+            f.result()
+            worker = next(iter(cluster.workers.values()))
+            worker.mailbox.put_msg(M.msg(M.CANCEL, key=f.key))
+            assert wait_until(lambda: f.key in worker._cancelled)
+            # lose the bytes and force a recompute of the same key
+            sched = cluster.scheduler
+            ts = sched.tasks[f.key]
+            cluster.data_plane.evict(ts.ref)
+            worker.cache.pop(f.key)
+            ts.state = "ready"
+            ts.locations.clear()
+            ts.workers.clear()
+            sched.ready.append(f.key)
+            assert wait_until(
+                lambda: ts.state == "done" and cluster.data_plane.exists(ts.ref)
+            )
+
+
+def test_cluster_close_wipes_data_plane():
+    cluster = LocalCluster(n_workers=1, inline_result_max=256)
+    client = cluster.get_client()
+    fut = client.submit(make_blob, 5000, pure=False)
+    fut.result()
+    ref = cluster.scheduler.tasks[fut.key].ref
+    connector = cluster.data_plane.connector
+    assert cluster.data_plane.exists(ref)
+    client.close()
+    cluster.close()
+    assert not connector.exists(Key(object_id=ref))
