@@ -35,12 +35,19 @@ def _hub_bytes(cluster: LocalCluster) -> int:
     return snap["in_bytes"] + snap["out_bytes"]
 
 
-def _measure(cluster, submit, data, reps: int) -> tuple[float, float]:
-    """Median RTT and mean hub bytes per task (warmup included in bytes)."""
-    hub0 = _hub_bytes(cluster)
+def _hub_msgs(cluster: LocalCluster) -> int:
+    snap = cluster.scheduler.bytes_through()
+    return snap["in_msgs"] + snap["out_msgs"]
+
+
+def _measure(cluster, submit, data, reps: int) -> tuple[float, float, float]:
+    """Median RTT plus mean hub bytes and messages per task (warmup
+    included in both counters)."""
+    hub0, msg0 = _hub_bytes(cluster), _hub_msgs(cluster)
     t = timeit(lambda: submit(identity, data, pure=False).result(), reps=reps)
     per_task = (_hub_bytes(cluster) - hub0) / (reps + 1)  # +1 warmup
-    return t["median"], per_task
+    msgs_per_task = (_hub_msgs(cluster) - msg0) / (reps + 1)
+    return t["median"], per_task, msgs_per_task
 
 
 def run(payloads: list[int] | None = None, reps: int | None = None) -> dict:
@@ -52,6 +59,8 @@ def run(payloads: list[int] | None = None, reps: int | None = None) -> dict:
         "proxy_s": [],
         "baseline_hub_bytes": [],
         "proxy_hub_bytes": [],
+        "baseline_msgs_per_task": [],
+        "proxy_msgs_per_task": [],
         "hub_reduction": [],
     }
 
@@ -66,13 +75,15 @@ def run(payloads: list[int] | None = None, reps: int | None = None) -> dict:
         for nbytes in payloads:
             data = np.random.default_rng(0).bytes(nbytes)
 
-            t_base, hub_base = _measure(cluster, base.submit, data, reps)
-            t_proxy, hub_proxy = _measure(cluster, proxy.submit, data, reps)
+            t_base, hub_base, msgs_base = _measure(cluster, base.submit, data, reps)
+            t_proxy, hub_proxy, msgs_proxy = _measure(cluster, proxy.submit, data, reps)
 
             out["baseline_s"].append(t_base)
             out["proxy_s"].append(t_proxy)
             out["baseline_hub_bytes"].append(hub_base)
             out["proxy_hub_bytes"].append(hub_proxy)
+            out["baseline_msgs_per_task"].append(msgs_base)
+            out["proxy_msgs_per_task"].append(msgs_proxy)
             reduction = hub_base / max(hub_proxy, 1)
             out["hub_reduction"].append(reduction)
             improvement = 100.0 * (1 - t_proxy / t_base)
@@ -82,7 +93,8 @@ def run(payloads: list[int] | None = None, reps: int | None = None) -> dict:
             )
             record(
                 f"fig3/hub_bytes/{nbytes}B/baseline", hub_base,
-                f"proxy={hub_proxy:.0f}B reduction={reduction:.1f}x",
+                f"proxy={hub_proxy:.0f}B reduction={reduction:.1f}x "
+                f"msgs/task={msgs_proxy:.2f}",
             )
 
         # Result-path invariant: a task *producing* a large result adds only
@@ -121,8 +133,8 @@ def smoke(payload: int = 65_536, reps: int = 3) -> bool:
             policy=PolicySpec("size", threshold=0),
         )
         data = np.random.default_rng(0).bytes(payload)
-        t_base, hub_base = _measure(cluster, base.submit, data, reps)
-        t_proxy, hub_proxy = _measure(cluster, proxy.submit, data, reps)
+        t_base, hub_base, _ = _measure(cluster, base.submit, data, reps)
+        t_proxy, hub_proxy, msgs_proxy = _measure(cluster, proxy.submit, data, reps)
         reduction = hub_base / max(hub_proxy, 1)
         record(
             f"smoke/hub_bytes/{payload}B/baseline", hub_base,
@@ -143,6 +155,20 @@ def smoke(payload: int = 65_536, reps: int = 3) -> bool:
                 f"{payload}B result -- result blobs must pass by reference"
             )
             ok = False
+        save_artifact(
+            "smoke_overheads",
+            {
+                "payload_bytes": payload,
+                "baseline_s": t_base,
+                "proxy_s": t_proxy,
+                "baseline_hub_bytes": hub_base,
+                "proxy_hub_bytes": hub_proxy,
+                "proxy_msgs_per_task": msgs_proxy,
+                "hub_reduction": reduction,
+                "result_ref_hub_bytes": result_hub,
+                "ok": ok,
+            },
+        )
         proxy.close()
         base.close()
     finally:

@@ -8,10 +8,12 @@ Prints ``name,us_per_call,derived`` CSV rows and writes JSON artifacts under
     BENCH_QUICK=1 ... python -m benchmarks.run           # CI-sized
     PYTHONPATH=src python -m benchmarks.run --smoke      # CI data-plane guard
 
-``--smoke`` runs the Fig-3 overheads with tiny payloads on the cluster
-backend and exits non-zero when a data-plane invariant regresses
-(scheduler hub-byte reduction, results-by-reference) -- wired into
-``scripts/ci.sh`` so regressions fail CI.
+``--smoke`` is the CI regression guard: it runs the Fig-3 overheads with
+tiny payloads plus the 512-task fan-out/fan-in graph benchmark on the
+cluster backend, writes their JSON artifacts (uploaded by CI), and exits
+non-zero when an invariant regresses -- scheduler hub-byte reduction,
+results-by-reference, graph submission staying <= 2 scheduler msgs/task
+and >= 2x per-task submit throughput.  Wired into ``scripts/ci.sh smoke``.
 """
 
 from __future__ import annotations
@@ -24,10 +26,11 @@ SUITES = ("serializer", "fig3", "fig4", "fig5", "roofline")
 
 def main() -> None:
     if "--smoke" in sys.argv:
-        from benchmarks import overheads
+        from benchmarks import overheads, scaling
 
         print("name,us_per_call,derived")
         ok = overheads.smoke()
+        ok = scaling.smoke() and ok
         print(f"# smoke {'PASS' if ok else 'FAIL'}", flush=True)
         sys.exit(0 if ok else 1)
 

@@ -1,14 +1,57 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the whole suite + the data-plane smoke benchmark.
+# One CI entrypoint for local runs and the GitHub Actions jobs:
+#
+#   scripts/ci.sh lint    # ruff check + format check (skips if ruff absent)
+#   scripts/ci.sh test    # pytest (-x locally; full failure list when CI=true)
+#   scripts/ci.sh smoke   # benchmark regression guards (writes JSON artifacts)
+#   scripts/ci.sh [all]   # everything, in that order (the default)
+#
+# Extra arguments after `test`/`all` pass through to pytest.
 # (pyproject.toml sets pythonpath=src for pytest; the env var below keeps
 # the commands working even under pytest<7 or when invoked from elsewhere.)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-python -m pytest -x -q "$@"
 
-# Data-plane regression guard: tiny-payload overheads on the cluster
-# backend; fails when scheduler bytes stop dropping or results stop
-# passing by reference.
-BENCH_QUICK=1 python -m benchmarks.run --smoke
+cmd_lint() {
+  if command -v ruff >/dev/null 2>&1; then
+    ruff check src benchmarks tests
+    ruff format --check src benchmarks tests
+  elif python -m ruff --version >/dev/null 2>&1; then
+    python -m ruff check src benchmarks tests
+    python -m ruff format --check src benchmarks tests
+  else
+    echo "ruff not installed; skipping lint (pip install ruff to enable)" >&2
+  fi
+}
+
+cmd_test() {
+  local args=(-q)
+  # Locally, fail fast; in CI report the full failure list.
+  if [ "${CI:-}" != "true" ]; then
+    args+=(-x)
+  fi
+  python -m pytest "${args[@]}" "$@"
+}
+
+cmd_smoke() {
+  # Benchmark regression guards: data-plane invariants (hub-byte reduction,
+  # results-by-reference) and control-plane invariants (graph submission
+  # <= 2 scheduler msgs/task, >= 2x per-task submit throughput).  JSON
+  # lands in artifacts/bench/ for the CI artifact upload.
+  BENCH_QUICK=1 python -m benchmarks.run --smoke
+}
+
+cmd="${1:-all}"
+if [ "$#" -gt 0 ]; then shift; fi
+case "$cmd" in
+  lint)  cmd_lint ;;
+  test)  cmd_test "$@" ;;
+  smoke) cmd_smoke ;;
+  all)   cmd_lint; cmd_test "$@"; cmd_smoke ;;
+  *)
+    echo "usage: scripts/ci.sh [lint|test|smoke|all] [pytest args...]" >&2
+    exit 2
+    ;;
+esac

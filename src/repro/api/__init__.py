@@ -42,6 +42,7 @@ from repro.core.policy import (
     register_policy,
 )
 from repro.core.store import list_serializers, register_serializer
+from repro.runtime.graph import GraphNode, TaskGraph
 
 __all__ = [
     "ClusterSpec",
@@ -51,6 +52,8 @@ __all__ = [
     "StoreConfig",
     "Session",
     "as_completed",
+    "GraphNode",
+    "TaskGraph",
     "PluginRegistry",
     "UnknownPluginError",
     "connector_registry",

@@ -27,7 +27,6 @@ from repro.core.connectors.base import (
     connector_capabilities,
     connector_registry,
 )
-from repro.core.plugins import UnknownPluginError
 from repro.core.policy import Policy, policy_registry
 from repro.core.store import Store, serializer_registry
 

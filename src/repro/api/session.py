@@ -41,6 +41,7 @@ from repro.core.executor import StoreExecutor
 from repro.core.policy import Policy, SizePolicy
 from repro.core.proxy import Proxy, get_factory, is_proxy
 from repro.core.store import Store
+from repro.runtime.graph import GraphNode, TaskGraph, substitute_refs
 
 T = TypeVar("T")
 
@@ -205,7 +206,88 @@ class Session:
         return self._submit_inprocess(fn, *args, **kwargs)
 
     def map(self, fn: Callable[..., T], *iterables: Iterable) -> list[Future]:
+        """On the cluster backend the whole map batches into ONE task-graph
+        submission (one scheduler message); other backends submit per item."""
+        self._check_open()
+        if self._client is not None:
+            return self._client.map(fn, *iterables)
         return [self.submit(fn, *args) for args in zip(*iterables)]
+
+    # -- task graphs -------------------------------------------------------------
+
+    def graph(self) -> TaskGraph:
+        """A fresh :class:`TaskGraph` builder (convenience constructor)."""
+        self._check_open()
+        return TaskGraph()
+
+    def submit_graph(
+        self, graph: TaskGraph, nodes: Sequence[GraphNode] | None = None
+    ) -> list[Future]:
+        """Submit a dependency graph; returns futures for ``nodes``
+        (default: the graph's outputs).
+
+        On the cluster backend the graph crosses the control plane as a
+        single ``SUBMIT_GRAPH`` message and interior nodes complete without
+        any per-task client traffic.  Other backends execute the graph
+        locally in topological order (the executor backend runs independent
+        nodes concurrently), so graph-shaped code is portable across every
+        backend.
+        """
+        self._check_open()
+        if self._client is not None:
+            return self._client.submit_graph(graph, nodes=nodes)
+        nodes = graph.outputs() if nodes is None else list(nodes)
+        for node in nodes:  # fail before running anything, like the cluster path
+            if node.key not in graph:
+                raise ValueError(f"node {node.key} is not part of this graph")
+        futures_by_key: dict[str, Future] = {}
+        for key, spec in graph.items():
+            # Resolve dependency futures and any live Future arguments
+            # *here*, client-side: process pools cannot pickle Future
+            # objects, and deps were submitted first (topo order), so
+            # waiting on them cannot deadlock.  Dependency-free nodes
+            # (wide fan-outs) never block this loop.
+            try:
+                dep_values = {
+                    d: futures_by_key[d].result()
+                    for d in spec["deps"]
+                    if d in futures_by_key
+                }
+                spec = {
+                    **spec,
+                    "args": _resolve_future_args(spec["args"]),
+                    "kwargs": _resolve_future_args(spec["kwargs"]),
+                }
+            except BaseException as exc:
+                f = Future()
+                f.set_exception(exc)
+                futures_by_key[key] = f
+                continue
+            if self._raw_executor is not None:
+                futures_by_key[key] = self._raw_executor.submit(
+                    _run_graph_node, spec, dep_values
+                )
+            else:
+                f = Future()
+                try:
+                    f.set_result(_run_graph_node(spec, dep_values))
+                except BaseException as exc:
+                    f.set_exception(exc)
+                futures_by_key[key] = f
+        return [futures_by_key[n.key] for n in nodes]
+
+    def compute(
+        self, graph: TaskGraph, nodes: Sequence[GraphNode] | GraphNode | None = None
+    ) -> Any:
+        """Submit ``graph`` and block for its results.
+
+        Returns the result list for ``nodes`` (default: graph outputs); a
+        single :class:`GraphNode` returns its bare result.
+        """
+        single = isinstance(nodes, GraphNode)
+        futures = self.submit_graph(graph, nodes=[nodes] if single else nodes)
+        results = [f.result() for f in futures]
+        return results[0] if single else results
 
     def gather(self, futures: Sequence[Future] | Future) -> list[Any] | Any:
         if isinstance(futures, Future):
@@ -307,6 +389,14 @@ class Session:
             f"Session(name={self.name!r}, backend={self.backend!r}, "
             f"store={self.store.name!r}, {state})"
         )
+
+
+def _run_graph_node(spec: dict[str, Any], dep_values: dict[str, Any]) -> Any:
+    """Execute one graph node outside the cluster: substitute resolved
+    dependency values into the arg spec and call the function."""
+    args = substitute_refs(spec["args"], dep_values)
+    kwargs = substitute_refs(spec["kwargs"], dep_values)
+    return spec["fn"](*args, **kwargs)
 
 
 def _resolve_future_args(obj: Any) -> Any:

@@ -11,7 +11,7 @@ from __future__ import annotations
 import threading
 import uuid
 from dataclasses import dataclass
-from typing import Any, Iterable, Protocol, Sequence, runtime_checkable
+from typing import Any, Protocol, Sequence, runtime_checkable
 
 from repro.core.plugins import PluginRegistry
 from repro.core.serialize import SerializedObject

@@ -12,11 +12,9 @@ import threading
 from typing import Any, Sequence
 
 from repro.core.connectors.base import (
-    Connector,
     ConnectorStats,
     Key,
     Payload,
-    payload_nbytes,
     register_connector,
 )
 from repro.core.serialize import SerializedObject

@@ -21,7 +21,7 @@ from typing import Any, Callable, TypeVar
 
 from repro.core._deprecation import warn_legacy
 from repro.core.policy import Policy, SizePolicy
-from repro.core.proxy import Proxy, StoreFactory, TargetMetadata, is_proxy
+from repro.core.proxy import Proxy, is_proxy
 from repro.core.store import Store, get_or_create_store
 
 T = TypeVar("T")

@@ -19,7 +19,7 @@ without requiring a distributed lock service.
 from __future__ import annotations
 
 import threading
-from typing import Any, Callable, TypeVar
+from typing import Callable, TypeVar
 
 from repro.core.proxy import (
     Factory,

@@ -16,7 +16,7 @@ round-tripped through config dicts, mirroring the connector registry::
 from __future__ import annotations
 
 import importlib
-from typing import Any, Callable, Iterable
+from typing import Any, Callable
 
 from repro.core.plugins import PluginRegistry
 from repro.core.serialize import estimate_size

@@ -26,7 +26,7 @@ just-in-time resolution at task execution.
 from __future__ import annotations
 
 import operator
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Generic, TypeVar, Union
 
 T = TypeVar("T")

@@ -189,6 +189,34 @@ def _registered_pytree(obj: Any) -> bool:
     return not (len(leaves) == 1 and leaves[0] is obj)
 
 
+_SCALAR_TYPES = (int, float, bool, complex, str, bytes, bytearray, type(None))
+
+
+def _scan_for_array(obj: Any) -> bool:
+    """Cheap recursive probe: does a builtin-container tree hold any
+    array-like leaf?  Avoids a jax ``tree_flatten`` (hundreds of us with
+    treedef construction) for the overwhelmingly common all-Python case --
+    control-plane messages, task arg specs, scalar results.  Array leaves
+    nested inside *registered custom* pytree nodes are not seen here; those
+    fall back to pickle-5, which still moves their buffers out-of-band.
+    """
+    t = type(obj)
+    if t in _SCALAR_TYPES:
+        return False
+    if t is dict:
+        return any(_scan_for_array(v) for v in obj.values())
+    if t is list or t is tuple:
+        return any(_scan_for_array(x) for x in obj)
+    if isinstance(obj, np.ndarray):
+        return True
+    if _is_proxy(obj):
+        return False  # a proxy serializes as its factory, never as bytes
+    mod = getattr(t, "__module__", None)
+    if not isinstance(mod, str):  # classes that lie about their attributes
+        return True  # conservative: let the jax probe decide
+    return mod.startswith("jax") or mod.startswith("jaxlib") or mod.startswith("numpy")
+
+
 def _pack(header: dict[str, Any], buffers: list[memoryview]) -> SerializedObject:
     header["sizes"] = [b.nbytes for b in buffers]
     return SerializedObject(msgpack.packb(header), buffers)
@@ -203,6 +231,13 @@ def serialize(obj: Any) -> SerializedObject:
         buffers.append(memoryview(payload))
         return _pack({"kind": "pickle", "n": 1}, buffers)
 
+    if obj is None or type(obj) in (int, float, bool, complex, str):
+        # Scalar fast path: a pytree probe (jax import + tree_leaves) costs
+        # hundreds of us, which would dominate tiny task results.
+        payload = pickle.dumps(obj, protocol=5)
+        buffers.append(memoryview(payload))
+        return _pack({"kind": "pickle", "n": 1}, buffers)
+
     arr = _as_ndarray(obj)
     if arr is not None:
         leaf = _encode_leaf(arr, buffers)
@@ -212,7 +247,11 @@ def serialize(obj: Any) -> SerializedObject:
         buffers.append(memoryview(obj).cast("B"))
         return _pack({"kind": "raw"}, buffers)
 
-    if isinstance(obj, (dict, list, tuple)) or _registered_pytree(obj):
+    if (
+        _scan_for_array(obj)
+        if isinstance(obj, (dict, list, tuple))
+        else _registered_pytree(obj)
+    ):
         import jax
 
         leaves, treedef = jax.tree_util.tree_flatten(obj)

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import threading
 from collections import OrderedDict
-from typing import Any, Callable, Iterable, Sequence, TypeVar
+from typing import Any, Callable, Sequence, TypeVar
 
 from repro.core._deprecation import api_managed, warn_legacy
 from repro.core.connectors.base import Connector, Key, connector_from_config

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.fingerprint.ref import M1, PHI, SEED, _fold, _lane_salt
+from repro.kernels.fingerprint.ref import M1, PHI, SEED, _fold
 
 
 def _fp_kernel(x_ref, out_ref, acc_ref, *, n_blocks: int):

@@ -23,7 +23,6 @@ compiled program, not a timing model.
 
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 from typing import Any

@@ -19,8 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, get_smoke_config
 from repro.api import ConnectorSpec, StoreConfig
+from repro.configs import get_config, get_smoke_config
 from repro.core import is_proxy
 from repro.distributed.sharding import ShardingRules
 from repro.models import transformer as tx

@@ -15,7 +15,6 @@ the same code on a debug mesh -- the examples wrap exactly this entry point.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
 from pathlib import Path
@@ -24,8 +23,8 @@ from typing import Any
 import jax
 import numpy as np
 
-from repro.configs import get_config, get_smoke_config
 from repro.api import ConnectorSpec, StoreConfig
+from repro.configs import get_config, get_smoke_config
 from repro.distributed.sharding import ShardingRules
 from repro.models import transformer as tx
 from repro.train.checkpoint import CheckpointManager

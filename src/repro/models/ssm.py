@@ -164,8 +164,6 @@ def apply_mamba(
     d_model: int | None = None,
     ctx: Any = None,
 ) -> tuple[jax.Array, Params | None]:
-    from repro.models.common import shard_hint
-
     s = cfg.ssm
     ct = cfg.compute_dtype
     d = d_model or cfg.d_model

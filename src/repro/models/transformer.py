@@ -27,7 +27,6 @@ from repro.models.layers import (
     init_mlp,
     init_norm,
     logits_matmul,
-    normal_init,
 )
 
 Params = dict[str, Any]

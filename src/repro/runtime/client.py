@@ -28,7 +28,7 @@ from repro.core.proxy import is_proxy
 from repro.core.serialize import deserialize, serialize
 from repro.core.store import Store
 from repro.runtime import messages as M
-from repro.runtime.graph import FutureRef, find_refs, tokenize
+from repro.runtime.graph import FutureRef, GraphNode, TaskGraph, find_refs, tokenize
 from repro.runtime.scheduler import Mailbox, Scheduler
 from repro.runtime.transfer import PeerTransfer, ResultStore
 from repro.runtime.worker import ThreadWorker, dumps_function
@@ -75,7 +75,11 @@ class Client:
     ) -> RuntimeFuture:
         args_spec, deps = self._encode_args(args, kwargs)
         if pure:
-            key = tokenize(fn, list(args), sorted(kwargs.items(), key=repr))
+            # Tokenize the *converted* spec: futures hash by task key
+            # (deterministic), everything else by content.
+            key = tokenize(
+                fn, args_spec["args"], sorted(args_spec["kwargs"].items(), key=repr)
+            )
         else:
             key = f"task-{uuid.uuid4().hex}"
         future = RuntimeFuture(key, self)
@@ -94,6 +98,66 @@ class Client:
             )
         )
         return future
+
+    def submit_graph(
+        self, graph: TaskGraph, nodes: Sequence[GraphNode] | None = None
+    ) -> list[RuntimeFuture]:
+        """Submit a whole :class:`TaskGraph` as ONE scheduler message.
+
+        Returns futures for ``nodes`` (default: the graph's outputs).
+        Interior nodes run without any per-task client traffic: the
+        scheduler sends FINISHED only for the keys futures were requested
+        for, so an N-task fan-in costs one SUBMIT_GRAPH and one FINISHED
+        instead of N SUBMITs and N FINISHEDs.
+        """
+        nodes = graph.outputs() if nodes is None else list(nodes)
+        # Validate before registering any future: a bad node must not leave
+        # earlier valid nodes with forever-pending futures.
+        for node in nodes:
+            if node.key not in graph:
+                raise ValueError(f"node {node.key} is not part of this graph")
+        futures: list[RuntimeFuture] = []
+        with self._lock:
+            for node in nodes:
+                future = RuntimeFuture(node.key, self)
+                self._futures.setdefault(node.key, []).append(future)
+                futures.append(future)
+        tasks = []
+        fn_blobs: dict[int, bytes] = {}  # graphs reuse fns heavily (map!)
+        for key, spec in graph.items():
+            fn = spec["fn"]
+            blob = fn_blobs.get(id(fn))
+            if blob is None:
+                blob = fn_blobs[id(fn)] = dumps_function(fn)
+            args = [self._prepare_arg(a) for a in spec["args"]]
+            kwargs = {k: self._prepare_arg(v) for k, v in spec["kwargs"].items()}
+            tasks.append(
+                {
+                    "key": key,
+                    "func": blob,
+                    # Structured, not pre-serialized: the arg spec rides the
+                    # single SUBMIT_GRAPH (and later RUN_BATCH) encode, so
+                    # nothing pays a per-task serialize/deserialize pass.
+                    "args": {"args": args, "kwargs": kwargs},
+                    "deps": spec["deps"],
+                    "pure": spec["pure"],
+                    "retries": spec["retries"],
+                }
+            )
+        self.scheduler.inbox.put_msg(
+            M.msg(
+                M.SUBMIT_GRAPH,
+                client=self.client_id,
+                tasks=tasks,
+                wants=sorted({n.key for n in nodes}),
+            )
+        )
+        return futures
+
+    def _prepare_arg(self, obj: Any) -> Any:
+        """Hook for subclasses to transform graph-node arguments at submit
+        time (ProxyClient swaps large values for proxies)."""
+        return obj
 
     def _encode_args(
         self, args: Sequence[Any], kwargs: dict[str, Any]
@@ -119,7 +183,20 @@ class Client:
         return spec, sorted(set(deps))
 
     def map(self, fn: Callable, *iterables: Iterable, **kwargs: Any) -> list[RuntimeFuture]:
-        return [self.submit(fn, *args, **kwargs) for args in zip(*iterables)]
+        """Batch the whole map into one graph submission (one message),
+        instead of N per-task SUBMIT round-trips."""
+        pure = kwargs.pop("pure", True)
+        retries = kwargs.pop("retries", 2)
+        graph = TaskGraph()
+        # add_call keeps remaining user kwargs (even ones named `key`)
+        # flowing to the function instead of colliding with task params.
+        nodes = [
+            graph.add_call(fn, args, kwargs, pure=pure, retries=retries)
+            for args in zip(*iterables)
+        ]
+        if not nodes:
+            return []
+        return self.submit_graph(graph, nodes=nodes)
 
     def gather(self, futures: Sequence[RuntimeFuture]) -> list[Any]:
         return [f.result() for f in futures]
@@ -218,13 +295,18 @@ class ProxyClient(Client):
         self.proxy_results = proxy_results
 
     def _maybe_proxy(self, obj: Any) -> Any:
-        if isinstance(obj, RuntimeFuture) or is_proxy(obj):
+        if isinstance(obj, (RuntimeFuture, FutureRef)) or is_proxy(obj):
             return obj
         if isinstance(obj, (list, tuple, dict)) and find_refs(obj):
             return obj  # keep structures holding future refs intact
         if self.should_proxy(obj):
             return self.store.proxy(obj, evict=False)
         return obj
+
+    def _prepare_arg(self, obj: Any) -> Any:
+        # Graph-node args pass by proxy exactly like per-task submit args,
+        # so a batched SUBMIT_GRAPH stays metadata-sized on the hub.
+        return self._maybe_proxy(obj)
 
     def submit(self, fn: Callable, /, *args: Any, **kwargs: Any) -> RuntimeFuture:
         pure = kwargs.pop("pure", True)

@@ -15,7 +15,6 @@ Channels:
 
 from __future__ import annotations
 
-import pickle
 import queue
 import threading
 from dataclasses import dataclass, field

@@ -8,11 +8,22 @@ data plane (``runtime/transfer.py``) and are referenced here by
 
 Tags:
 
-client -> scheduler:   submit, release, client_shutdown
+client -> scheduler:   submit, submit_graph, release, client_shutdown
 worker -> scheduler:   register, heartbeat, task_done, task_failed,
-                       deregister
-scheduler -> worker:   run_task, cancel, stop
+                       steal_ack, deregister
+scheduler -> worker:   run_task, run_batch, steal, cancel, stop
 scheduler -> client:   finished, failed
+
+``submit_graph`` amortizes submission (one message for a whole task
+graph); ``run_batch`` amortizes dispatch (one message for every task bound
+to a worker in a dispatch pass -- the worker pipelines them through its
+local ready queue); ``report_batch`` amortizes completion (a worker
+coalesces the ``task_done``/``task_failed`` reports of a completion burst
+into one message after a ~2 ms window).  ``steal``/``steal_ack``
+rebalance skewed fan-outs: the
+scheduler asks a loaded worker to give back *unstarted* queued tasks, the
+worker confirms exactly which ones it relinquished, and only those are
+re-dispatched -- so a task can never run twice because of a steal.
 
 The hub-mediated forwarding tags of the old data plane (``need_data`` /
 ``send_data`` / ``data`` / ``gather``) are gone, not deprecated: there is
@@ -24,6 +35,7 @@ from __future__ import annotations
 from typing import Any
 
 SUBMIT = "submit"
+SUBMIT_GRAPH = "submit_graph"
 RELEASE = "release"
 CLIENT_SHUTDOWN = "client_shutdown"
 
@@ -31,9 +43,13 @@ REGISTER = "register"
 HEARTBEAT = "heartbeat"
 TASK_DONE = "task_done"
 TASK_FAILED = "task_failed"
+REPORT_BATCH = "report_batch"
+STEAL_ACK = "steal_ack"
 DEREGISTER = "deregister"
 
 RUN_TASK = "run_task"
+RUN_BATCH = "run_batch"
+STEAL = "steal"
 CANCEL = "cancel"
 STOP = "stop"
 

@@ -31,6 +31,17 @@ Production features (per the 1000+-node mandate):
   dependency bytes (Dask's memory-aware placement).
 * **Pure-function caching** -- task keys are content tokens; resubmission
   of a completed pure task returns the cached result without re-running.
+* **Graph-native batching** -- a whole task graph arrives as one
+  ``SUBMIT_GRAPH`` message, and each dispatch pass coalesces every task
+  bound to the same worker into one ``RUN_BATCH``; workers pipeline the
+  batch through a local ready queue, so per-task control traffic collapses
+  to roughly one ``TASK_DONE`` per task.
+* **Work stealing** -- dispatch over-assigns eagerly for pipelining; when
+  the ready queue is empty and a worker has a free thread while another
+  has unstarted backlog, the scheduler asks the loaded worker to give
+  tasks back (``STEAL``), re-queuing only the ones the worker *confirms*
+  it never started (``STEAL_ACK``) -- skewed fan-outs cannot strand
+  capacity, and no task double-runs because of a steal.
 """
 
 from __future__ import annotations
@@ -68,6 +79,11 @@ class Mailbox:
         self.counter.add_recv(len(blob))
         return decode_message(blob)
 
+    def get_nowait(self) -> Any:
+        blob = self._q.get_nowait()
+        self.counter.add_recv(len(blob))
+        return decode_message(blob)
+
     def empty(self) -> bool:
         return self._q.empty()
 
@@ -76,7 +92,9 @@ class Mailbox:
 class TaskState:
     key: str
     func_blob: bytes
-    args_blob: bytes
+    #: Pre-serialized bytes (legacy SUBMIT) or a structured arg spec
+    #: (SUBMIT_GRAPH) that rides each batch encode without a per-task pass.
+    args_blob: Any
     deps: list[str]
     pure: bool = True
     state: str = "waiting"  # waiting|ready|running|done|error
@@ -95,18 +113,36 @@ class TaskState:
     speculated: bool = False
     waiting_clients: list[str] = field(default_factory=list)
     dependents: set[str] = field(default_factory=set)
+    #: Deps not yet done.  Maintained incrementally so a completion touches
+    #: each dependent O(1) -- a 512-way fan-in must not rescan all 512 deps
+    #: on every one of the 512 completions.
+    waiting_on: set[str] = field(default_factory=set)
 
 
 @dataclass
 class WorkerState:
     worker_id: str
     mailbox: Any  # Mailbox or pipe-backed sender
-    running: set[str] = field(default_factory=set)
+    running: set[str] = field(default_factory=set)  # dispatched, not reported done
+    #: scheduler's view of the worker's local ready queue, in assignment
+    #: order -- the tail is the least likely to have started and is where
+    #: work stealing takes from.
+    queued: deque = field(default_factory=deque)
     has_data: set[str] = field(default_factory=set)
     last_heartbeat: float = field(default_factory=time.monotonic)
     nthreads: int = 1
     alive: bool = True
     total_done: int = 0
+
+    def occupancy(self) -> float:
+        """Outstanding tasks per thread -- the dispatch balance metric."""
+        return len(self.running) / max(self.nthreads, 1)
+
+    def unqueue(self, key: str) -> None:
+        try:
+            self.queued.remove(key)
+        except ValueError:
+            pass
 
 
 #: Bound on the task-duration history feeding speculation's median.  The
@@ -140,6 +176,7 @@ class Scheduler:
         self.inline_result_max = inline_result_max
         self.result_store = result_store  # transfer.ResultStore | None
         self.ledger = RefLedger(self._evict_ref)
+        self._stealing: set[str] = set()  # keys with a STEAL in flight
         self._durations: deque[float] = deque(maxlen=DURATION_WINDOW)
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
@@ -213,9 +250,13 @@ class Scheduler:
     def _loop(self) -> None:
         last_tick = time.monotonic()
         while not self._stop.is_set():
+            # Drain everything already queued before dispatching: a burst of
+            # TASK_DONEs (or one SUBMIT_GRAPH) then yields a single dispatch
+            # pass whose per-worker RUN_BATCH coalescing actually batches.
             try:
-                message = self.inbox.get(timeout=0.2)
-                self._handle(message)
+                self._handle(self.inbox.get(timeout=0.2))
+                while True:
+                    self._handle(self.inbox.get_nowait())
             except queue.Empty:
                 pass
             except Exception:
@@ -232,6 +273,8 @@ class Scheduler:
         tag, p = message
         if tag == M.SUBMIT:
             self._on_submit(p)
+        elif tag == M.SUBMIT_GRAPH:
+            self._on_submit_graph(p)
         elif tag == M.REGISTER:
             self._register_worker(
                 p["worker"], p["mailbox"], p.get("nthreads", 1)
@@ -246,6 +289,12 @@ class Scheduler:
             self._on_task_done(p)
         elif tag == M.TASK_FAILED:
             self._on_task_failed(p)
+        elif tag == M.REPORT_BATCH:
+            # A worker's coalesced completion burst: unpack in order.
+            for inner in p["reports"]:
+                self._handle(inner)
+        elif tag == M.STEAL_ACK:
+            self._on_steal_ack(p)
         elif tag == M.RELEASE:
             self._on_release(p)
         elif tag == M.STOP:
@@ -254,29 +303,51 @@ class Scheduler:
     # -- submission ------------------------------------------------------------
 
     def _on_submit(self, p: dict[str, Any]) -> None:
-        key, client_id = p["key"], p["client"]
+        self._admit_task(p, p["client"])
+
+    def _on_submit_graph(self, p: dict[str, Any]) -> None:
+        """Admit a whole task graph from ONE message.
+
+        ``tasks`` arrive in topological order (the client builder inserts
+        nodes before their dependents), so each node's in-graph deps are
+        already in ``self.tasks`` when it is admitted.  Only keys in
+        ``wants`` -- the ones the client holds futures for -- get a
+        waiting-client entry; interior nodes complete silently, so a
+        512-task fan-in costs one FINISHED, not 512.
+        """
+        client_id = p["client"]
+        wants = set(p.get("wants") or [])
+        for spec in p["tasks"]:
+            self._admit_task(spec, client_id if spec["key"] in wants else None)
+
+    def _admit_task(self, spec: dict[str, Any], client_id: str | None) -> None:
+        key = spec["key"]
         ts = self.tasks.get(key)
-        if ts is not None and p.get("pure", True):
+        if ts is not None and spec.get("pure", True):
             # Pure-function cache hit: reuse finished/inflight computation.
-            if client_id not in ts.waiting_clients:
+            # (Also the duplicate-key-across-graphs path.)
+            if ts.state == "error":
+                if client_id is not None:
+                    self._send_client(
+                        client_id, M.msg(M.FAILED, key=key, error=ts.error or "")
+                    )
+                return
+            if client_id is not None and client_id not in ts.waiting_clients:
                 ts.waiting_clients.append(client_id)
             if ts.state == "done":
                 self._notify_done(ts)
-            elif ts.state == "error":
-                self._send_client(
-                    client_id, M.msg(M.FAILED, key=key, error=ts.error or "")
-                )
             return
         ts = TaskState(
             key=key,
-            func_blob=p["func"],
-            args_blob=p["args"],
-            deps=list(p.get("deps", [])),
-            pure=p.get("pure", True),
-            max_retries=p.get("retries", 2),
+            func_blob=spec["func"],
+            args_blob=spec["args"],
+            deps=list(spec.get("deps", [])),
+            pure=spec.get("pure", True),
+            max_retries=spec.get("retries", 2),
             submitted_at=time.monotonic(),
         )
-        ts.waiting_clients.append(client_id)
+        if client_id is not None:
+            ts.waiting_clients.append(client_id)
         unknown = [d for d in ts.deps if d not in self.tasks]
         if unknown:
             # A dependency spec the scheduler no longer holds (released or
@@ -284,7 +355,8 @@ class Scheduler:
             ts.state = "error"
             ts.error = f"unknown or released dependencies: {unknown}"
             self.tasks[key] = ts
-            self._send_client(client_id, M.msg(M.FAILED, key=key, error=ts.error))
+            if client_id is not None:
+                self._send_client(client_id, M.msg(M.FAILED, key=key, error=ts.error))
             ts.waiting_clients.clear()
             return
         self.tasks[key] = ts
@@ -298,14 +370,12 @@ class Scheduler:
                 ts, f"dependency {failed[0]} failed: {self.tasks[failed[0]].error}"
             )
             return
-        if self._deps_ready(ts):
+        ts.waiting_on = {
+            d for d in ts.deps if self.tasks[d].state != "done"
+        }
+        if not ts.waiting_on:
             ts.state = "ready"
             self.ready.append(key)
-
-    def _deps_ready(self, ts: TaskState) -> bool:
-        return all(
-            (d in self.tasks and self.tasks[d].state == "done") for d in ts.deps
-        )
 
     # -- dispatch ----------------------------------------------------------------
 
@@ -317,22 +387,37 @@ class Scheduler:
         ]
 
     def _pick_worker(self, ts: TaskState) -> WorkerState | None:
-        idle = self._idle_workers()
-        if not idle:
+        """Least-loaded alive worker, dependency locality first.
+
+        Load is ``running/nthreads`` (occupancy), not a raw count -- a
+        4-thread worker with 2 outstanding tasks is *less* loaded than a
+        1-thread worker with 1.  Dispatch intentionally over-assigns past
+        ``nthreads``: workers pipeline extra tasks through a local ready
+        queue, and work stealing repairs any imbalance that develops.
+        """
+        alive = [ws for ws in self.workers.values() if ws.alive]
+        if not alive:
             return None
         if ts.deps:
-            # Locality: prefer the worker holding the most dep results.
-            def score(ws: WorkerState) -> tuple[int, int]:
+            # Locality: prefer the worker holding the most dep results --
+            # but only within the same whole-tasks-per-thread load band.
+            # If locality dominated outright, a steal-acked task whose deps
+            # live on the loaded victim would bounce straight back to it
+            # (steal ping-pong) and idle workers could never help drain a
+            # dep-local backlog; bytes are fetchable from peers anyway.
+            def score(ws: WorkerState) -> tuple[int, int, float]:
                 held = sum(1 for d in ts.deps if d in ws.has_data)
-                return (held, -len(ws.running))
+                return (int(ws.occupancy()), -held, ws.occupancy())
 
-            return max(idle, key=score)
-        return min(idle, key=lambda ws: (len(ws.running), -ws.total_done))
+            return min(alive, key=score)
+        return min(alive, key=lambda ws: (ws.occupancy(), -ws.total_done))
 
     def _dispatch(self) -> None:
         if not self.ready:
+            self._maybe_steal()
             return
         remaining: list[str] = []
+        batches: dict[str, list[dict[str, Any]]] = {}
         for key in self.ready:
             ts = self.tasks.get(key)
             if ts is None or ts.state != "ready":
@@ -341,14 +426,30 @@ class Scheduler:
             if ws is None:
                 remaining.append(key)
                 continue
-            self._run_on(ts, ws)
+            self._assign(ts, ws)
+            batches.setdefault(ws.worker_id, []).append(self._task_payload(ts))
         self.ready = remaining
+        # Pipelined batched dispatch: every task bound to the same worker in
+        # this pass rides ONE message; the worker's local queue pipelines
+        # them across its threads without further scheduler round-trips.
+        for worker_id, payloads in batches.items():
+            ws = self.workers.get(worker_id)
+            if ws is None:
+                continue
+            if len(payloads) == 1:
+                self._send_worker(ws, (M.RUN_TASK, payloads[0]))
+            else:
+                self._send_worker(ws, M.msg(M.RUN_BATCH, tasks=payloads))
+        self._maybe_steal()
 
-    def _run_on(self, ts: TaskState, ws: WorkerState) -> None:
+    def _assign(self, ts: TaskState, ws: WorkerState) -> None:
         ts.state = "running"
         ts.started_at = time.monotonic()
         ts.workers.add(ws.worker_id)
         ws.running.add(ts.key)
+        ws.queued.append(ts.key)
+
+    def _task_payload(self, ts: TaskState) -> dict[str, Any]:
         # Dependency *metadata* only: inline blobs for tiny results, a
         # (ref, nbytes, locations) descriptor for everything published.
         inline_deps: dict[str, bytes] = {}
@@ -365,18 +466,85 @@ class Scheduler:
                     "nbytes": dts.nbytes,
                     "locations": sorted(dts.locations),
                 }
-        self._send_worker(
-            ws,
-            M.msg(
-                M.RUN_TASK,
-                key=ts.key,
-                func=ts.func_blob,
-                args=ts.args_blob,
-                deps=ts.deps,
-                dep_info=dep_info,
-                inline_deps=inline_deps,
-            ),
+        return {
+            "key": ts.key,
+            "func": ts.func_blob,
+            "args": ts.args_blob,
+            "deps": ts.deps,
+            "dep_info": dep_info,
+            "inline_deps": inline_deps,
+        }
+
+    def _run_on(self, ts: TaskState, ws: WorkerState) -> None:
+        """Single-task dispatch (speculative duplicates)."""
+        self._assign(ts, ws)
+        self._send_worker(ws, (M.RUN_TASK, self._task_payload(ts)))
+
+    # -- work stealing -----------------------------------------------------------
+
+    def _maybe_steal(self) -> None:
+        """Rebalance unstarted backlog toward workers with free threads.
+
+        Two-phase and confirm-based: the victim replies STEAL_ACK naming
+        exactly the keys it removed from its local queue *before* starting
+        them; only those re-enter the ready queue.  A task the victim
+        already began is simply not taken, so stealing can never make a
+        task run twice.
+        """
+        hungry = [
+            ws
+            for ws in self.workers.values()
+            if ws.alive and len(ws.running) < ws.nthreads
+        ]
+        if not hungry:
+            return
+        want = sum(ws.nthreads - len(ws.running) for ws in hungry)
+
+        def stealable(ws: WorkerState) -> int:
+            free = len([k for k in ws.queued if k not in self._stealing])
+            return free - ws.nthreads  # keep the likely-running head
+
+        victim = max(
+            (ws for ws in self.workers.values() if ws.alive),
+            key=stealable,
+            default=None,
         )
+        if victim is None or stealable(victim) <= 0:
+            return
+        backlog = stealable(victim)
+        take = min(backlog, max(want, backlog // 2))
+        keys: list[str] = []
+        for k in reversed(victim.queued):  # tail = least likely started
+            if len(keys) >= take:
+                break
+            if k in self._stealing:
+                continue
+            ts = self.tasks.get(k)
+            if ts is None or ts.state != "running":
+                continue
+            keys.append(k)
+        if not keys:
+            return
+        self._stealing.update(keys)
+        self._send_worker(victim, M.msg(M.STEAL, keys=keys))
+
+    def _on_steal_ack(self, p: dict[str, Any]) -> None:
+        worker_id = p["worker"]
+        taken = p.get("taken") or []
+        for k in p.get("requested") or []:
+            self._stealing.discard(k)
+        ws = self.workers.get(worker_id)
+        for k in taken:
+            if ws is not None:
+                ws.running.discard(k)
+                ws.unqueue(k)
+            ts = self.tasks.get(k)
+            if ts is None or ts.state != "running":
+                continue
+            ts.workers.discard(worker_id)
+            if not ts.workers:  # no speculative copy still running elsewhere
+                ts.state = "ready"
+                self.ready.append(k)
 
     # -- completion ----------------------------------------------------------------
 
@@ -387,6 +555,7 @@ class Scheduler:
         ws = self.workers.get(worker_id)
         if ws is not None:
             ws.running.discard(key)
+            ws.unqueue(key)
             ws.total_done += 1
         if ts is None or ts.state == "done":
             # Duplicate speculative completion (or completion after release).
@@ -421,11 +590,15 @@ class Scheduler:
                 other = self.workers.get(other_id)
                 if other is not None and key in other.running:
                     other.running.discard(key)
+                    other.unqueue(key)
                     self._send_worker(other, M.msg(M.CANCEL, key=key))
         self._notify_done(ts)
         for dep_key in ts.dependents:
             dts = self.tasks.get(dep_key)
-            if dts is not None and dts.state == "waiting" and self._deps_ready(dts):
+            if dts is None:
+                continue
+            dts.waiting_on.discard(key)
+            if dts.state == "waiting" and not dts.waiting_on:
                 dts.state = "ready"
                 self.ready.append(dep_key)
 
@@ -449,6 +622,7 @@ class Scheduler:
         ws = self.workers.get(worker_id)
         if ws is not None:
             ws.running.discard(key)
+            ws.unqueue(key)
         if ts is None or ts.state == "done":
             return
         missing = p.get("missing_deps") or []
@@ -505,10 +679,19 @@ class Scheduler:
                         hws.has_data.discard(dep)
                 dts.locations.clear()
                 self.ready.append(dep)
+                # Every still-waiting dependent must wait on it again.
+                for dependent in dts.dependents:
+                    other = self.tasks.get(dependent)
+                    if other is not None and other.state == "waiting":
+                        other.waiting_on.add(dep)
         if not recoverable:
             self._fail_task(ts, f"dependencies {missing} lost and unrecoverable")
             return
         ts.state = "waiting"  # re-queued by _on_task_done of the recomputed dep
+        ts.waiting_on = {
+            d for d in ts.deps
+            if d in self.tasks and self.tasks[d].state != "done"
+        }
 
     # -- release -----------------------------------------------------------
 
@@ -522,6 +705,15 @@ class Scheduler:
                 # Exactly-once store eviction, no matter how many duplicate
                 # publishes or repeated releases hit this ref.
                 self.ledger.release(ts.ref)
+            self._stealing.discard(key)
+            for worker_id in ts.workers:
+                # Still dispatched somewhere: drop it from that worker's
+                # load accounting so stale keys can't skew occupancy or
+                # trigger futile steals.
+                ws = self.workers.get(worker_id)
+                if ws is not None:
+                    ws.running.discard(key)
+                    ws.unqueue(key)
             for worker_id in ts.locations:
                 ws = self.workers.get(worker_id)
                 if ws is not None:
@@ -546,6 +738,7 @@ class Scheduler:
             return
         ws.alive = False
         for key in list(ws.running):
+            self._stealing.discard(key)  # any in-flight STEAL will never ack
             ts = self.tasks.get(key)
             if ts is not None and ts.state == "running":
                 ts.workers.discard(worker_id)
@@ -566,6 +759,31 @@ class Scheduler:
                 ts.locations.discard(worker_id)
         del self.workers[worker_id]
 
+    def _probably_started(self, ts: TaskState) -> bool:
+        """Whether some assigned worker has plausibly *begun* this task.
+
+        ``started_at`` is stamped at dispatch, but over-assigned tasks can
+        sit unstarted in a worker's local queue for a long time -- that is
+        queue wait, not straggling, and it is work stealing's job.  A key
+        stays in the scheduler-side ``queued`` deque until TASK_DONE, so
+        "within the first ``nthreads`` slots" approximates "running"; the
+        scan is bounded to those slots (O(workers x nthreads) per
+        candidate), never the whole backlog.
+        """
+        seen_assigned = False
+        for worker_id in ts.workers:
+            ws = self.workers.get(worker_id)
+            if ws is None:
+                continue
+            seen_assigned = True
+            for pos, key in enumerate(ws.queued):
+                if pos >= ws.nthreads:
+                    break
+                if key == ts.key:
+                    return True
+        # No live assigned worker found: let the worker-lost path decide.
+        return not seen_assigned
+
     def _speculate(self, now: float) -> None:
         if len(self._durations) < 3:
             return
@@ -579,6 +797,7 @@ class Scheduler:
                 ts.state == "running"
                 and not ts.speculated
                 and now - ts.started_at > threshold
+                and self._probably_started(ts)
             ):
                 candidates = [ws for ws in idle if ws.worker_id not in ts.workers]
                 if not candidates:

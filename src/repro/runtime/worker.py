@@ -9,7 +9,16 @@ messages (beyond the inline threshold).  Each worker:
   store (``ResultStore``) and reports only ``(key, ref, nbytes)``,
 * resolves dependencies itself: local cache -> direct peer fetch
   (``PeerTransfer``) -> shared store -- the scheduler only supplied the
-  ``(ref, nbytes, locations)`` metadata.
+  ``(ref, nbytes, locations)`` metadata,
+* pipelines dispatch through a **local ready queue**: one control-plane
+  pump thread drains the mailbox (``RUN_BATCH`` enqueues many tasks at
+  once) while ``nthreads`` executor threads pull from the queue -- so a
+  batch of N tasks costs one scheduler message, not N round-trips.
+
+Work stealing is confirm-based at this end: ``STEAL`` removes the
+requested keys *still in the local queue* under the queue lock and acks
+exactly those -- a task an executor thread has already claimed is never
+given back, which is what makes stealing double-run-proof.
 
 Function payloads are pickled by reference when possible; non-picklable
 callables (lambdas/closures) fall back to a process-local registry token,
@@ -20,12 +29,12 @@ tasks be picklable.
 from __future__ import annotations
 
 import pickle
+import queue
 import threading
 import time
 import traceback
+from collections import deque
 from typing import Any
-
-import queue
 
 from repro.core.serialize import deserialize, serialize
 from repro.runtime import messages as M
@@ -53,18 +62,36 @@ def dumps_function(fn: Any) -> bytes:
         return b"L" + token.encode()
 
 
+#: Deserialized-function memo: a graph/map fans one function out to
+#: hundreds of tasks, so unpickling it once per *blob* (not once per task)
+#: removes a per-task cost.  Bounded; eviction is FIFO.  The lock guards
+#: the eviction iterator against concurrent executor-thread resizes.
+_FN_CACHE: dict[bytes, Any] = {}
+_FN_CACHE_MAX = 512
+_FN_CACHE_LOCK = threading.Lock()
+
+
 def loads_function(blob: bytes) -> Any:
+    with _FN_CACHE_LOCK:
+        fn = _FN_CACHE.get(blob)
+    if fn is not None:
+        return fn
     tag, body = blob[:1], blob[1:]
     if tag == b"P":
-        return pickle.loads(body)
-    token = body.decode()
-    with _LOCAL_FUNCS_LOCK:
-        fn = _LOCAL_FUNCS.get(token)
-    if fn is None:
-        raise RuntimeError(
-            "non-picklable function reached a process worker; use module-level "
-            "functions for process/multi-node execution"
-        )
+        fn = pickle.loads(body)
+    else:
+        token = body.decode()
+        with _LOCAL_FUNCS_LOCK:
+            fn = _LOCAL_FUNCS.get(token)
+        if fn is None:
+            raise RuntimeError(
+                "non-picklable function reached a process worker; use module-level "
+                "functions for process/multi-node execution"
+            )
+    with _FN_CACHE_LOCK:
+        if len(_FN_CACHE) >= _FN_CACHE_MAX:
+            _FN_CACHE.pop(next(iter(_FN_CACHE)), None)
+        _FN_CACHE[blob] = fn
     return fn
 
 
@@ -90,6 +117,14 @@ class ThreadWorker:
         self.nthreads = nthreads
         self._stop = threading.Event()
         self._cancelled: set[str] = set()
+        #: Local ready queue: RUN_TASK/RUN_BATCH payloads awaiting an
+        #: executor thread.  Guarded by ``_pcv``; STEAL removes from it.
+        self._pending: deque[dict[str, Any]] = deque()
+        self._pcv = threading.Condition()
+        #: Completion outbox: TASK_DONE/TASK_FAILED reports coalesced by the
+        #: flusher thread into one REPORT_BATCH per burst.
+        self._outbox: list[tuple[str, dict[str, Any]]] = []
+        self._ocv = threading.Condition()
         self._threads: list[threading.Thread] = []
         self._heartbeat_thread: threading.Thread | None = None
 
@@ -101,9 +136,19 @@ class ThreadWorker:
         self.scheduler.register_worker(self.worker_id, self.mailbox, self.nthreads)
         if self.transfers is not None:
             self.transfers.register(self.worker_id, self.cache)
+        pump = threading.Thread(
+            target=self._pump_loop, daemon=True, name=f"{self.worker_id}-pump"
+        )
+        pump.start()
+        self._threads.append(pump)
+        flusher = threading.Thread(
+            target=self._flush_loop, daemon=True, name=f"{self.worker_id}-flush"
+        )
+        flusher.start()
+        self._threads.append(flusher)
         for i in range(self.nthreads):
             t = threading.Thread(
-                target=self._loop, daemon=True, name=f"{self.worker_id}-{i}"
+                target=self._exec_loop, daemon=True, name=f"{self.worker_id}-{i}"
             )
             t.start()
             self._threads.append(t)
@@ -115,6 +160,10 @@ class ThreadWorker:
 
     def stop(self) -> None:
         self._stop.set()
+        with self._pcv:
+            self._pcv.notify_all()
+        with self._ocv:
+            self._ocv.notify_all()
         if self.transfers is not None:
             self.transfers.unregister(self.worker_id)
         self.cache.clear()
@@ -123,10 +172,7 @@ class ThreadWorker:
         """Simulate abrupt node failure: heartbeats stop and the worker's
         cached result bytes vanish with it (peers must fall back to the
         store or lineage recovery)."""
-        self._stop.set()
-        if self.transfers is not None:
-            self.transfers.unregister(self.worker_id)
-        self.cache.clear()
+        self.stop()
 
     def _heartbeat_loop(self) -> None:
         while not self._stop.is_set():
@@ -137,9 +183,40 @@ class ThreadWorker:
         if not self._stop.is_set():
             self.scheduler.inbox.put_msg(message)
 
-    # -- main loop --------------------------------------------------------------
+    # -- completion reporting (coalesced) ------------------------------------
 
-    def _loop(self) -> None:
+    def _report(self, tag: str, payload: dict[str, Any]) -> None:
+        """Queue a TASK_DONE/TASK_FAILED report for the flusher.
+
+        Reports from a completion burst (wide fan-outs finish thousands of
+        tiny tasks per second) coalesce into one REPORT_BATCH message, so
+        completion traffic stops scaling one-message-per-task.
+        """
+        with self._ocv:
+            self._outbox.append((tag, payload))
+            self._ocv.notify()
+
+    def _flush_loop(self) -> None:
+        while True:
+            with self._ocv:
+                while not self._outbox and not self._stop.is_set():
+                    self._ocv.wait(timeout=0.2)
+                if self._stop.is_set():
+                    return
+                # Brief coalescing window: a burst of completions lands in
+                # one message; an isolated completion pays <= ~2 ms latency.
+                self._ocv.wait(timeout=0.002)
+                reports, self._outbox = self._outbox, []
+            if len(reports) == 1:
+                self._send(reports[0])
+            else:
+                self._send(
+                    M.msg(M.REPORT_BATCH, worker=self.worker_id, reports=reports)
+                )
+
+    # -- control-plane pump + local ready queue ------------------------------
+
+    def _pump_loop(self) -> None:
         while not self._stop.is_set():
             try:
                 message = self.mailbox.get(timeout=0.2)
@@ -153,17 +230,71 @@ class ThreadWorker:
     def _handle(self, message: tuple[str, dict[str, Any]]) -> None:
         tag, p = message
         if tag == M.RUN_TASK:
-            # A fresh dispatch supersedes any stale CANCEL from an earlier
-            # speculative round -- otherwise a once-cancelled key would be
-            # silently dropped forever on this worker.
-            self._cancelled.discard(p["key"])
-            self._run_task(p)
+            self._enqueue([p])
+        elif tag == M.RUN_BATCH:
+            self._enqueue(p["tasks"])
+        elif tag == M.STEAL:
+            self._on_steal(p)
         elif tag == M.CANCEL:
-            self._cancelled.add(p["key"])
+            with self._pcv:
+                self._cancelled.add(p["key"])
+                self._discard_pending({p["key"]})
             if p.get("release"):
                 self.cache.pop(p["key"])
         elif tag == M.STOP:
             self._stop.set()
+            with self._pcv:
+                self._pcv.notify_all()
+
+    def _enqueue(self, tasks: list[dict[str, Any]]) -> None:
+        with self._pcv:
+            for t in tasks:
+                # A fresh dispatch supersedes any stale CANCEL from an
+                # earlier speculative round -- otherwise a once-cancelled key
+                # would be silently dropped forever on this worker.
+                self._cancelled.discard(t["key"])
+                self._pending.append(t)
+            self._pcv.notify_all()
+
+    def _discard_pending(self, keys: set[str]) -> list[str]:
+        """Remove matching unstarted tasks from the local queue (caller
+        holds ``_pcv``); returns the removed keys."""
+        removed = [t["key"] for t in self._pending if t["key"] in keys]
+        if removed:
+            self._pending = deque(
+                t for t in self._pending if t["key"] not in keys
+            )
+        return removed
+
+    def _on_steal(self, p: dict[str, Any]) -> None:
+        requested = list(p.get("keys") or [])
+        with self._pcv:
+            # Atomic under the queue lock: a task is either still pending
+            # (taken -- it will never start here) or already claimed by an
+            # executor thread (kept -- it finishes here).  Exactly one side
+            # runs it, which is what makes stealing double-run-proof.
+            taken = self._discard_pending(set(requested))
+        self._send(
+            M.msg(
+                M.STEAL_ACK,
+                worker=self.worker_id,
+                taken=taken,
+                requested=requested,
+            )
+        )
+
+    def _exec_loop(self) -> None:
+        while True:
+            with self._pcv:
+                while not self._pending and not self._stop.is_set():
+                    self._pcv.wait(timeout=0.2)
+                if self._stop.is_set():
+                    return
+                p = self._pending.popleft()
+            try:
+                self._run_task(p)
+            except Exception:
+                traceback.print_exc()
 
     # -- dependency resolution (data plane) ---------------------------------
 
@@ -207,7 +338,14 @@ class ThreadWorker:
             return
         try:
             fn = loads_function(p["func"])
-            args_spec = deserialize(p["args"])
+            raw_args = p["args"]
+            # Graph tasks carry a structured arg spec (decoded with the batch
+            # message); legacy per-task SUBMIT still pre-serializes.
+            args_spec = (
+                deserialize(raw_args)
+                if isinstance(raw_args, (bytes, bytearray, memoryview))
+                else raw_args
+            )
             dep_info = p.get("dep_info", {})
             inline_deps = p.get("inline_deps", {})
             dep_results: dict[str, Any] = {}
@@ -220,14 +358,14 @@ class ThreadWorker:
                 except MissingDependencyError as exc:
                     missing.extend(exc.keys)
             if missing:
-                self._send(
-                    M.msg(
-                        M.TASK_FAILED,
-                        key=key,
-                        worker=self.worker_id,
-                        missing_deps=missing,
-                        error=f"dependency bytes unavailable: {missing}",
-                    )
+                self._report(
+                    M.TASK_FAILED,
+                    {
+                        "key": key,
+                        "worker": self.worker_id,
+                        "missing_deps": missing,
+                        "error": f"dependency bytes unavailable: {missing}",
+                    },
                 )
                 return
             args = substitute_refs(args_spec["args"], dep_results)
@@ -241,22 +379,22 @@ class ThreadWorker:
                 # Publish-then-report: by the time the scheduler dispatches
                 # any dependent, the bytes are already fetchable.
                 inline, ref = None, self.results.publish(key, blob)
-            self._send(
-                M.msg(
-                    M.TASK_DONE,
-                    key=key,
-                    worker=self.worker_id,
-                    result=inline,
-                    ref=ref,
-                    nbytes=len(blob),
-                )
+            self._report(
+                M.TASK_DONE,
+                {
+                    "key": key,
+                    "worker": self.worker_id,
+                    "result": inline,
+                    "ref": ref,
+                    "nbytes": len(blob),
+                },
             )
         except Exception as exc:  # noqa: BLE001 - report any task failure
-            self._send(
-                M.msg(
-                    M.TASK_FAILED,
-                    key=key,
-                    worker=self.worker_id,
-                    error=f"{type(exc).__name__}: {exc}\n{traceback.format_exc()}",
-                )
+            self._report(
+                M.TASK_FAILED,
+                {
+                    "key": key,
+                    "worker": self.worker_id,
+                    "error": f"{type(exc).__name__}: {exc}\n{traceback.format_exc()}",
+                },
             )

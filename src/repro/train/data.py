@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Callable, Iterator
+from typing import Callable, Iterator
 
 import numpy as np
 

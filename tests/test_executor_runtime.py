@@ -9,7 +9,6 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    AlwaysPolicy,
     NeverPolicy,
     SizePolicy,
     StoreExecutor,
@@ -18,7 +17,7 @@ from repro.core import (
     get_factory,
     is_proxy,
 )
-from repro.runtime.client import Client, LocalCluster, ProxyClient
+from repro.runtime.client import LocalCluster, ProxyClient
 
 
 # -- policies ------------------------------------------------------------------

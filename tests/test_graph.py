@@ -1,0 +1,299 @@
+"""Graph-native submission: TaskGraph builder, SUBMIT_GRAPH batching,
+pipelined RUN_BATCH dispatch, and confirm-based work stealing."""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+from repro.api import ClusterSpec, Session, TaskGraph
+from repro.runtime import messages as M
+from repro.runtime.client import LocalCluster
+
+
+def double(x):
+    return x * 2
+
+
+def add(a, b):
+    return a + b
+
+
+def total(xs):
+    return sum(xs)
+
+
+def wait_until(cond, timeout=10.0, interval=0.02):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(interval)
+    return cond()
+
+
+@pytest.fixture()
+def cluster():
+    with LocalCluster(n_workers=2) as c:
+        yield c
+
+
+# -- builder -------------------------------------------------------------------
+
+
+def test_graph_builder_dedups_pure_nodes():
+    g = TaskGraph()
+    a = g.add(double, 21)
+    b = g.add(double, 21)  # identical pure call -> same node
+    c = g.add(double, 22)
+    assert a.key == b.key
+    assert a.key != c.key
+    assert len(g) == 2
+
+
+def test_graph_builder_topo_order_and_outputs():
+    g = TaskGraph()
+    a = g.add(double, 1)
+    b = g.add(double, 2)
+    s = g.add(add, a, b)
+    keys = [k for k, _ in g.items()]
+    assert keys.index(s.key) > keys.index(a.key)
+    assert keys.index(s.key) > keys.index(b.key)
+    assert [n.key for n in g.outputs()] == [s.key]
+
+
+def test_graph_rejects_foreign_nodes():
+    g1, g2 = TaskGraph(), TaskGraph()
+    a = g1.add(double, 1)
+    with pytest.raises(ValueError, match="different TaskGraph"):
+        g2.add(double, a)
+
+
+def test_graph_impure_nodes_never_dedup():
+    g = TaskGraph()
+    a = g.add(double, 21, pure=False)
+    b = g.add(double, 21, pure=False)
+    assert a.key != b.key
+    assert len(g) == 2
+
+
+# -- cluster execution ---------------------------------------------------------
+
+
+def test_fanout_fanin_result(cluster):
+    with cluster.get_client() as client:
+        g = TaskGraph()
+        nodes = [g.add(double, i) for i in range(32)]
+        g.add(total, nodes)
+        [fut] = client.submit_graph(g)
+        assert fut.result(timeout=30) == sum(i * 2 for i in range(32))
+
+
+def test_diamond_dependencies(cluster):
+    with cluster.get_client() as client:
+        g = TaskGraph()
+        a = g.add(double, 10)
+        left = g.add(double, a)
+        right = g.add(add, a, 1)
+        sink = g.add(add, left, right)
+        [fut] = client.submit_graph(g, nodes=[sink])
+        assert fut.result(timeout=30) == (40 + 21)
+
+
+def test_graph_node_depends_on_submitted_future(cluster):
+    """A live future is a legal cross-graph dependency."""
+    with cluster.get_client() as client:
+        upstream = client.submit(double, 5)
+        g = TaskGraph()
+        sink = g.add(add, upstream, 1)
+        [fut] = client.submit_graph(g, nodes=[sink])
+        assert fut.result(timeout=30) == 11
+
+
+def test_interior_nodes_send_no_finished(cluster):
+    """Only requested outputs generate client traffic."""
+    with cluster.get_client() as client:
+        g = TaskGraph()
+        nodes = [g.add(double, 100 + i) for i in range(16)]
+        g.add(total, nodes)
+        m0 = cluster.scheduler.bytes_through()["out_msgs"]
+        [fut] = client.submit_graph(g)
+        fut.result(timeout=30)
+        out_msgs = cluster.scheduler.bytes_through()["out_msgs"] - m0
+        # dispatch batches + exactly one FINISHED; nowhere near one per task
+        assert out_msgs < 10
+
+
+def test_graph_error_cascades_to_sink(cluster):
+    def boom(x):
+        raise ValueError("graph boom")
+
+    with cluster.get_client() as client:
+        g = TaskGraph()
+        bad = g.add(boom, 1, retries=0)
+        sink = g.add(add, bad, 1)
+        [fut] = client.submit_graph(g, nodes=[sink])
+        with pytest.raises(RuntimeError, match="graph boom|dependency"):
+            fut.result(timeout=30)
+
+
+# -- edge cases required by the issue ------------------------------------------
+
+
+def test_duplicate_keys_across_two_graphs(cluster):
+    """The same pure node submitted via two graphs runs once; both futures
+    resolve from the shared computation."""
+    calls = []
+
+    def tracked(x):
+        calls.append(x)
+        return x + 1
+
+    with cluster.get_client() as client:
+        g1 = TaskGraph()
+        n1 = g1.add(tracked, 5)
+        [f1] = client.submit_graph(g1, nodes=[n1])
+        assert f1.result(timeout=30) == 6
+
+        g2 = TaskGraph()
+        n2 = g2.add(tracked, 5)  # same fn+args -> same key
+        assert n2.key == n1.key
+        [f2] = client.submit_graph(g2, nodes=[n2])
+        assert f2.result(timeout=30) == 6
+        assert len(calls) == 1  # pure cache hit across graphs
+
+
+def test_graph_dep_on_released_key_fails_fast(cluster):
+    """A graph node depending on an already-released key must fail fast,
+    not hang waiting for a completion that can never come."""
+    with cluster.get_client() as client:
+        upstream = client.submit(double, 77, pure=False)
+        upstream.result(timeout=30)
+        client.release([upstream])
+        assert wait_until(
+            lambda: upstream.key not in cluster.scheduler.tasks, timeout=10
+        )
+        g = TaskGraph()
+        sink = g.add(add, upstream, 1)
+        [fut] = client.submit_graph(g, nodes=[sink])
+        with pytest.raises(RuntimeError, match="unknown or released"):
+            fut.result(timeout=30)
+
+
+def test_work_stealing_never_double_runs():
+    """An idle worker steals from a loaded worker's unstarted backlog, and
+    every task still executes exactly once."""
+    counts: dict[int, int] = {}
+    lock = threading.Lock()
+
+    def slowish(i):
+        with lock:
+            counts[i] = counts.get(i, 0) + 1
+        time.sleep(0.04)
+        return i
+
+    # speculation off (speculation_min) so only stealing can move work
+    with LocalCluster(n_workers=1, speculation_min=120.0) as cluster:
+        with cluster.get_client() as client:
+            futs = client.map(slowish, list(range(30)), pure=False)
+            time.sleep(0.1)  # worker-0 starts chewing its whole batch
+            thief = cluster.add_worker()
+            assert sorted(client.gather(futs)) == list(range(30))
+            dupes = {k: v for k, v in counts.items() if v != 1}
+            assert not dupes, f"stolen tasks ran twice: {dupes}"
+            # the steal actually happened: the thief did real work
+            sched_thief = cluster.scheduler.workers.get(thief)
+            assert sched_thief is not None and sched_thief.total_done > 0
+
+
+def test_steal_ack_for_started_tasks_keeps_them(cluster):
+    """A STEAL naming a task the worker already started (or finished) is
+    acked as not-taken and the task is not re-queued."""
+    with cluster.get_client() as client:
+        fut = client.submit(double, 333, pure=False)
+        assert fut.result(timeout=30) == 666
+        sched = cluster.scheduler
+        worker_id = next(iter(sched.workers))
+        ws = sched.workers[worker_id]
+        worker = cluster.workers[worker_id]
+        m0 = sched.inbox.counter.snapshot()["recv_msgs"]
+        worker.mailbox.put_msg(M.msg(M.STEAL, keys=[fut.key]))
+        assert wait_until(
+            lambda: sched.inbox.counter.snapshot()["recv_msgs"] > m0, timeout=10
+        )
+        time.sleep(0.2)  # let the scheduler process the ack
+        assert fut.key not in sched.ready
+        assert fut.key not in ws.running
+
+
+# -- Session facade ------------------------------------------------------------
+
+
+def test_session_compute_cluster():
+    with Session(backend="cluster", cluster=ClusterSpec(n_workers=2)) as s:
+        g = s.graph()
+        nodes = [g.add(double, i) for i in range(8)]
+        sink = g.add(total, nodes)
+        assert s.compute(g, nodes=sink) == sum(i * 2 for i in range(8))
+
+
+def test_session_compute_inprocess_and_executor():
+    for backend in ("in-process", "executor"):
+        with Session(backend=backend) as s:
+            g = TaskGraph()
+            a = g.add(double, 3)
+            b = g.add(add, a, 4)
+            assert s.compute(g) == [10]
+            assert s.compute(g, nodes=b) == 10
+
+
+def test_map_kwarg_named_key_reaches_function(cluster):
+    """A user fn kwarg named `key` (or `pure`) must not be swallowed by
+    the graph builder's reserved task parameters."""
+
+    def scale(x, key=1.0):
+        return x * key
+
+    with cluster.get_client() as client:
+        assert client.gather(client.map(scale, [1, 2, 3], key=2.0)) == [2.0, 4.0, 6.0]
+
+
+def test_noncluster_graph_resolves_future_args():
+    """Graph code is portable: local Futures passed as node args resolve
+    on the in-process and executor backends too."""
+    for backend in ("in-process", "executor"):
+        with Session(backend=backend) as s:
+            up = s.submit(double, 5)
+            g = TaskGraph()
+            sink = g.add(add, up, 1)
+            assert s.compute(g, nodes=sink) == 11
+
+
+def test_noncluster_graph_rejects_foreign_nodes_before_running():
+    ran = []
+
+    def tracked(x):
+        ran.append(x)
+        return x
+
+    g1, g2 = TaskGraph(), TaskGraph()
+    g1.add(tracked, 1)
+    other = g2.add(double, 2)
+    with Session() as s:
+        with pytest.raises(ValueError, match="not part of this graph"):
+            s.submit_graph(g1, nodes=[other])
+    assert ran == []  # nothing executed before validation
+
+
+def test_session_map_batches_into_one_submission():
+    with Session(backend="cluster", cluster=ClusterSpec(n_workers=2)) as s:
+        sched = s.cluster.scheduler
+        m0 = sched.inbox.counter.snapshot()["recv_msgs"]
+        futs = s.map(double, list(range(20)))
+        assert s.gather(futs) == [i * 2 for i in range(20)]
+        # 1 SUBMIT_GRAPH + coalesced completion reports + heartbeats;
+        # far fewer inbound messages than one SUBMIT per task
+        in_msgs = sched.inbox.counter.snapshot()["recv_msgs"] - m0
+        assert in_msgs < 20

@@ -7,10 +7,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.flash_attention.ops import flash_attention_gqa
-from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.fingerprint.ops import fingerprint, fingerprint_token
 from repro.kernels.fingerprint.ref import fingerprint_ref
+from repro.kernels.flash_attention.ops import flash_attention_gqa
+from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ssd_scan.ops import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
 

@@ -5,7 +5,6 @@ from __future__ import annotations
 import pickle
 
 import numpy as np
-import pytest
 
 from repro.core import (
     Store,
