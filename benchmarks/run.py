@@ -9,11 +9,15 @@ Prints ``name,us_per_call,derived`` CSV rows and writes JSON artifacts under
     PYTHONPATH=src python -m benchmarks.run --smoke      # CI data-plane guard
 
 ``--smoke`` is the CI regression guard: it runs the Fig-3 overheads with
-tiny payloads plus the 512-task fan-out/fan-in graph benchmark on the
-cluster backend, writes their JSON artifacts (uploaded by CI), and exits
-non-zero when an invariant regresses -- scheduler hub-byte reduction,
+tiny payloads, the 512-task fan-out/fan-in graph benchmark, and the
+larger-than-cache memory-pressure workload on the cluster backend, writes
+their JSON artifacts (uploaded by CI), and exits non-zero when an
+invariant regresses -- scheduler hub-byte reduction,
 results-by-reference, graph submission staying <= 2 scheduler msgs/task
-and >= 2x per-task submit throughput.  Wired into ``scripts/ci.sh smoke``.
+and >= 2x per-task submit throughput, and the tiered cache completing the
+over-budget workload with zero dropped blobs, spill bytes > 0, and fewer
+store refetches than the memory-only baseline.  Wired into
+``scripts/ci.sh smoke``.
 """
 
 from __future__ import annotations
@@ -31,6 +35,7 @@ def main() -> None:
         print("name,us_per_call,derived")
         ok = overheads.smoke()
         ok = scaling.smoke() and ok
+        ok = scaling.memory_smoke() and ok
         print(f"# smoke {'PASS' if ok else 'FAIL'}", flush=True)
         sys.exit(0 if ok else 1)
 

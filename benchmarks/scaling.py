@@ -28,7 +28,7 @@ import time
 import numpy as np
 
 from benchmarks.common import QUICK, bench_store_config, record, save_artifact
-from repro.api import ClusterSpec, PolicySpec, Session, TaskGraph
+from repro.api import ClusterSpec, MemorySpec, PolicySpec, Session, TaskGraph
 
 PAYLOAD = 1_000_000
 
@@ -142,6 +142,127 @@ def smoke(n_tasks: int = 512, n_workers: int = 4) -> bool:
     return ok
 
 
+def make_payload(i, n):
+    return np.random.default_rng(i).bytes(n)
+
+
+def checksum(blobs):
+    return sum(len(b) for b in blobs)
+
+
+def _run_memory_workload(
+    n_tasks: int, payload: int, limit: int, memory, n_workers: int = 2
+) -> dict:
+    """Fan-out ``n_tasks`` producers of ``payload`` bytes each into one
+    fan-in, under a per-worker memory budget of ``limit`` bytes; returns
+    completion + memory telemetry (spills, drops, store refetches)."""
+    spec = ClusterSpec(
+        n_workers=n_workers,
+        inline_result_max=64 * 1024,
+        worker_cache_bytes=limit,
+        memory=memory,
+    )
+    with spec.build() as cluster:
+        with cluster.get_client() as client:
+            t0 = time.perf_counter()
+            futs = [
+                client.submit(make_payload, i, payload, pure=False)
+                for i in range(n_tasks)
+            ]
+            total = client.submit(checksum, futs)
+            value = total.result(timeout=600)
+            dt = time.perf_counter() - t0
+        assert value == n_tasks * payload, f"bad checksum {value}"
+        stats = cluster.worker_stats()
+    return {
+        "seconds": dt,
+        "refetches": sum(r["refetch_count"] for r in stats.values()),
+        "dropped": sum(r["dropped"] for r in stats.values()),
+        "spill_count": sum(r["spill_count"] for r in stats.values()),
+        "spilled_bytes": sum(r["spilled_bytes_total"] for r in stats.values()),
+        "restores": sum(r["restore_count"] for r in stats.values()),
+    }
+
+
+def memory_pressure(
+    n_tasks: int = 20, payload: int = 500_000, n_workers: int = 2
+) -> dict:
+    """Larger-than-cache fan-in: the workload the seed data plane thrashes on.
+
+    Total result bytes are > 4x the per-worker in-memory budget, so the
+    memory-only LRU (the pre-spill baseline) *discards* cold result blobs
+    and the fan-in must refetch them from the shared store -- the
+    worker-side memory churn arXiv:2010.11105 calls out.  With a
+    ``MemorySpec`` the same budget demotes cold blobs to the disk tier
+    instead: the run completes with zero dropped blobs, spilled bytes > 0,
+    and strictly fewer store refetches (locals restore from disk, remotes
+    ride the chunked peer path out of the producer's disk tier).
+    """
+    total = n_tasks * payload
+    limit = total // 5  # in-memory budget < 1/4 of total result bytes
+    baseline = _run_memory_workload(n_tasks, payload, limit, None, n_workers)
+    spill = _run_memory_workload(
+        n_tasks,
+        payload,
+        limit,
+        MemorySpec(limit_bytes=limit, pause_fraction=0.85, target_fraction=0.6),
+        n_workers,
+    )
+    out = {
+        "n_tasks": n_tasks,
+        "payload": payload,
+        "total_bytes": total,
+        "limit_bytes": limit,
+        "baseline": baseline,
+        "spill": spill,
+    }
+    record(
+        f"fig4/memory/{n_tasks}x{payload // 1000}kB/baseline",
+        1e6 * baseline["seconds"] / n_tasks,
+        f"refetches={baseline['refetches']} dropped={baseline['dropped']}",
+    )
+    record(
+        f"fig4/memory/{n_tasks}x{payload // 1000}kB/spill",
+        1e6 * spill["seconds"] / n_tasks,
+        f"refetches={spill['refetches']} spilledMB="
+        f"{spill['spilled_bytes'] / 1e6:.1f} restores={spill['restores']}",
+    )
+    return out
+
+
+def memory_smoke() -> bool:
+    """CI guard: the tiered data plane must beat the memory-only cache on
+    the larger-than-cache workload.
+
+    Fails (returns False) when the spill run drops any blob, spills
+    nothing (the workload stopped exercising the tier), or needs as many
+    store refetches as the pre-spill baseline.
+    """
+    out = memory_pressure()
+    save_artifact("smoke_memory", out)
+    ok = True
+    if out["spill"]["dropped"] != 0:
+        print(
+            f"# SMOKE FAIL: spill run dropped {out['spill']['dropped']} blobs -- "
+            "the tiered cache must never discard bytes"
+        )
+        ok = False
+    if out["spill"]["spilled_bytes"] <= 0:
+        print(
+            "# SMOKE FAIL: spill run spilled 0 bytes on a workload 5x its "
+            "memory budget -- the disk tier is not engaging"
+        )
+        ok = False
+    if out["spill"]["refetches"] >= max(1, out["baseline"]["refetches"]):
+        print(
+            f"# SMOKE FAIL: spill run made {out['spill']['refetches']} store "
+            f"refetches vs baseline {out['baseline']['refetches']} -- the "
+            "disk tier must cut store churn"
+        )
+        ok = False
+    return ok
+
+
 def _throughput(client, n_tasks: int) -> float:
     data = np.random.default_rng(1).bytes(PAYLOAD)
     t0 = time.perf_counter()
@@ -188,6 +309,9 @@ def run() -> dict:
 
     out["graph"] = graph_fanout_fanin(
         n_tasks=128 if QUICK else 512, n_workers=workers[-1]
+    )
+    out["memory"] = memory_pressure(
+        n_tasks=12 if QUICK else 20, payload=500_000
     )
     save_artifact("fig4_scaling", out)
     return out

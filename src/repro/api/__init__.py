@@ -25,6 +25,7 @@ construction still works but emits :class:`DeprecationWarning`.
 from repro.api.config import (
     ClusterSpec,
     ConnectorSpec,
+    MemorySpec,
     PolicySpec,
     SpecValidationError,
     StoreConfig,
@@ -47,6 +48,7 @@ from repro.runtime.graph import GraphNode, TaskGraph
 __all__ = [
     "ClusterSpec",
     "ConnectorSpec",
+    "MemorySpec",
     "PolicySpec",
     "SpecValidationError",
     "StoreConfig",

@@ -271,6 +271,81 @@ class StoreConfig:
 
 
 @dataclass(frozen=True, init=False)
+class MemorySpec:
+    """Declarative memory budget for cluster workers (the tiered data plane).
+
+    Attaching a ``MemorySpec`` to a :class:`ClusterSpec` switches every
+    worker's result cache from the memory-only LRU (which *discards* cold
+    bytes, forcing store refetches) to the tiered ``SpillCache`` and turns
+    on the pressure-aware scheduling loop:
+
+    * ``limit_bytes``     -- the worker's managed-memory budget: the hot
+      in-memory tier is capped here, and ``managed_bytes`` (hot cache +
+      in-flight task bytes) is measured against it.  Blobs larger than
+      the whole budget stream straight to the disk tier.
+    * ``spill_dir``       -- directory for the disk tier (each worker gets
+      a private subdirectory).  ``None`` means a per-worker tempdir that
+      is removed when the worker stops.
+    * ``pause_fraction``  -- above ``pause_fraction * limit_bytes`` the
+      worker transitions to ``paused``: it stops pulling from its local
+      ready queue, sheds (demotes) its hot tier, and the scheduler sends
+      it no new work.
+    * ``target_fraction`` -- the resume threshold: the worker runs again
+      once managed bytes fall to ``target_fraction * limit_bytes``.
+
+    Round-trips through plain dicts (``to_dict``/``from_dict``) like every
+    other spec, so it travels by value inside a :class:`ClusterSpec`.
+    """
+
+    limit_bytes: int = 256 * 1024 * 1024
+    spill_dir: str | None = None
+    pause_fraction: float = 0.85
+    target_fraction: float = 0.6
+
+    def __init__(
+        self,
+        limit_bytes: int = 256 * 1024 * 1024,
+        *,
+        spill_dir: str | None = None,
+        pause_fraction: float = 0.85,
+        target_fraction: float = 0.6,
+    ):
+        object.__setattr__(self, "limit_bytes", int(limit_bytes))
+        object.__setattr__(self, "spill_dir", spill_dir)
+        object.__setattr__(self, "pause_fraction", float(pause_fraction))
+        object.__setattr__(self, "target_fraction", float(target_fraction))
+        self.validate()
+
+    def validate(self) -> None:
+        if self.limit_bytes <= 0:
+            raise SpecValidationError("limit_bytes must be > 0")
+        if not (0.0 < self.target_fraction <= self.pause_fraction <= 1.0):
+            raise SpecValidationError(
+                "fractions must satisfy 0 < target_fraction <= pause_fraction <= 1, "
+                f"got target={self.target_fraction} pause={self.pause_fraction}"
+            )
+        if self.spill_dir is not None and not isinstance(self.spill_dir, str):
+            raise SpecValidationError("spill_dir must be a string path or None")
+
+    def to_dict(self) -> dict[str, Any]:
+        """The exact wire format ``ThreadWorker(memory=...)`` consumes."""
+        return {
+            "limit_bytes": self.limit_bytes,
+            "spill_dir": self.spill_dir,
+            "pause_fraction": self.pause_fraction,
+            "target_fraction": self.target_fraction,
+        }
+
+    @classmethod
+    def from_dict(cls, config: Mapping[str, Any]) -> "MemorySpec":
+        config = dict(config)
+        return cls(
+            config.pop("limit_bytes", 256 * 1024 * 1024),
+            **config,
+        )
+
+
+@dataclass(frozen=True, init=False)
 class ClusterSpec:
     """Declarative description of a :class:`repro.runtime.client.LocalCluster`.
 
@@ -284,6 +359,11 @@ class ClusterSpec:
     ``put_at``), which is what keeps speculative duplicate publishes
     idempotent.  ``None`` (the default) means a cluster-private in-memory
     segment created at build time.
+
+    ``memory`` attaches a :class:`MemorySpec`: per-worker managed-memory
+    budgets, spill-to-disk caching, and pause/resume pressure thresholds.
+    ``None`` (the default) keeps the memory-only LRU cache sized by
+    ``worker_cache_bytes``.
     """
 
     n_workers: int = 2
@@ -294,6 +374,7 @@ class ClusterSpec:
     inline_result_max: int = 64 * 1024
     worker_cache_bytes: int = 256 * 1024 * 1024
     data_plane: ConnectorSpec | None = None
+    memory: MemorySpec | None = None
 
     def __init__(
         self,
@@ -306,11 +387,14 @@ class ClusterSpec:
         inline_result_max: int = 64 * 1024,
         worker_cache_bytes: int = 256 * 1024 * 1024,
         data_plane: ConnectorSpec | Mapping[str, Any] | str | None = None,
+        memory: MemorySpec | Mapping[str, Any] | None = None,
     ):
         if isinstance(data_plane, str):
             data_plane = ConnectorSpec(data_plane)
         elif isinstance(data_plane, Mapping):
             data_plane = ConnectorSpec.from_dict(data_plane)
+        if isinstance(memory, Mapping):
+            memory = MemorySpec.from_dict(memory)
         object.__setattr__(self, "n_workers", int(n_workers))
         object.__setattr__(self, "threads_per_worker", int(threads_per_worker))
         object.__setattr__(self, "heartbeat_timeout", float(heartbeat_timeout))
@@ -319,6 +403,7 @@ class ClusterSpec:
         object.__setattr__(self, "inline_result_max", int(inline_result_max))
         object.__setattr__(self, "worker_cache_bytes", int(worker_cache_bytes))
         object.__setattr__(self, "data_plane", data_plane)
+        object.__setattr__(self, "memory", memory)
         self.validate()
 
     def validate(self) -> None:
@@ -338,6 +423,8 @@ class ClusterSpec:
                     f"{PEER_CAPABILITY!r} capability (deterministic-key "
                     "put_at) required for the cluster data plane"
                 )
+        if self.memory is not None:
+            self.memory.validate()
 
     def to_dict(self) -> dict[str, Any]:
         return {
@@ -351,17 +438,20 @@ class ClusterSpec:
             "data_plane": (
                 self.data_plane.to_dict() if self.data_plane is not None else None
             ),
+            "memory": self.memory.to_dict() if self.memory is not None else None,
         }
 
     @classmethod
     def from_dict(cls, config: Mapping[str, Any]) -> "ClusterSpec":
         config = dict(config)
         data_plane = config.pop("data_plane", None)
+        memory = config.pop("memory", None)
         return cls(
             config.pop("n_workers", 2),
             data_plane=(
                 ConnectorSpec.from_dict(data_plane) if data_plane else None
             ),
+            memory=MemorySpec.from_dict(memory) if memory else None,
             **config,
         )
 
@@ -385,4 +475,5 @@ class ClusterSpec:
             store=store,
             inline_result_max=self.inline_result_max,
             worker_cache_bytes=self.worker_cache_bytes,
+            memory=self.memory,
         )

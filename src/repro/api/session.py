@@ -318,6 +318,18 @@ class Session:
         stats = getattr(self.store.connector, "stats", None)
         return stats.snapshot() if stats is not None else {}
 
+    def worker_stats(self) -> dict[str, dict[str, Any]]:
+        """Per-worker memory telemetry on the cluster backend.
+
+        One row per live worker: ``{running, managed_bytes, spilled_bytes,
+        state, ...}`` (see ``LocalCluster.worker_stats``).  Non-cluster
+        backends have no workers and return ``{}``.
+        """
+        self._check_open()
+        if self._cluster is None:
+            return {}
+        return self._cluster.worker_stats()
+
     @property
     def backend(self) -> str:
         return self._backend

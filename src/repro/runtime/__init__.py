@@ -13,6 +13,7 @@ from repro.runtime.transfer import (
     MissingDependencyError,
     PeerTransfer,
     ResultStore,
+    SpillCache,
 )
 from repro.runtime.worker import ThreadWorker
 
@@ -26,6 +27,7 @@ __all__ = [
     "Scheduler",
     "ThreadWorker",
     "BlobCache",
+    "SpillCache",
     "MissingDependencyError",
     "PeerTransfer",
     "ResultStore",

@@ -332,6 +332,12 @@ class LocalCluster:
     direct worker-to-worker transfer mesh (``transfers``).  Supports
     elastic scaling (``add_worker``/``remove_worker``) and fault injection
     (``kill_worker``) for the fault-tolerance tests.
+
+    ``memory`` (an ``api.MemorySpec`` or its wire dict) gives every worker
+    a managed-memory budget: caches become tiered (spill-to-disk instead
+    of drop), workers pause above the budget's pause threshold, and the
+    scheduler's dispatch backpressure scales to the budget.
+    ``worker_stats()`` surfaces the live per-worker telemetry.
     """
 
     def __init__(
@@ -345,6 +351,7 @@ class LocalCluster:
         store: Any = None,  # StoreConfig | config dict | None
         inline_result_max: int = 64 * 1024,
         worker_cache_bytes: int = 256 * 1024 * 1024,
+        memory: Any = None,  # api.MemorySpec | wire dict | None
     ):
         uid = uuid.uuid4().hex[:8]
         if store is None:
@@ -361,12 +368,25 @@ class LocalCluster:
         self.data_plane = ResultStore(store_config)
         self.transfers = PeerTransfer()
         self.worker_cache_bytes = worker_cache_bytes
+        # MemorySpec travels as its wire dict so runtime never imports api.
+        if memory is not None and hasattr(memory, "to_dict"):
+            memory = memory.to_dict()
+        self.memory_config = dict(memory) if memory is not None else None
+        if self.memory_config is not None:
+            # Backpressure cap scales with the budget: a worker owing half
+            # its memory budget in un-fetched dependency bytes is loaded.
+            # (Partial wire dicts default like the worker does.)
+            limit = int(self.memory_config.get("limit_bytes", worker_cache_bytes))
+            max_outstanding = max(1, limit // 2)
+        else:
+            max_outstanding = 128 * 1024 * 1024
         self.scheduler = Scheduler(
             heartbeat_timeout=heartbeat_timeout,
             speculation_factor=speculation_factor,
             speculation_min=speculation_min,
             inline_result_max=inline_result_max,
             result_store=self.data_plane,
+            max_outstanding_bytes=max_outstanding,
         ).start()
         self.workers: dict[str, ThreadWorker] = {}
         for _ in range(n_workers):
@@ -381,6 +401,7 @@ class LocalCluster:
             result_store=self.data_plane,
             transfers=self.transfers,
             cache_bytes=self.worker_cache_bytes,
+            memory=self.memory_config,
         ).start()
         self.workers[worker_id] = w
         return worker_id
@@ -399,6 +420,23 @@ class LocalCluster:
 
     def get_client(self) -> Client:
         return Client(self)
+
+    def worker_stats(self) -> dict[str, dict[str, Any]]:
+        """Per-worker memory/telemetry view, one row per live worker:
+        ``{running, managed_bytes, spilled_bytes, state, ...}``.
+
+        ``running`` is the scheduler's dispatched-not-done count; the
+        memory fields read the worker's live accounting directly (not the
+        last heartbeat), so tests and dashboards see current state.
+        """
+        out: dict[str, dict[str, Any]] = {}
+        for worker_id, w in self.workers.items():
+            row = w.stats()
+            ws = self.scheduler.workers.get(worker_id)
+            row["running"] = len(ws.running) if ws is not None else 0
+            row["outstanding_bytes"] = ws.outstanding_bytes if ws is not None else 0
+            out[worker_id] = row
+        return out
 
     def close(self) -> None:
         for w in list(self.workers.values()):

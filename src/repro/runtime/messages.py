@@ -25,6 +25,15 @@ scheduler asks a loaded worker to give back *unstarted* queued tasks, the
 worker confirms exactly which ones it relinquished, and only those are
 re-dispatched -- so a task can never run twice because of a steal.
 
+``heartbeat`` doubles as the memory-telemetry channel: alongside
+``worker`` it carries ``managed_bytes`` (hot cache + in-flight task
+bytes), ``spilled_bytes`` (disk-tier bytes), ``memory_limit``, ``state``
+(``running`` or ``paused`` -- a paused worker gets no new ``run_batch``
+until its managed bytes fall back below its resume target), and a capped
+``spilled_keys`` list feeding the scheduler's spill-aware locality.
+Workers push an immediate out-of-cycle heartbeat on every pause/resume
+transition so dispatch reacts within one scheduler loop pass.
+
 The hub-mediated forwarding tags of the old data plane (``need_data`` /
 ``send_data`` / ``data`` / ``gather``) are gone, not deprecated: there is
 no code path left that ships a result blob through the scheduler mailbox.

@@ -42,6 +42,14 @@ Production features (per the 1000+-node mandate):
   tasks back (``STEAL``), re-queuing only the ones the worker *confirms*
   it never started (``STEAL_ACK``) -- skewed fan-outs cannot strand
   capacity, and no task double-runs because of a steal.
+* **Memory awareness** -- heartbeats carry ``(managed_bytes,
+  spilled_bytes, state)`` telemetry.  A worker that reports itself
+  ``paused`` (managed bytes above its pause threshold) receives no new
+  work -- not from dispatch, stealing, or speculation -- until it resumes;
+  dispatch weighs memory pressure into worker choice, charges each
+  assignment its to-be-fetched dependency bytes against a per-worker
+  ``max_outstanding_bytes`` backpressure cap, and prefers dependency
+  holders whose cached copy is still hot over ones that spilled it.
 """
 
 from __future__ import annotations
@@ -129,14 +137,33 @@ class WorkerState:
     #: work stealing takes from.
     queued: deque = field(default_factory=deque)
     has_data: set[str] = field(default_factory=set)
+    #: keys whose cached copy the worker reported demoted to its disk tier
+    #: (heartbeat telemetry) -- locality prefers holders still hot.
+    spilled: set[str] = field(default_factory=set)
     last_heartbeat: float = field(default_factory=time.monotonic)
     nthreads: int = 1
     alive: bool = True
     total_done: int = 0
+    #: memory telemetry from the worker's last heartbeat
+    managed_bytes: int = 0
+    spilled_bytes: int = 0
+    memory_limit: int | None = None
+    memory_state: str = "running"  # running | paused
+    #: dependency bytes dispatched to (but not yet resolved by) this worker
+    #: -- the backpressure quantity; maintained by _assign/_unassign so every
+    #: removal path (done, failed, stolen, released, worker lost) decrements.
+    outstanding_bytes: int = 0
 
     def occupancy(self) -> float:
         """Outstanding tasks per thread -- the dispatch balance metric."""
         return len(self.running) / max(self.nthreads, 1)
+
+    def memory_pressure(self) -> float:
+        """Managed bytes as a fraction of the worker's budget (0 when the
+        worker runs without one) -- the dispatch tie-breaker weight."""
+        if not self.memory_limit:
+            return 0.0
+        return min(2.0, self.managed_bytes / self.memory_limit)
 
     def unqueue(self, key: str) -> None:
         try:
@@ -164,6 +191,7 @@ class Scheduler:
         speculation_min: float = 1.0,
         inline_result_max: int = 64 * 1024,
         result_store: Any = None,
+        max_outstanding_bytes: int = 128 * 1024 * 1024,
     ):
         self.inbox = Mailbox("scheduler")
         self.tasks: dict[str, TaskState] = {}
@@ -175,8 +203,17 @@ class Scheduler:
         self.speculation_min = speculation_min
         self.inline_result_max = inline_result_max
         self.result_store = result_store  # transfer.ResultStore | None
+        #: Per-worker cap on dispatched-but-unresolved dependency bytes: a
+        #: worker already owing this much fetch work gets no more
+        #: byte-heavy tasks until some resolve (dispatch backpressure).
+        self.max_outstanding_bytes = max_outstanding_bytes
         self.ledger = RefLedger(self._evict_ref)
         self._stealing: set[str] = set()  # keys with a STEAL in flight
+        #: (worker_id, key) -> dep bytes charged at dispatch.  The single
+        #: source of truth for outstanding_bytes decrements: every removal
+        #: path funnels through _unassign, so no lineage-recovery or
+        #: failure ordering can leak a charge.
+        self._assigned_bytes: dict[tuple[str, str], int] = {}
         self._durations: deque[float] = deque(maxlen=DURATION_WINDOW)
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
@@ -285,6 +322,14 @@ class Scheduler:
             ws = self.workers.get(p["worker"])
             if ws is not None:
                 ws.last_heartbeat = time.monotonic()
+                # Memory telemetry rides every heartbeat: the scheduler's
+                # pressure-aware dispatch runs off this view.
+                ws.managed_bytes = p.get("managed_bytes", ws.managed_bytes)
+                ws.spilled_bytes = p.get("spilled_bytes", ws.spilled_bytes)
+                ws.memory_limit = p.get("memory_limit", ws.memory_limit)
+                ws.memory_state = p.get("state", ws.memory_state) or "running"
+                if "spilled_keys" in p:
+                    ws.spilled = set(p["spilled_keys"] or [])
         elif tag == M.TASK_DONE:
             self._on_task_done(p)
         elif tag == M.TASK_FAILED:
@@ -383,11 +428,37 @@ class Scheduler:
         return [
             ws
             for ws in self.workers.values()
-            if ws.alive and len(ws.running) < ws.nthreads
+            if ws.alive
+            and len(ws.running) < ws.nthreads
+            and ws.memory_state != "paused"  # paused workers take nothing new
         ]
 
+    def _task_bytes(self, ts: TaskState, ws: WorkerState) -> int:
+        """Dependency bytes this worker would have to *fetch* to run ``ts``
+        (deps it already holds are free) -- the backpressure charge."""
+        return sum(
+            self.tasks[d].nbytes
+            for d in ts.deps
+            if d in self.tasks and d not in ws.has_data
+        )
+
     def _pick_worker(self, ts: TaskState) -> WorkerState | None:
-        """Least-loaded alive worker, dependency locality first.
+        """Least-loaded, least-pressured alive worker, locality first.
+
+        Memory awareness, in order of severity:
+
+        * a **paused** worker (managed bytes above its pause threshold) is
+          skipped outright -- it is not pulling from its local queue, so
+          dispatching to it just buries tasks;
+        * a worker whose **outstanding dependency bytes** would exceed
+          ``max_outstanding_bytes`` is skipped for byte-heavy tasks
+          (dispatch backpressure): returning None keeps the task in the
+          ready queue for a later pass instead of piling fetch work onto
+          a loaded worker;
+        * among the eligible, **memory pressure** (managed/limit) weighs
+          into the load score, and **spill-aware locality** prefers the
+          holder whose copy is still hot (a spilled copy is served from
+          disk -- cheaper than a store refetch, dearer than memory).
 
         Load is ``running/nthreads`` (occupancy), not a raw count -- a
         4-thread worker with 2 outstanding tasks is *less* loaded than a
@@ -395,22 +466,44 @@ class Scheduler:
         ``nthreads``: workers pipeline extra tasks through a local ready
         queue, and work stealing repairs any imbalance that develops.
         """
-        alive = [ws for ws in self.workers.values() if ws.alive]
+        alive = [
+            ws
+            for ws in self.workers.values()
+            if ws.alive and ws.memory_state != "paused"
+        ]
         if not alive:
             return None
         if ts.deps:
+            fetchable = [
+                ws
+                for ws in alive
+                if ws.outstanding_bytes + self._task_bytes(ts, ws)
+                <= self.max_outstanding_bytes
+                or ws.outstanding_bytes == 0  # never starve a huge task forever
+            ]
+            if not fetchable:
+                return None
+
             # Locality: prefer the worker holding the most dep results --
-            # but only within the same whole-tasks-per-thread load band.
+            # hot (memory-tier) copies count double a spilled one -- but
+            # only within the same whole-tasks-per-thread load band.
             # If locality dominated outright, a steal-acked task whose deps
             # live on the loaded victim would bounce straight back to it
             # (steal ping-pong) and idle workers could never help drain a
             # dep-local backlog; bytes are fetchable from peers anyway.
             def score(ws: WorkerState) -> tuple[int, int, float]:
-                held = sum(1 for d in ts.deps if d in ws.has_data)
-                return (int(ws.occupancy()), -held, ws.occupancy())
+                held = sum(
+                    (1 if d in ws.spilled else 2)
+                    for d in ts.deps
+                    if d in ws.has_data
+                )
+                return (int(ws.occupancy()), -held, ws.occupancy() + ws.memory_pressure())
 
-            return min(alive, key=score)
-        return min(alive, key=lambda ws: (ws.occupancy(), -ws.total_done))
+            return min(fetchable, key=score)
+        return min(
+            alive,
+            key=lambda ws: (ws.occupancy() + ws.memory_pressure(), -ws.total_done),
+        )
 
     def _dispatch(self) -> None:
         if not self.ready:
@@ -448,6 +541,22 @@ class Scheduler:
         ts.workers.add(ws.worker_id)
         ws.running.add(ts.key)
         ws.queued.append(ts.key)
+        charge = self._task_bytes(ts, ws)
+        if charge:
+            ws.outstanding_bytes += charge
+            self._assigned_bytes[(ws.worker_id, ts.key)] = charge
+
+    def _unassign(self, ws: WorkerState, key: str) -> None:
+        """Remove ``key`` from a worker's load accounting: running set,
+        queued view, and the outstanding-bytes charge.  The ONLY way an
+        assignment is retired -- done, failed, stolen, released, cancelled
+        duplicates, and lost workers all funnel through here, so
+        outstanding_bytes can never leak across lineage recovery."""
+        ws.running.discard(key)
+        ws.unqueue(key)
+        charge = self._assigned_bytes.pop((ws.worker_id, key), None)
+        if charge:
+            ws.outstanding_bytes = max(0, ws.outstanding_bytes - charge)
 
     def _task_payload(self, ts: TaskState) -> dict[str, Any]:
         # Dependency *metadata* only: inline blobs for tiny results, a
@@ -494,7 +603,9 @@ class Scheduler:
         hungry = [
             ws
             for ws in self.workers.values()
-            if ws.alive and len(ws.running) < ws.nthreads
+            if ws.alive
+            and len(ws.running) < ws.nthreads
+            and ws.memory_state != "paused"  # a paused worker must not pull
         ]
         if not hungry:
             return
@@ -536,8 +647,7 @@ class Scheduler:
         ws = self.workers.get(worker_id)
         for k in taken:
             if ws is not None:
-                ws.running.discard(k)
-                ws.unqueue(k)
+                self._unassign(ws, k)
             ts = self.tasks.get(k)
             if ts is None or ts.state != "running":
                 continue
@@ -554,8 +664,7 @@ class Scheduler:
         ts = self.tasks.get(key)
         ws = self.workers.get(worker_id)
         if ws is not None:
-            ws.running.discard(key)
-            ws.unqueue(key)
+            self._unassign(ws, key)
             ws.total_done += 1
         if ts is None or ts.state == "done":
             # Duplicate speculative completion (or completion after release).
@@ -589,8 +698,7 @@ class Scheduler:
             if other_id != worker_id:
                 other = self.workers.get(other_id)
                 if other is not None and key in other.running:
-                    other.running.discard(key)
-                    other.unqueue(key)
+                    self._unassign(other, key)
                     self._send_worker(other, M.msg(M.CANCEL, key=key))
         self._notify_done(ts)
         for dep_key in ts.dependents:
@@ -621,8 +729,7 @@ class Scheduler:
         ts = self.tasks.get(key)
         ws = self.workers.get(worker_id)
         if ws is not None:
-            ws.running.discard(key)
-            ws.unqueue(key)
+            self._unassign(ws, key)
         if ts is None or ts.state == "done":
             return
         missing = p.get("missing_deps") or []
@@ -708,12 +815,12 @@ class Scheduler:
             self._stealing.discard(key)
             for worker_id in ts.workers:
                 # Still dispatched somewhere: drop it from that worker's
-                # load accounting so stale keys can't skew occupancy or
-                # trigger futile steals.
+                # load accounting (running set, queue view, outstanding
+                # bytes) so stale keys can't skew occupancy, backpressure,
+                # or trigger futile steals.
                 ws = self.workers.get(worker_id)
                 if ws is not None:
-                    ws.running.discard(key)
-                    ws.unqueue(key)
+                    self._unassign(ws, key)
             for worker_id in ts.locations:
                 ws = self.workers.get(worker_id)
                 if ws is not None:
@@ -757,6 +864,10 @@ class Scheduler:
                 # lost.  Bytes lost from the store too surface later as
                 # missing_deps and go through lineage recovery.
                 ts.locations.discard(worker_id)
+        # Purge the dead worker's outstanding-bytes charges: its WorkerState
+        # goes away, but the charge map must not accumulate ghosts.
+        for wk in [wk for wk in self._assigned_bytes if wk[0] == worker_id]:
+            del self._assigned_bytes[wk]
         del self.workers[worker_id]
 
     def _probably_started(self, ts: TaskState) -> bool:

@@ -9,9 +9,28 @@ the bottleneck) and MPI4Dask (give the data its own point-to-point path):
   mailbox.
 * **data plane** -- workers publish results >= ``inline_result_max`` into a
   shared ``Store`` namespace (:class:`ResultStore`) and keep the serialized
-  bytes in a per-worker LRU (:class:`BlobCache`).  Dependents pull bytes
-  themselves: local cache, then a direct worker-to-worker fetch
-  (:class:`PeerTransfer`), then the shared store.
+  bytes in a per-worker cache.  Dependents pull bytes themselves: local
+  cache, then a direct worker-to-worker fetch (:class:`PeerTransfer`),
+  then the shared store.
+
+The cache is **tiered** (per "Object Proxy Patterns for Accelerating
+Distributed Applications", arXiv:2407.01764, multi-tier store policies):
+
+* :class:`BlobCache` is the memory-only LRU tier.  Evicting or refusing a
+  blob *discards* bytes (counted, never silent), so peers and dependents
+  must fall back to the shared store -- the refetch churn arXiv:2010.11105
+  identifies as a first-order worker-side cost.
+* :class:`SpillCache` adds a disk tier: cold blobs are demoted to disk
+  instead of dropped, promoted back on access, and blobs larger than the
+  whole memory budget stream straight to disk.  A spilled blob is still
+  servable -- to local dependents *and* to peers -- so memory pressure
+  costs disk I/O, not store refetches or lineage recovery.
+
+Peer fetches move in bounded fixed-size chunks (``chunk_size``): the
+producer side serves ranges out of whichever tier holds the blob (range
+reads never perturb the producer's LRU order), and the consumer side
+lands oversized blobs directly in its own disk tier -- so a transfer never
+holds two full copies of a blob in memory at once.
 
 Both sides of every peer fetch are byte-counted, so benchmarks can
 attribute traffic the way the paper's Figs 3-4 do: scheduler bytes vs
@@ -20,13 +39,23 @@ peer bytes vs mediated-store bytes.
 
 from __future__ import annotations
 
+import hashlib
+import os
+import shutil
+import tempfile
 import threading
+import uuid
 from collections import OrderedDict
-from typing import Any
+from typing import Any, Iterable, Iterator
 
 from repro.core.connectors.base import Key, has_peer_capability
 from repro.core.store import get_or_create_store, unregister_store
 from repro.runtime.comm import ByteCounter
+
+#: Default peer-transfer chunk: large enough to amortize per-chunk
+#: bookkeeping, small enough that an in-flight transfer's resident slice
+#: stays far below any realistic worker memory budget.
+DEFAULT_CHUNK_BYTES = 4 * 1024 * 1024
 
 
 class MissingDependencyError(RuntimeError):
@@ -42,14 +71,30 @@ class MissingDependencyError(RuntimeError):
         super().__init__(f"dependency bytes unavailable for {self.keys}")
 
 
+class _LostDuringTransfer(RuntimeError):
+    """The source blob vanished between chunks (eviction or worker death)."""
+
+
 class BlobCache:
-    """Byte-bounded LRU of serialized task results (one per worker)."""
+    """Byte-bounded LRU of serialized task results: the memory tier.
+
+    ``put`` returns whether the blob was *retained*; a refusal (blob larger
+    than the whole budget) or an eviction that discards bytes is counted in
+    ``stats()`` -- dropped bytes are exactly the blobs dependents will have
+    to refetch from the shared store.  :class:`SpillCache` overrides the
+    two discard points (``_admit_oversize`` / ``_evict_one``) to demote to
+    a disk tier instead.
+    """
 
     def __init__(self, max_bytes: int = 256 * 1024 * 1024):
         self.max_bytes = max_bytes
         self._data: OrderedDict[str, bytes] = OrderedDict()
         self._nbytes = 0
-        self._lock = threading.Lock()
+        self._lock = threading.RLock()
+        self._dropped = 0
+        self._dropped_bytes = 0
+
+    # -- read side -----------------------------------------------------------
 
     def get(self, key: str) -> bytes | None:
         with self._lock:
@@ -58,9 +103,37 @@ class BlobCache:
                 self._data.move_to_end(key)
             return blob
 
-    def put(self, key: str, blob: bytes) -> None:
+    def nbytes_of(self, key: str) -> int | None:
+        """Size of ``key``'s blob in any tier, or ``None`` if absent."""
+        with self._lock:
+            blob = self._data.get(key)
+            return None if blob is None else len(blob)
+
+    def read_range(self, key: str, offset: int, size: int) -> bytes | None:
+        """Read a slice of ``key``'s blob without touching LRU order.
+
+        This is the peer-transfer read path: a remote fetch must not
+        refresh the producer's recency (the producer may never use the
+        blob again), and must never force a full-blob copy on the serving
+        side.
+        """
+        with self._lock:
+            blob = self._data.get(key)
+            if blob is None:
+                return None
+            return blob[offset : offset + size]
+
+    def is_hot(self, key: str) -> bool:
+        """Whether ``key`` is resident in the memory tier."""
+        with self._lock:
+            return key in self._data
+
+    # -- write side ----------------------------------------------------------
+
+    def put(self, key: str, blob: bytes) -> bool:
+        """Retain ``blob``; returns False when the bytes were discarded."""
         if len(blob) > self.max_bytes:
-            return  # larger than the whole cache: the store is its home
+            return self._admit_oversize(key, blob)
         with self._lock:
             old = self._data.pop(key, None)
             if old is not None:
@@ -68,8 +141,26 @@ class BlobCache:
             self._data[key] = blob
             self._nbytes += len(blob)
             while self._nbytes > self.max_bytes and self._data:
-                _, evicted = self._data.popitem(last=False)
-                self._nbytes -= len(evicted)
+                self._evict_one()
+            return True
+
+    def _admit_oversize(self, key: str, blob: bytes) -> bool:
+        """A blob larger than the whole memory budget.  The memory-only
+        cache cannot hold it: count the drop (the shared store is its only
+        home) and tell the caller.  The spill tier overrides this to stream
+        the blob to disk instead."""
+        with self._lock:
+            self._dropped += 1
+            self._dropped_bytes += len(blob)
+        return False
+
+    def _evict_one(self) -> None:
+        """Discard the LRU entry (caller holds the lock).  Overridden by
+        the spill tier to demote instead of drop."""
+        _, evicted = self._data.popitem(last=False)
+        self._nbytes -= len(evicted)
+        self._dropped += 1
+        self._dropped_bytes += len(evicted)
 
     def pop(self, key: str) -> None:
         with self._lock:
@@ -82,6 +173,11 @@ class BlobCache:
             self._data.clear()
             self._nbytes = 0
 
+    def close(self) -> None:
+        self.clear()
+
+    # -- introspection ---------------------------------------------------------
+
     def __contains__(self, key: str) -> bool:
         with self._lock:
             return key in self._data
@@ -92,22 +188,319 @@ class BlobCache:
 
     @property
     def nbytes(self) -> int:
+        """Bytes resident in the memory tier."""
         with self._lock:
             return self._nbytes
+
+    @property
+    def spilled_bytes(self) -> int:
+        return 0
+
+    def spilled_keys(self) -> list[str]:
+        return []
+
+    def stats(self) -> dict[str, int]:
+        with self._lock:
+            return {
+                "memory_bytes": self._nbytes,
+                "spilled_bytes": 0,
+                "spilled_bytes_total": 0,
+                "dropped": self._dropped,
+                "dropped_bytes": self._dropped_bytes,
+                "spill_count": 0,
+                "restore_count": 0,
+            }
+
+
+class SpillCache(BlobCache):
+    """Two-tier blob cache: hot in-memory LRU over a cold disk tier.
+
+    * Eviction **demotes** the LRU blob to a file instead of discarding it;
+      a later ``get`` promotes it back (evicting/demoting others to make
+      room) -- so under memory pressure the worker trades disk I/O for
+      store refetches, never losing bytes.
+    * A blob larger than the whole memory budget streams straight to disk
+      (the fix for the old silent ``BlobCache.put`` no-op) and is served
+      from there by range reads without ever being resident.
+    * ``shed(target)`` demotes until the memory tier fits ``target`` --
+      the pause-state pressure-relief hook.
+
+    All tier movements are counted (``spill_count`` / ``restore_count`` /
+    ``spilled_bytes``) so heartbeats and ``worker_stats()`` can report
+    real memory state.  ``dropped`` stays 0 unless disk writes fail.
+    """
+
+    def __init__(self, max_bytes: int = 256 * 1024 * 1024, spill_dir: str | None = None):
+        super().__init__(max_bytes)
+        self._owns_dir = spill_dir is None
+        self.spill_dir = spill_dir or tempfile.mkdtemp(prefix="repro-spill-")
+        os.makedirs(self.spill_dir, exist_ok=True)
+        self._disk: dict[str, int] = {}  # key -> nbytes on disk
+        self._spilled_bytes = 0
+        self._spill_count = 0
+        self._restore_count = 0
+        self._spilled_bytes_total = 0
+
+    def _path(self, key: str) -> str:
+        # Task keys are content tokens but not guaranteed filesystem-safe.
+        return os.path.join(self.spill_dir, hashlib.sha1(key.encode()).hexdigest())
+
+    # -- tier movement (caller holds the lock) ---------------------------------
+    #
+    # Demotion writes happen under the lock: moving them out would open a
+    # window where a blob is in neither tier and a dependent would falsely
+    # conclude the bytes are gone.  Reads (get/read_range) drop the lock
+    # around file I/O instead -- see those methods.
+
+    def _demote(self, key: str, blob: bytes) -> bool:
+        try:
+            with open(self._path(key), "wb") as f:
+                f.write(blob)
+        except OSError:
+            self._dropped += 1
+            self._dropped_bytes += len(blob)
+            return False
+        self._disk[key] = len(blob)
+        self._spilled_bytes += len(blob)
+        self._spill_count += 1
+        self._spilled_bytes_total += len(blob)
+        return True
+
+    def _drop_disk(self, key: str) -> None:
+        n = self._disk.pop(key, None)
+        if n is not None:
+            self._spilled_bytes -= n
+            try:
+                os.unlink(self._path(key))
+            except OSError:
+                pass
+
+    def _evict_one(self) -> None:
+        key, evicted = self._data.popitem(last=False)
+        self._nbytes -= len(evicted)
+        self._drop_disk(key)  # a stale disk copy would double-count
+        self._demote(key, evicted)
+
+    def _admit_oversize(self, key: str, blob: bytes) -> bool:
+        with self._lock:
+            self._drop_disk(key)
+            return self._demote(key, blob)
+
+    # -- read side -------------------------------------------------------------
+
+    def get(self, key: str) -> bytes | None:
+        # Disk reads happen OUTSIDE the lock (peer range-reads and local
+        # hits must not stall behind a restore); the re-locked epilogue
+        # re-checks tier membership, so racing restores, pops, and
+        # promotions stay consistent.
+        with self._lock:
+            blob = self._data.get(key)
+            if blob is not None:
+                self._data.move_to_end(key)
+                return blob
+            n = self._disk.get(key)
+            if n is None:
+                return None
+            path = self._path(key)
+        try:
+            with open(path, "rb") as f:
+                blob = f.read()
+        except OSError:
+            # The file vanished mid-read: a racing get() promoted it (serve
+            # the hot copy) or pop() released it (really gone).
+            with self._lock:
+                hot = self._data.get(key)
+                if hot is not None:
+                    self._data.move_to_end(key)
+                    return hot
+                self._drop_disk(key)
+            return None
+        with self._lock:
+            self._restore_count += 1
+            if key in self._data:  # racing restore already promoted it
+                self._data.move_to_end(key)
+                return self._data[key]
+            if key not in self._disk:  # popped while we read: just serve
+                return blob
+            if n <= self.max_bytes:
+                # Promote back to the hot tier (demoting others as needed).
+                self._drop_disk(key)
+                self._data[key] = blob
+                self._nbytes += n
+                while self._nbytes > self.max_bytes and len(self._data) > 1:
+                    self._evict_one()
+        return blob
+
+    def nbytes_of(self, key: str) -> int | None:
+        with self._lock:
+            blob = self._data.get(key)
+            if blob is not None:
+                return len(blob)
+            return self._disk.get(key)
+
+    def read_range(self, key: str, offset: int, size: int) -> bytes | None:
+        with self._lock:
+            blob = self._data.get(key)
+            if blob is not None:
+                return blob[offset : offset + size]
+            if key not in self._disk:
+                return None
+            path = self._path(key)
+        try:
+            with open(path, "rb") as f:
+                f.seek(offset)
+                return f.read(size)
+        except OSError:
+            # Promoted or popped mid-transfer: retry the memory tier once;
+            # a truly gone blob aborts the transfer (caller falls back).
+            with self._lock:
+                blob = self._data.get(key)
+                if blob is not None:
+                    return blob[offset : offset + size]
+                self._drop_disk(key)
+            return None
+
+    # -- streaming write (chunked peer transfers) ------------------------------
+
+    def put_stream(self, key: str, nbytes: int, chunks: Iterable[bytes]) -> bool:
+        """Land an incoming chunked transfer without assembling it in memory
+        when it would not fit the hot tier anyway.
+
+        Oversized blobs are written chunk-by-chunk to the disk tier, so the
+        receiving side of a transfer holds at most one chunk; blobs that fit
+        the memory budget assemble into a single buffer (one resident copy)
+        and take the normal ``put`` path.
+
+        Concurrent-safe per key: each call streams into a private temp
+        file (the chunk loop runs outside the cache lock), and if another
+        transfer landed the key first the incumbent wins -- blobs are
+        addressed by task key, so racing transfers carry the same bytes.
+        """
+        if nbytes <= self.max_bytes:
+            buf = bytearray()
+            for c in chunks:
+                buf += c
+            return self.put(key, bytes(buf))
+        path = self._path(key)
+        tmp = f"{path}.part-{uuid.uuid4().hex[:8]}"
+        try:
+            with open(tmp, "wb") as f:
+                for c in chunks:
+                    f.write(c)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        with self._lock:
+            if key in self._data or key in self._disk:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                return True
+            try:
+                os.replace(tmp, path)
+            except OSError:
+                self._dropped += 1
+                self._dropped_bytes += nbytes
+                return False
+            self._disk[key] = nbytes
+            self._spilled_bytes += nbytes
+            self._spill_count += 1
+            self._spilled_bytes_total += nbytes
+        return True
+
+    # -- pressure relief -------------------------------------------------------
+
+    def shed(self, target_bytes: int) -> int:
+        """Demote LRU entries until the memory tier is <= ``target_bytes``;
+        returns the number of bytes demoted (the paused worker's relief)."""
+        demoted = 0
+        with self._lock:
+            while self._nbytes > max(0, target_bytes) and self._data:
+                before = self._nbytes
+                self._evict_one()
+                demoted += before - self._nbytes
+        return demoted
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def pop(self, key: str) -> None:
+        with self._lock:
+            blob = self._data.pop(key, None)
+            if blob is not None:
+                self._nbytes -= len(blob)
+            self._drop_disk(key)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self._nbytes = 0
+            for key in list(self._disk):
+                self._drop_disk(key)
+
+    def close(self) -> None:
+        self.clear()
+        if self._owns_dir:
+            shutil.rmtree(self.spill_dir, ignore_errors=True)
+
+    # -- introspection ---------------------------------------------------------
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._data or key in self._disk
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data) + len(self._disk)
+
+    @property
+    def spilled_bytes(self) -> int:
+        with self._lock:
+            return self._spilled_bytes
+
+    def spilled_keys(self) -> list[str]:
+        with self._lock:
+            return list(self._disk)
+
+    def stats(self) -> dict[str, int]:
+        with self._lock:
+            return {
+                "memory_bytes": self._nbytes,
+                "spilled_bytes": self._spilled_bytes,
+                "spilled_bytes_total": self._spilled_bytes_total,
+                "dropped": self._dropped,
+                "dropped_bytes": self._dropped_bytes,
+                "spill_count": self._spill_count,
+                "restore_count": self._restore_count,
+            }
 
 
 class PeerTransfer:
     """Cluster-scoped directory of worker caches for direct transfers.
 
     The thread-worker analogue of a worker-to-worker socket mesh: a fetch
-    reads straight from the producing worker's :class:`BlobCache`, never
-    touching the scheduler, and is byte-counted on the shared counter so
-    the benchmarks can report the peer-path volume.  A worker that dies is
-    unregistered, so fetches from it fail fast and callers fall back to
-    the shared store (or trigger lineage recovery).
+    reads straight from the producing worker's cache -- *whichever tier*
+    holds the blob -- never touching the scheduler, and is byte-counted on
+    the shared counter so the benchmarks can report the peer-path volume.
+
+    Transfers move in bounded ``chunk_size`` pieces: the serving side
+    yields range reads (no full-blob copy, no LRU perturbation) and the
+    receiving side either assembles one resident copy (fits its memory
+    tier) or streams chunks straight into its own disk tier -- a transfer
+    never doubles peak memory by holding sender-side and receiver-side
+    copies of the full blob at once.
+
+    A worker that dies is unregistered, so fetches from it fail fast
+    (including mid-transfer: a vanished source aborts the fetch cleanly)
+    and callers fall back to the shared store (or trigger lineage
+    recovery).
     """
 
-    def __init__(self) -> None:
+    def __init__(self, chunk_size: int = DEFAULT_CHUNK_BYTES) -> None:
+        self.chunk_size = max(1, int(chunk_size))
         self._peers: dict[str, BlobCache] = {}
         self._lock = threading.Lock()
         self.counter = ByteCounter()
@@ -124,16 +517,56 @@ class PeerTransfer:
         with self._lock:
             return list(self._peers)
 
-    def fetch(self, worker_id: str, key: str) -> bytes | None:
-        """Fetch ``key``'s serialized bytes directly from a peer's cache."""
+    def _chunks(self, cache: BlobCache, key: str, nbytes: int) -> Iterator[bytes]:
+        offset = 0
+        while offset < nbytes:
+            chunk = cache.read_range(key, offset, self.chunk_size)
+            if not chunk:
+                # Evicted from every tier mid-transfer (or the worker died
+                # and its cache was cleared): abort, caller falls back.
+                raise _LostDuringTransfer(key)
+            self.counter.add_sent(len(chunk))
+            self.counter.add_recv(len(chunk))
+            offset += len(chunk)
+            yield chunk
+
+    def fetch(self, worker_id: str, key: str, *, sink: BlobCache | None = None) -> bytes | None:
+        """Fetch ``key``'s serialized bytes directly from a peer's cache.
+
+        With a ``sink`` (the fetching worker's own cache) the transfer
+        lands tier-appropriately -- oversized blobs stream chunk-by-chunk
+        into the sink's disk tier and are read back from there; everything
+        else assembles into exactly one resident copy and is retained via
+        ``sink.put``.
+        """
         with self._lock:
             cache = self._peers.get(worker_id)
         if cache is None:
             return None
-        blob = cache.get(key)
-        if blob is not None:
-            self.counter.add_sent(len(blob))
-            self.counter.add_recv(len(blob))
+        nbytes = cache.nbytes_of(key)
+        if nbytes is None:
+            return None
+        if nbytes == 0:
+            return b""
+        try:
+            if (
+                sink is not None
+                and isinstance(sink, SpillCache)
+                and nbytes > sink.max_bytes
+            ):
+                # Oversized for the receiver's memory tier: stream straight
+                # to its disk tier, at most one chunk resident at a time.
+                if not sink.put_stream(key, nbytes, self._chunks(cache, key, nbytes)):
+                    return None
+                return sink.get(key)
+            buf = bytearray()
+            for chunk in self._chunks(cache, key, nbytes):
+                buf += chunk
+            blob = bytes(buf)
+        except _LostDuringTransfer:
+            return None
+        if sink is not None:
+            sink.put(key, blob)
         return blob
 
     def snapshot(self) -> dict[str, int]:

@@ -4,16 +4,32 @@ Thread workers (default on this 1-core container) speak a metadata-only
 protocol with the scheduler; result bytes never ride on scheduler
 messages (beyond the inline threshold).  Each worker:
 
-* keeps every serialized result in a byte-bounded LRU ``BlobCache``,
+* keeps every serialized result in a byte-bounded cache -- a memory-only
+  ``BlobCache`` LRU, or (with a memory budget configured) a tiered
+  ``SpillCache`` that demotes cold blobs to disk instead of dropping
+  them,
 * publishes results >= ``inline_result_max`` into the shared cluster
   store (``ResultStore``) and reports only ``(key, ref, nbytes)``,
 * resolves dependencies itself: local cache -> direct peer fetch
-  (``PeerTransfer``) -> shared store -- the scheduler only supplied the
-  ``(ref, nbytes, locations)`` metadata,
+  (``PeerTransfer``, chunked so a transfer never doubles peak memory) ->
+  shared store -- the scheduler only supplied the ``(ref, nbytes,
+  locations)`` metadata,
 * pipelines dispatch through a **local ready queue**: one control-plane
   pump thread drains the mailbox (``RUN_BATCH`` enqueues many tasks at
   once) while ``nthreads`` executor threads pull from the queue -- so a
-  batch of N tasks costs one scheduler message, not N round-trips.
+  batch of N tasks costs one scheduler message, not N round-trips,
+* accounts its own memory: ``managed_bytes`` = hot-cache bytes +
+  in-flight task bytes (dependency blobs being resolved and results
+  being serialized).  Above ``pause_fraction`` of the budget the worker
+  self-transitions to ``paused`` -- executor threads stop pulling from
+  the local ready queue and the cache sheds (demotes) down to
+  ``target_fraction`` -- and resumes once pressure clears.  Transitions
+  push an immediate heartbeat so the scheduler's pressure-aware dispatch
+  reacts within one loop pass, not one heartbeat period.
+
+Heartbeats carry ``(managed_bytes, spilled_bytes, state)`` telemetry plus
+the set of spilled keys, which feeds the scheduler's spill-aware locality
+(dependents prefer holders whose copy is still hot).
 
 Work stealing is confirm-based at this end: ``STEAL`` removes the
 requested keys *still in the local queue* under the queue lock and acks
@@ -28,6 +44,7 @@ tasks be picklable.
 
 from __future__ import annotations
 
+import os
 import pickle
 import queue
 import threading
@@ -40,7 +57,7 @@ from repro.core.serialize import deserialize, serialize
 from repro.runtime import messages as M
 from repro.runtime.graph import substitute_refs
 from repro.runtime.scheduler import Mailbox, Scheduler
-from repro.runtime.transfer import BlobCache, MissingDependencyError
+from repro.runtime.transfer import BlobCache, MissingDependencyError, SpillCache
 
 # Registry for non-picklable callables (thread mode only).
 _LOCAL_FUNCS: dict[str, Any] = {}
@@ -50,6 +67,10 @@ _LOCAL_FUNCS_LOCK = threading.Lock()
 #: dependent's dispatch and the publish landing in a slow store backend.
 _FETCH_RETRIES = 3
 _FETCH_RETRY_SLEEP = 0.02
+
+#: Cap on the spilled-key list a heartbeat carries: locality hints are
+#: advisory, so a pathological spill set must not bloat the control plane.
+_HEARTBEAT_SPILLED_MAX = 512
 
 
 def dumps_function(fn: Any) -> bytes:
@@ -96,7 +117,16 @@ def loads_function(blob: bytes) -> Any:
 
 
 class ThreadWorker:
-    """In-process worker thread speaking the byte protocol."""
+    """In-process worker thread speaking the byte protocol.
+
+    ``memory`` (a plain dict, the wire form of ``api.config.MemorySpec``)
+    switches the cache to the tiered :class:`SpillCache` and enables the
+    pause/shed pressure loop:
+
+    * ``limit_bytes`` -- the managed-memory budget (also the hot-tier cap),
+    * ``spill_dir``   -- disk-tier directory (a private tempdir if unset),
+    * ``pause_fraction`` / ``target_fraction`` -- pause above, resume below.
+    """
 
     def __init__(
         self,
@@ -107,14 +137,31 @@ class ThreadWorker:
         result_store: Any = None,  # transfer.ResultStore | None
         transfers: Any = None,  # transfer.PeerTransfer | None
         cache_bytes: int = 256 * 1024 * 1024,
+        memory: dict[str, Any] | None = None,
     ):
         self.worker_id = worker_id
         self.scheduler = scheduler
         self.mailbox = Mailbox(worker_id)
         self.results = result_store
         self.transfers = transfers
-        self.cache = BlobCache(cache_bytes)  # key -> serialized result
+        if memory is not None:
+            limit = int(memory.get("limit_bytes", cache_bytes))
+            spill_dir = memory.get("spill_dir")
+            if spill_dir is not None:
+                spill_dir = os.path.join(spill_dir, worker_id)
+            self.cache: BlobCache = SpillCache(limit, spill_dir=spill_dir)
+            self.memory_limit: int | None = limit
+            self._pause_bytes = int(limit * float(memory.get("pause_fraction", 0.85)))
+            self._target_bytes = int(limit * float(memory.get("target_fraction", 0.6)))
+        else:
+            self.cache = BlobCache(cache_bytes)  # key -> serialized result
+            self.memory_limit = None
+            self._pause_bytes = self._target_bytes = 0
         self.nthreads = nthreads
+        self.state = "running"  # running | paused
+        self.refetch_count = 0  # dependency fetches that fell back to the store
+        self._inflight_bytes = 0
+        self._mem_lock = threading.Lock()
         self._stop = threading.Event()
         self._cancelled: set[str] = set()
         #: Local ready queue: RUN_TASK/RUN_BATCH payloads awaiting an
@@ -166,7 +213,7 @@ class ThreadWorker:
             self._ocv.notify_all()
         if self.transfers is not None:
             self.transfers.unregister(self.worker_id)
-        self.cache.clear()
+        self.cache.close()
 
     def kill(self) -> None:
         """Simulate abrupt node failure: heartbeats stop and the worker's
@@ -174,9 +221,93 @@ class ThreadWorker:
         store or lineage recovery)."""
         self.stop()
 
+    # -- memory accounting ----------------------------------------------------
+
+    def managed_bytes(self) -> int:
+        """Hot-tier cache bytes + in-flight task bytes.  The quantity the
+        pause threshold and the scheduler's pressure-aware dispatch act on.
+
+        The in-flight charge deliberately counts a running task's dep and
+        result *blob sizes even though the same blobs sit in the cache*:
+        during execution the deserialized live objects coexist with the
+        serialized cache copies, and blob size is the cheap proxy for that
+        live-object footprint -- so managed_bytes tracks real residency,
+        not just the cache ledger."""
+        with self._mem_lock:
+            inflight = self._inflight_bytes
+        return self.cache.nbytes + inflight
+
+    def stats(self) -> dict[str, Any]:
+        """Per-worker memory telemetry (the ``worker_stats()`` row)."""
+        cache_stats = self.cache.stats()
+        with self._pcv:
+            queued = len(self._pending)
+        return {
+            "state": self.state,
+            "managed_bytes": self.managed_bytes(),
+            "spilled_bytes": cache_stats["spilled_bytes"],
+            "spilled_bytes_total": cache_stats["spilled_bytes_total"],
+            "memory_limit": self.memory_limit,
+            "queued": queued,
+            "refetch_count": self.refetch_count,
+            "dropped": cache_stats["dropped"],
+            "spill_count": cache_stats["spill_count"],
+            "restore_count": cache_stats["restore_count"],
+        }
+
+    def _note_inflight(self, delta: int) -> None:
+        with self._mem_lock:
+            self._inflight_bytes = max(0, self._inflight_bytes + delta)
+        self._update_memory_state()
+
+    def _update_memory_state(self) -> None:
+        """Re-evaluate pause/resume after any change to managed bytes."""
+        if self.memory_limit is None:
+            return
+        if self.state == "running" and self.managed_bytes() >= self._pause_bytes:
+            self.state = "paused"
+            # Shed the hot tier toward the resume target (demote-to-disk,
+            # never discard); in-flight bytes drain as running tasks finish.
+            shed = getattr(self.cache, "shed", None)
+            if shed is not None:
+                with self._mem_lock:
+                    inflight = self._inflight_bytes
+                shed(max(0, self._target_bytes - inflight))
+            self._send_heartbeat()  # tell the scheduler *now*, not in 0.5 s
+        # Re-checked (not elif) right after a pause: when shedding alone
+        # clears the pressure, the worker resumes without waiting a beat --
+        # the pause persists only while in-flight bytes keep managed high.
+        if self.state == "paused" and self.managed_bytes() <= self._target_bytes:
+            self.state = "running"
+            with self._pcv:
+                self._pcv.notify_all()  # executor threads may pull again
+            self._send_heartbeat()
+
+    # -- heartbeats (telemetry-bearing) ---------------------------------------
+
+    def _send_heartbeat(self) -> None:
+        spilled = self.cache.spilled_keys()
+        if len(spilled) > _HEARTBEAT_SPILLED_MAX:
+            spilled = spilled[:_HEARTBEAT_SPILLED_MAX]
+        self._send(
+            M.msg(
+                M.HEARTBEAT,
+                worker=self.worker_id,
+                managed_bytes=self.managed_bytes(),
+                spilled_bytes=self.cache.spilled_bytes,
+                memory_limit=self.memory_limit,
+                state=self.state,
+                spilled_keys=spilled,
+            )
+        )
+
     def _heartbeat_loop(self) -> None:
         while not self._stop.is_set():
-            self._send(M.msg(M.HEARTBEAT, worker=self.worker_id))
+            # Periodic re-evaluation backstops the event-driven checks: a
+            # paused worker with no task activity still resumes once its
+            # in-flight bytes drain.
+            self._update_memory_state()
+            self._send_heartbeat()
             time.sleep(0.5)
 
     def _send(self, message: Any) -> None:
@@ -286,7 +417,13 @@ class ThreadWorker:
     def _exec_loop(self) -> None:
         while True:
             with self._pcv:
-                while not self._pending and not self._stop.is_set():
+                # A paused worker stops *pulling* -- tasks already claimed by
+                # an executor thread run to completion (they are the pressure
+                # that is draining), but nothing new starts until managed
+                # bytes fall back below target_fraction.
+                while (
+                    not self._pending or self.state == "paused"
+                ) and not self._stop.is_set():
                     self._pcv.wait(timeout=0.2)
                 if self._stop.is_set():
                     return
@@ -308,8 +445,8 @@ class ThreadWorker:
 
     def _fetch_remote(self, key: str, info: dict[str, Any]) -> bytes:
         """Pull dependency bytes without touching the scheduler: direct
-        peer-to-peer first (the producer's cache is hot), shared store as
-        the durable fallback."""
+        peer-to-peer first (chunked; the producer serves from whichever
+        tier holds the blob), shared store as the durable fallback."""
         ref = info.get("ref")
         locations = info.get("locations") or []
         for attempt in range(_FETCH_RETRIES):
@@ -317,13 +454,13 @@ class ThreadWorker:
                 for loc in locations:
                     if loc == self.worker_id:
                         continue
-                    blob = self.transfers.fetch(loc, key)
+                    blob = self.transfers.fetch(loc, key, sink=self.cache)
                     if blob is not None:
-                        self.cache.put(key, blob)
                         return blob
             if self.results is not None and ref is not None:
                 blob = self.results.fetch(ref, info.get("nbytes", -1))
                 if blob is not None:
+                    self.refetch_count += 1
                     self.cache.put(key, blob)
                     return blob
             if attempt + 1 < _FETCH_RETRIES:
@@ -336,6 +473,7 @@ class ThreadWorker:
         key = p["key"]
         if key in self._cancelled:
             return
+        inflight = 0
         try:
             fn = loads_function(p["func"])
             raw_args = p["args"]
@@ -355,6 +493,10 @@ class ThreadWorker:
                     dep_results[d] = self._fetch_dep(
                         d, dep_info.get(d), inline_deps.get(d)
                     )
+                    nb = (dep_info.get(d) or {}).get("nbytes", 0)
+                    if nb > 0:
+                        inflight += nb
+                        self._note_inflight(nb)
                 except MissingDependencyError as exc:
                     missing.extend(exc.keys)
             if missing:
@@ -372,6 +514,8 @@ class ThreadWorker:
             kwargs = substitute_refs(args_spec["kwargs"], dep_results)
             result = fn(*list(args), **kwargs)
             blob = serialize(result).to_bytes()
+            inflight += len(blob)
+            self._note_inflight(len(blob))
             self.cache.put(key, blob)
             if len(blob) <= self.scheduler.inline_result_max or self.results is None:
                 inline, ref = blob, None
@@ -398,3 +542,8 @@ class ThreadWorker:
                     "error": f"{type(exc).__name__}: {exc}\n{traceback.format_exc()}",
                 },
             )
+        finally:
+            if inflight:
+                self._note_inflight(-inflight)
+            elif self.memory_limit is not None:
+                self._update_memory_state()
