@@ -16,11 +16,15 @@ reduction ratio; the acceptance bar is a >=10x drop at >=1 MiB payloads.
 
 from __future__ import annotations
 
+import uuid
+
 import numpy as np
 
 from benchmarks.common import QUICK, bench_store_config, record, save_artifact, timeit
 from repro.api import ClusterSpec, PolicySpec, Session
+from repro.core.serialize import CopyCounter, FrameBundle, deserialize, serialize
 from repro.runtime.client import LocalCluster
+from repro.runtime.transfer import BlobCache, PeerTransfer, ResultStore, SpillCache
 
 
 def identity(x):
@@ -28,6 +32,10 @@ def identity(x):
 
 
 PAYLOADS = [1_000, 10_000, 100_000, 1_000_000, 10_000_000]
+
+#: Zero-copy row payloads: array sizes the paper's serialization findings
+#: care about (small / typical / large task results).
+ZC_PAYLOADS_MIB = [1, 8, 64]
 
 
 def _hub_bytes(cluster: LocalCluster) -> int:
@@ -113,6 +121,173 @@ def run(payloads: list[int] | None = None, reps: int | None = None) -> dict:
 
     save_artifact("fig3_overheads", out)
     return out
+
+
+def _legacy_peer_fetch(cache: BlobCache, key: str, nbytes: int, chunk: int) -> bytes:
+    """The pre-frame-native (PR 4) peer fetch, replayed for the A/B row:
+    a ``bytes`` copy per served chunk, growing-buffer assembly, and a
+    final contiguous materialization -- three full copies of the payload
+    on the receiving side (the producer already paid a fourth at put time
+    by joining its frames)."""
+    buf = bytearray()
+    off = 0
+    while off < nbytes:
+        c = bytes(cache.read_range(key, off, chunk))
+        buf += c
+        off += len(c)
+    return bytes(buf)
+
+
+def zerocopy(payloads_mib: list[int] | None = None, reps: int | None = None) -> dict:
+    """Zero-copy data-path row: copies-per-byte-moved and fetch MiB/s for
+    array payloads on the chunked peer path (old joined-blob path vs the
+    frame-native path) and the same-host shm fast path, plus the
+    mmap-served spill-restore check.
+
+    Saved to ``artifacts/bench/smoke_zerocopy.json`` (the smoke guard
+    asserts on the same dict).
+    """
+    payloads_mib = payloads_mib or (ZC_PAYLOADS_MIB[:2] if QUICK else ZC_PAYLOADS_MIB)
+    reps = reps if reps is not None else (3 if QUICK else 5)
+    out: dict = {
+        "payload_mib": list(payloads_mib),
+        "legacy_mib_s": [],
+        "chunked_mib_s": [],
+        "fetch_speedup": [],
+        "chunked_copies_per_byte": [],
+        "shm_mib_s": [],
+        "shm_copies_per_byte": [],
+    }
+
+    uid = uuid.uuid4().hex[:8]
+    shm_store = ResultStore(
+        {
+            "name": f"zc-{uid}",
+            "connector": {"connector_type": "shm", "prefix": f"zc{uid[:4]}"},
+            "serializer": "default",
+            "cache_size": 0,
+        }
+    )
+    try:
+        for mib in payloads_mib:
+            arr = np.arange(mib * (1 << 20) // 4, dtype=np.float32)
+            sobj = serialize(arr)
+            nbytes = sobj.nbytes
+            key = f"zc-{mib}mib"
+
+            # Chunked peer path: frame-native producer cache, view-served
+            # chunks, one receiver-side assembly.
+            mesh = PeerTransfer()
+            src = BlobCache(max_bytes=4 * nbytes)
+            src.put(key, sobj)
+            mesh.register("src", src)
+            sink = BlobCache(max_bytes=4 * nbytes)
+            new = timeit(
+                lambda: (deserialize(mesh.fetch("src", key, sink=sink)), sink.pop(key)),
+                reps=reps,
+            )
+            copies = sink.copies.snapshot()
+            cpb = copies["copies_per_byte"]
+
+            # Legacy path: join-at-put producer, bytes-per-chunk serving,
+            # growing assembly, final materialization.
+            legacy_src = BlobCache(max_bytes=4 * nbytes)
+            legacy_src.put(key, FrameBundle([memoryview(sobj.to_bytes())]))
+            legacy = timeit(
+                lambda: deserialize(
+                    _legacy_peer_fetch(legacy_src, key, nbytes, mesh.chunk_size)
+                ),
+                reps=reps,
+            )
+
+            # Same-host shm fast path: publish frames into the segment,
+            # attach by ref, deserialize over the mapped view.
+            ref = shm_store.publish(key, sobj)
+            shm_copies = CopyCounter()
+            shm = timeit(
+                lambda: deserialize(shm_store.fetch(ref, nbytes, copies=shm_copies)),
+                reps=reps,
+            )
+            shm_cpb = shm_copies.snapshot()["copies_per_byte"]
+            shm_store.evict(ref)
+
+            mib_s = lambda t: mib / max(t, 1e-9)  # noqa: E731
+            speedup = legacy["median"] / max(new["median"], 1e-9)
+            out["legacy_mib_s"].append(mib_s(legacy["median"]))
+            out["chunked_mib_s"].append(mib_s(new["median"]))
+            out["fetch_speedup"].append(speedup)
+            out["chunked_copies_per_byte"].append(cpb)
+            out["shm_mib_s"].append(mib_s(shm["median"]))
+            out["shm_copies_per_byte"].append(shm_cpb)
+            record(
+                f"zerocopy/peer_fetch/{mib}MiB", new["median"] * 1e6,
+                f"legacy={legacy['median']*1e6:.0f}us speedup={speedup:.1f}x "
+                f"copies/byte={cpb:.2f}",
+            )
+            record(
+                f"zerocopy/shm_fetch/{mib}MiB", shm["median"] * 1e6,
+                f"{mib_s(shm['median']):.0f}MiB/s copies/byte={shm_cpb:.2f}",
+            )
+    finally:
+        shm_store.close()
+
+    # Spill restores must be mmap-served: no full-file read on promote.
+    spill = SpillCache(max_bytes=1 << 20)
+    try:
+        blob = np.random.default_rng(2).bytes(4 << 20)  # 4x the hot tier
+        spill.put("cold", blob)  # oversized: streams straight to disk
+        restored = spill.get("cold")
+        st = spill.stats()
+        out["spill_mmap_restores"] = st["mmap_restores"]
+        out["spill_restore_ok"] = bool(
+            restored == blob and st["mmap_restores"] >= 1
+            and st["mmap_restores"] == st["restore_count"]
+        )
+    finally:
+        spill.close()
+    record(
+        "zerocopy/spill_mmap_restore", out["spill_mmap_restores"],
+        f"ok={out['spill_restore_ok']}",
+    )
+
+    save_artifact("smoke_zerocopy", out)
+    return out
+
+
+def zerocopy_smoke() -> bool:
+    """CI guard for the zero-copy data path.
+
+    Fails (returns False) when a copy sneaks back into the hot path:
+    copies-per-byte-moved must stay <= 1.0 on the chunked peer path (the
+    single receiver-side assembly) and <= 0.1 on the same-host shm fast
+    path (attach by ref, no channel copy); the frame-native peer fetch
+    must stay >= 2x the PR-4 joined-blob fetch on 8 MiB array payloads;
+    and spill restores must be mmap-served (no full-file read).
+    """
+    out = zerocopy()
+    ok = True
+    for mib, cpb in zip(out["payload_mib"], out["chunked_copies_per_byte"]):
+        if cpb > 1.0:
+            print(f"# SMOKE FAIL: chunked peer path copies {cpb:.2f}x "
+                  f"per byte at {mib} MiB (must be <= 1.0)")
+            ok = False
+    for mib, cpb in zip(out["payload_mib"], out["shm_copies_per_byte"]):
+        if cpb > 0.1:
+            print(f"# SMOKE FAIL: shm fast path copies {cpb:.2f}x per byte "
+                  f"at {mib} MiB (must be <= 0.1)")
+            ok = False
+    guard_mib = 8 if 8 in out["payload_mib"] else out["payload_mib"][-1]
+    speedup = out["fetch_speedup"][out["payload_mib"].index(guard_mib)]
+    if speedup < 2.0:
+        print(f"# SMOKE FAIL: frame-native peer fetch only {speedup:.2f}x the "
+              f"joined-blob baseline at {guard_mib} MiB (must be >= 2x)")
+        ok = False
+    if not out["spill_restore_ok"]:
+        print("# SMOKE FAIL: spill restore was not mmap-served byte-identically")
+        ok = False
+    out["ok"] = ok
+    save_artifact("smoke_zerocopy", out)
+    return ok
 
 
 def smoke(payload: int = 65_536, reps: int = 3) -> bool:

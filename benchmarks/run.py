@@ -9,12 +9,15 @@ Prints ``name,us_per_call,derived`` CSV rows and writes JSON artifacts under
     PYTHONPATH=src python -m benchmarks.run --smoke      # CI data-plane guard
 
 ``--smoke`` is the CI regression guard: it runs the Fig-3 overheads with
-tiny payloads, the 512-task fan-out/fan-in graph benchmark, and the
-larger-than-cache memory-pressure workload on the cluster backend, writes
-their JSON artifacts (uploaded by CI), and exits non-zero when an
-invariant regresses -- scheduler hub-byte reduction,
-results-by-reference, graph submission staying <= 2 scheduler msgs/task
-and >= 2x per-task submit throughput, and the tiered cache completing the
+tiny payloads, the zero-copy data-path row, the 512-task fan-out/fan-in
+graph benchmark, and the larger-than-cache memory-pressure workload on
+the cluster backend, writes their JSON artifacts (uploaded by CI), and
+exits non-zero when an invariant regresses -- scheduler hub-byte
+reduction, results-by-reference, copies-per-byte-moved <= 1.0 on the
+chunked peer path and <= 0.1 on the same-host shm fast path (with the
+frame-native fetch >= 2x the joined-blob baseline and spill restores
+mmap-served), graph submission staying <= 2 scheduler msgs/task and
+>= 2x per-task submit throughput, and the tiered cache completing the
 over-budget workload with zero dropped blobs, spill bytes > 0, and fewer
 store refetches than the memory-only baseline.  Wired into
 ``scripts/ci.sh smoke``.
@@ -34,6 +37,7 @@ def main() -> None:
 
         print("name,us_per_call,derived")
         ok = overheads.smoke()
+        ok = overheads.zerocopy_smoke() and ok
         ok = scaling.smoke() and ok
         ok = scaling.memory_smoke() and ok
         print(f"# smoke {'PASS' if ok else 'FAIL'}", flush=True)

@@ -37,9 +37,12 @@ cmd_test() {
 
 cmd_smoke() {
   # Benchmark regression guards: data-plane invariants (hub-byte reduction,
-  # results-by-reference) and control-plane invariants (graph submission
-  # <= 2 scheduler msgs/task, >= 2x per-task submit throughput).  JSON
-  # lands in artifacts/bench/ for the CI artifact upload.
+  # results-by-reference), zero-copy invariants (copies-per-byte-moved
+  # <= 1.0 chunked peer / <= 0.1 shm fast path, >= 2x fetch throughput vs
+  # the joined-blob baseline, mmap-served spill restores), and
+  # control-plane invariants (graph submission <= 2 scheduler msgs/task,
+  # >= 2x per-task submit throughput).  JSON lands in artifacts/bench/
+  # for the CI artifact upload.
   BENCH_QUICK=1 python -m benchmarks.run --smoke
 }
 

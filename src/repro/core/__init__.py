@@ -50,6 +50,13 @@ from repro.core.proxy import (
     proxy_token,
     resolve,
 )
+from repro.core.serialize import (
+    CopyCounter,
+    FrameBundle,
+    SerializedObject,
+    deserialize,
+    serialize,
+)
 from repro.core.store import (
     Store,
     get_or_create_store,
@@ -96,6 +103,11 @@ __all__ = [
     "is_resolved",
     "proxy_token",
     "resolve",
+    "CopyCounter",
+    "FrameBundle",
+    "SerializedObject",
+    "deserialize",
+    "serialize",
     "Store",
     "get_or_create_store",
     "get_store",

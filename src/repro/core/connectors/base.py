@@ -8,13 +8,15 @@ arbitrary process -- that is what makes proxy factories self-contained.
 
 from __future__ import annotations
 
+import mmap
+import os
 import threading
 import uuid
 from dataclasses import dataclass
 from typing import Any, Protocol, Sequence, runtime_checkable
 
 from repro.core.plugins import PluginRegistry
-from repro.core.serialize import SerializedObject
+from repro.core.serialize import FrameBundle, SerializedObject
 
 
 @dataclass(frozen=True)
@@ -30,7 +32,7 @@ class Key:
         return Key(object_id=uuid.uuid4().hex, size=size, tag=tag)
 
 
-Payload = SerializedObject | bytes | bytearray | memoryview
+Payload = SerializedObject | FrameBundle | bytes | bytearray | memoryview
 
 #: Capability name for connectors that support deterministic-key writes
 #: (``put_at``).  The runtime's peer-to-peer data plane requires it: workers
@@ -38,17 +40,44 @@ Payload = SerializedObject | bytes | bytearray | memoryview
 #: overwrite the same entry instead of leaking a second copy.
 PEER_CAPABILITY = "peer"
 
+#: Capability name for connectors whose ``get`` hands back a view of the
+#: stored bytes that a *same-host* consumer can read with zero copies
+#: (shared memory).  The data plane's same-host fast path keys off this:
+#: dependents attach the published segment by ref and deserialize over the
+#: mapped view instead of pulling chunks through the peer channel.
+ZERO_COPY_CAPABILITY = "zero-copy"
+
 
 def payload_frames(data: Payload) -> list[bytes | memoryview]:
     if isinstance(data, SerializedObject):
         return data.frames()
+    if isinstance(data, FrameBundle):
+        return list(data.frames)
     return [memoryview(data)]
 
 
 def payload_nbytes(data: Payload) -> int:
-    if isinstance(data, SerializedObject):
+    if isinstance(data, (SerializedObject, FrameBundle)):
         return data.nbytes
     return memoryview(data).nbytes
+
+
+def mmap_readonly_view(path: str) -> memoryview | None:
+    """Attach ``path`` as a read-only mapped view -- the shared mmap-attach
+    idiom for file-backed zero-copy reads (connector gets, spill-tier
+    restores).  Pages fault in only as they are read; the mapping stays
+    valid after an unlink (POSIX).  Returns an empty view for an empty
+    file (which cannot be mapped) and ``None`` when the file is missing
+    or unreadable.
+    """
+    try:
+        with open(path, "rb") as f:
+            size = os.fstat(f.fileno()).st_size
+            if size == 0:
+                return memoryview(b"")
+            return memoryview(mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ))
+    except OSError:
+        return None
 
 
 @runtime_checkable
@@ -93,12 +122,20 @@ def has_peer_capability(connector: Any) -> bool:
     return callable(getattr(connector, "put_at", None))
 
 
+def has_zero_copy_capability(connector: Any) -> bool:
+    """True when a connector's stored bytes are same-host attachable with
+    zero copies (it marks itself ``SAME_HOST_ZERO_COPY``)."""
+    return bool(getattr(connector, "SAME_HOST_ZERO_COPY", False))
+
+
 def connector_capabilities(kind: str) -> frozenset[str]:
     """Capability names of a registered connector type."""
     cls = connector_registry.get(kind)
     caps = set(getattr(cls, "CAPABILITIES", ()))
     if has_peer_capability(cls):
         caps.add(PEER_CAPABILITY)
+    if has_zero_copy_capability(cls):
+        caps.add(ZERO_COPY_CAPABILITY)
     return frozenset(caps)
 
 

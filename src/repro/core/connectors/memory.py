@@ -4,6 +4,11 @@ The fastest option when producer and consumer share an address space
 (thread-based workers, single-process pipelines, tests).  Named segments are
 process-global so that two ``Store`` instances with the same segment name
 share objects, mirroring how a Redis/DAOS namespace outlives any one client.
+
+Storage is frame-native: a ``put`` retains the payload's frame list as a
+:class:`FrameBundle` (views over the producer's buffers -- zero copies) and
+``get`` hands the same bundle back, so a same-process round trip through
+this connector never joins or copies the payload.
 """
 
 from __future__ import annotations
@@ -17,9 +22,9 @@ from repro.core.connectors.base import (
     Payload,
     register_connector,
 )
-from repro.core.serialize import SerializedObject
+from repro.core.serialize import FrameBundle
 
-_SEGMENTS: dict[str, dict[str, bytes]] = {}
+_SEGMENTS: dict[str, dict[str, FrameBundle]] = {}
 _SEGMENTS_LOCK = threading.Lock()
 
 
@@ -32,30 +37,34 @@ class MemoryConnector:
         self.stats = ConnectorStats()
 
     def put(self, data: Payload) -> Key:
-        blob = data.to_bytes() if isinstance(data, SerializedObject) else bytes(data)
-        key = Key.new(size=len(blob))
-        self._data[key.object_id] = blob
-        self.stats.record_put(len(blob))
+        bundle = FrameBundle.of(data)
+        key = Key.new(size=bundle.nbytes)
+        self._data[key.object_id] = bundle
+        self.stats.record_put(bundle.nbytes)
         return key
 
     def put_at(self, key: Key, data: Payload) -> Key:
         """Deterministic-key write (``peer`` capability): idempotent publish."""
-        blob = data.to_bytes() if isinstance(data, SerializedObject) else bytes(data)
-        self._data[key.object_id] = blob
-        self.stats.record_put(len(blob))
-        return Key(key.object_id, size=len(blob), tag=key.tag)
+        bundle = FrameBundle.of(data)
+        self._data[key.object_id] = bundle
+        self.stats.record_put(bundle.nbytes)
+        return Key(key.object_id, size=bundle.nbytes, tag=key.tag)
+
+    def put_frames(self, frames: Sequence[bytes | memoryview]) -> Key:
+        """Writev-style put: retain the frame list as-is (no join)."""
+        return self.put(FrameBundle(frames))
 
     def put_batch(self, datas: Sequence[Payload]) -> list[Key]:
         return [self.put(d) for d in datas]
 
-    def get(self, key: Key) -> memoryview | None:
-        blob = self._data.get(key.object_id)
-        if blob is None:
+    def get(self, key: Key) -> FrameBundle | None:
+        bundle = self._data.get(key.object_id)
+        if bundle is None:
             return None
-        self.stats.record_get(len(blob))
-        return memoryview(blob)
+        self.stats.record_get(bundle.nbytes)
+        return bundle
 
-    def get_batch(self, keys: Sequence[Key]) -> list[memoryview | None]:
+    def get_batch(self, keys: Sequence[Key]) -> list[FrameBundle | None]:
         return [self.get(k) for k in keys]
 
     def exists(self, key: Key) -> bool:

@@ -62,7 +62,7 @@ class MultiConnector:
         inner = Key(key.object_id, size=key.size)
         out = self._conn_for(key).get(inner)
         if out is not None:
-            self.stats.record_get(memoryview(out).nbytes)
+            self.stats.record_get(payload_nbytes(out))
         return out
 
     def get_batch(self, keys: Sequence[Key]):

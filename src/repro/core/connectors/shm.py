@@ -40,6 +40,11 @@ def _open_segment(
 
 @register_connector("shm")
 class SharedMemoryConnector:
+    #: Same-host consumers can attach a published segment by ref and read
+    #: it with zero copies (``get_view``) -- the data plane's shm fast
+    #: path keys off this marker.
+    SAME_HOST_ZERO_COPY = True
+
     def __init__(self, prefix: str = "psx", zero_copy: bool = False) -> None:
         # zero_copy=True returns live views into the segment (fastest, but
         # the consumer must drop views before the segment can be unlinked);
@@ -48,6 +53,10 @@ class SharedMemoryConnector:
         self.zero_copy = zero_copy
         self.stats = ConnectorStats()
         self._attached: dict[str, shared_memory.SharedMemory] = {}
+        #: Segments evicted while zero-copy views were still alive: their
+        #: unmap raised BufferError, so we park them here (preventing a
+        #: noisy GC-time ``__del__``) and retry on later lifecycle calls.
+        self._zombies: list[shared_memory.SharedMemory] = []
         self._lock = threading.Lock()
         atexit.register(self.close)
 
@@ -92,6 +101,13 @@ class SharedMemoryConnector:
         self.stats.record_put(off)
         return Key(key.object_id, size=off, tag=key.tag)
 
+    def put_frames(self, frames: Sequence[bytes | memoryview]) -> Key:
+        """Writev-style put: frames land in the segment back-to-back; the
+        single segment write is the publish, not an extra copy."""
+        from repro.core.serialize import FrameBundle
+
+        return self.put(FrameBundle(frames))
+
     def put_batch(self, datas: Sequence[Payload]) -> list[Key]:
         return [self.put(d) for d in datas]
 
@@ -119,23 +135,68 @@ class SharedMemoryConnector:
             return memoryview(seg.buf)[:size]
         return bytes(seg.buf[:size])
 
+    def get_view(self, key: Key) -> memoryview | None:
+        """Same-host zero-copy attach: a live view of the mapped segment,
+        regardless of the connector's copy-out default.  The mapping stays
+        readable after an evict (only the *name* is unlinked), so handing
+        these views to ``deserialize`` is safe against racing releases."""
+        seg = self._attach(key)
+        if seg is None:
+            return None
+        size = key.size if key.size >= 0 else seg.size
+        self.stats.record_get(size)
+        return memoryview(seg.buf)[:size]
+
     def get_batch(self, keys: Sequence[Key]) -> list[memoryview | None]:
         return [self.get(k) for k in keys]
 
     def exists(self, key: Key) -> bool:
         return self._attach(key) is not None
 
+    def _release(self, seg: shared_memory.SharedMemory, *, unlink: bool) -> None:
+        """Unlink the name first (new attaches fail immediately), then try
+        to unmap.  With zero-copy views still alive the unmap raises
+        BufferError -- the segment is parked on the zombie list and retried
+        later; the mapping itself is reclaimed when the last view drops."""
+        if unlink:
+            try:
+                seg.unlink()
+            except FileNotFoundError:
+                pass
+        try:
+            seg.close()
+        except BufferError:
+            with self._lock:
+                self._zombies.append(seg)
+
+    def _reap_zombies(self, *, final: bool = False) -> None:
+        """Retry unmapping evicted-while-viewed segments.  On the final
+        pass, segments still pinned by live views get their ``close``
+        neutered: unmapping is left to view refcounting, so GC never
+        trips over an un-closeable segment."""
+        with self._lock:
+            zombies, self._zombies = self._zombies, []
+        survivors = []
+        for seg in zombies:
+            try:
+                seg.close()
+            except BufferError:
+                if final:
+                    seg.close = lambda: None  # type: ignore[method-assign]
+                else:
+                    survivors.append(seg)
+        if survivors:
+            with self._lock:
+                self._zombies.extend(survivors)
+
     def evict(self, key: Key) -> None:
+        self._reap_zombies()
         seg = self._attach(key)
         if seg is None:
             return
         with self._lock:
             self._attached.pop(key.object_id, None)
-        try:
-            seg.close()
-            seg.unlink()
-        except FileNotFoundError:
-            pass
+        self._release(seg, unlink=True)
         self.stats.record_evict()
 
     def close(self) -> None:
@@ -144,9 +205,10 @@ class SharedMemoryConnector:
             self._attached.clear()
         for seg in segs:
             try:
-                seg.close()
+                self._release(seg, unlink=False)
             except Exception:
                 pass
+        self._reap_zombies(final=True)
 
     def clear(self) -> None:
         """Unlink every segment this connector is attached to.
@@ -159,10 +221,10 @@ class SharedMemoryConnector:
             self._attached.clear()
         for seg in segs:
             try:
-                seg.close()
-                seg.unlink()
+                self._release(seg, unlink=True)
             except Exception:
                 pass
+        self._reap_zombies(final=True)
 
     def config(self) -> dict[str, Any]:
         return {

@@ -35,10 +35,12 @@ Header schema::
 
 from __future__ import annotations
 
+import bisect
 import io
 import pickle
+import threading
 from dataclasses import dataclass, field
-from typing import Any, Sequence
+from typing import Any, Iterable, Sequence
 
 import msgpack
 import numpy as np
@@ -47,6 +49,215 @@ MAGIC = b"PSX1"
 # Leaves smaller than this are embedded in the header rather than given their
 # own frame; framing overhead would dominate otherwise.
 _SMALL_LEAF_BYTES = 512
+
+
+class CopyCounter:
+    """Copy accounting for the data plane: ``bytes_moved`` vs ``bytes_copied``.
+
+    ``bytes_moved`` counts payload bytes *delivered* to a consumer through
+    the data plane (a dependency fetch, a gather, a store read).
+    ``bytes_copied`` counts bytes that were memcpy'd along the way --
+    chunk assembly on the receiving side of a peer transfer, a
+    frame join, a store read that materialized fresh ``bytes``.
+
+    The producer's single store/segment write is a *move*, not a copy, so
+    a perfectly zero-copy path (shm publish -> attach-by-ref -> deserialize
+    over the mapped view) scores ``copies_per_byte() == 0.0`` and the
+    chunked peer path (one assembly on the receiver) scores exactly 1.0.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.bytes_copied = 0
+        self.copy_ops = 0
+        self.bytes_moved = 0
+        self.move_ops = 0
+
+    def add_copied(self, n: int) -> None:
+        with self._lock:
+            self.bytes_copied += n
+            self.copy_ops += 1
+
+    def add_moved(self, n: int) -> None:
+        with self._lock:
+            self.bytes_moved += n
+            self.move_ops += 1
+
+    def copies_per_byte(self) -> float:
+        with self._lock:
+            if self.bytes_moved == 0:
+                return 0.0
+            return self.bytes_copied / self.bytes_moved
+
+    def snapshot(self) -> dict[str, float]:
+        with self._lock:
+            moved = self.bytes_moved
+            out = {
+                "bytes_copied": self.bytes_copied,
+                "copy_ops": self.copy_ops,
+                "bytes_moved": moved,
+                "move_ops": self.move_ops,
+            }
+        out["copies_per_byte"] = (out["bytes_copied"] / moved) if moved else 0.0
+        return out
+
+
+#: Process-global fallback counter: records copies on paths that have no
+#: caller-supplied counter (e.g. a spanning-range assembly inside
+#: ``deserialize``).  Workers and caches carry their own counters.
+GLOBAL_COPIES = CopyCounter()
+
+
+class _Scattered:
+    """A logically contiguous byte string stored as N segments.
+
+    The one home of the cumulative-offset / bisect machinery that both
+    :class:`FrameBundle` (retention) and :func:`deserialize` (decode)
+    read through.  ``read`` returns a zero-copy view when the range lies
+    inside one segment and assembles a copy (counted on the global
+    counter) when it spans; ``read_bounded`` never assembles -- it clips
+    at the containing segment's edge, which is the chunked-transfer
+    serving primitive.
+
+    Offset arithmetic is plain Python ints, so segments (and ranges into
+    them) past 2 GiB are safe.
+    """
+
+    __slots__ = ("_segments", "_offsets", "nbytes")
+
+    def __init__(self, segments: Sequence[memoryview]):
+        self._segments = list(segments)
+        offsets = [0]
+        for s in self._segments:
+            offsets.append(offsets[-1] + s.nbytes)
+        self._offsets = offsets
+        self.nbytes = offsets[-1]
+
+    def _locate(self, offset: int) -> tuple[int, int]:
+        i = bisect.bisect_right(self._offsets, offset) - 1
+        return i, offset - self._offsets[i]
+
+    def read_bounded(self, offset: int, size: int) -> memoryview:
+        """Zero-copy view of up to ``size`` bytes at ``offset``, clipped
+        at the containing segment's edge -- callers advance by the
+        returned length, so chunked readers never force a join."""
+        if offset >= self.nbytes or size <= 0:
+            return memoryview(b"")
+        i, local = self._locate(offset)
+        return self._segments[i][local : local + size]
+
+    def read(self, offset: int, size: int) -> memoryview:
+        size = min(size, self.nbytes - offset)
+        if size <= 0:
+            return memoryview(b"")
+        i, local = self._locate(offset)
+        seg = self._segments[i]
+        if local + size <= seg.nbytes:
+            return seg[local : local + size]
+        out = bytearray(size)
+        view = memoryview(out)
+        pos = 0
+        while pos < size:
+            seg = self._segments[i]
+            take = min(size - pos, seg.nbytes - local)
+            view[pos : pos + take] = seg[local : local + take]
+            pos += take
+            local = 0
+            i += 1
+        GLOBAL_COPIES.add_copied(size)
+        return view.toreadonly()
+
+
+class FrameBundle:
+    """One logical blob held as a list of byte frames -- the data plane's
+    zero-copy unit of retention.
+
+    Producers retain a result's serialized frames exactly as
+    :func:`serialize` emitted them (views over the original arrays), peer
+    serving slices ``read_range`` views bounded at frame edges, and
+    consumers hand the whole bundle to :func:`deserialize` -- nothing along
+    that path joins the frames into one contiguous buffer.  ``to_bytes``
+    is the explicit escape hatch (one copy, counted).
+
+    Frames are stored as read-only 1-D byte views; compares equal to any
+    buffer with the same byte content, which keeps ``bytes``-era call
+    sites and tests working unchanged.
+    """
+
+    __slots__ = ("frames", "nbytes", "_sc")
+
+    def __init__(self, frames: Iterable[bytes | bytearray | memoryview]):
+        self.frames: list[memoryview] = []
+        for f in frames:
+            mv = f if isinstance(f, memoryview) else memoryview(f)
+            if mv.ndim != 1 or mv.format != "B":
+                mv = mv.cast("B")
+            if mv.nbytes == 0:
+                continue
+            self.frames.append(mv.toreadonly())
+        self._sc = _Scattered(self.frames)
+        self.nbytes = self._sc.nbytes
+
+    @classmethod
+    def of(cls, payload: Any) -> "FrameBundle":
+        """Wrap any payload shape (bytes-like, SerializedObject, bundle)
+        without copying."""
+        if isinstance(payload, FrameBundle):
+            return payload
+        if isinstance(payload, SerializedObject):
+            return cls(payload.frames())
+        return cls([payload])
+
+    def read_range(self, offset: int, size: int) -> memoryview:
+        """Zero-copy view of up to ``size`` bytes at ``offset``, bounded at
+        the containing frame's edge -- callers advance by the returned
+        length, so chunked readers never force a cross-frame join."""
+        return self._sc.read_bounded(offset, size)
+
+    def to_bytes(self, copies: CopyCounter | None = None) -> bytes:
+        """Materialize one contiguous ``bytes`` copy (counted)."""
+        (copies or GLOBAL_COPIES).add_copied(self.nbytes)
+        if len(self.frames) == 1:
+            return bytes(self.frames[0])
+        out = bytearray(self.nbytes)
+        view = memoryview(out)
+        pos = 0
+        for f in self.frames:
+            view[pos : pos + f.nbytes] = f
+            pos += f.nbytes
+        return bytes(out)
+
+    def __bytes__(self) -> bytes:
+        return self.to_bytes()
+
+    def __len__(self) -> int:
+        return self.nbytes
+
+    def __eq__(self, other: Any) -> bool:
+        if isinstance(other, FrameBundle):
+            if other.nbytes != self.nbytes:
+                return False
+            return all(
+                bytes(self._sc.read(o, 1 << 20)) == bytes(other._sc.read(o, 1 << 20))
+                for o in range(0, self.nbytes or 1, 1 << 20)
+            )
+        try:
+            mv = memoryview(other).cast("B")
+        except TypeError:
+            return NotImplemented
+        if mv.nbytes != self.nbytes:
+            return False
+        pos = 0
+        for f in self.frames:
+            if f != mv[pos : pos + f.nbytes]:
+                return False
+            pos += f.nbytes
+        return True
+
+    __hash__ = None  # mutable-buffer container; content-compared, unhashable
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"FrameBundle(frames={len(self.frames)}, nbytes={self.nbytes})"
 
 
 @dataclass
@@ -276,15 +487,16 @@ def serialize(obj: Any) -> SerializedObject:
     return _pack({"kind": "pickle", "n": 1 + len(oob)}, buffers)
 
 
-class _LazySplit(Sequence):
-    """Lazily slice concatenated buffers out of one contiguous body view.
+class _ScatteredSplit(Sequence):
+    """Lazily slice the serialized body's buffers out of a scattered blob.
 
-    Slicing a memoryview never copies, so decode stays zero-copy.
+    On aligned inputs (a retained frame list) every buffer is exactly one
+    segment, so decode stays zero-copy end to end.
     """
 
-    def __init__(self, body: memoryview, sizes: list[int]):
-        self._body = body
-        offsets = [0]
+    def __init__(self, data: _Scattered, body_offset: int, sizes: list[int]):
+        self._data = data
+        offsets = [body_offset]
         for s in sizes:
             offsets.append(offsets[-1] + s)
         self._offsets = offsets
@@ -293,21 +505,42 @@ class _LazySplit(Sequence):
         return len(self._offsets) - 1
 
     def __getitem__(self, i: int) -> memoryview:  # type: ignore[override]
-        return self._body[self._offsets[i] : self._offsets[i + 1]]
+        return self._data.read(
+            self._offsets[i], self._offsets[i + 1] - self._offsets[i]
+        )
 
 
-def deserialize(data: bytes | bytearray | memoryview) -> Any:
-    """Inverse of :func:`serialize` from a contiguous blob (zero-copy reads).
+Frames = Sequence["bytes | bytearray | memoryview"]
 
-    Array leaves come back as read-only ndarray views over ``data``.
+
+def _as_segments(data: "bytes | bytearray | memoryview | FrameBundle | Frames") -> list[memoryview]:
+    if isinstance(data, FrameBundle):
+        return data.frames
+    if isinstance(data, (bytes, bytearray, memoryview)):
+        mv = memoryview(data)
+        if mv.ndim != 1 or mv.format != "B":
+            mv = mv.cast("B")
+        return [mv]
+    # An arbitrary frame sequence (e.g. SerializedObject.frames() output).
+    return FrameBundle(data).frames
+
+
+def deserialize(data: "bytes | bytearray | memoryview | FrameBundle | Frames") -> Any:
+    """Inverse of :func:`serialize`; zero-copy reads.
+
+    Accepts one contiguous buffer *or* any sequence of frames (a
+    :class:`FrameBundle`, ``SerializedObject.frames()`` output, a
+    connector's retained frame list) -- consumers never join frames to
+    decode.  Array leaves come back as read-only ndarray views over the
+    received/mapped segments; only a leaf that straddles a segment
+    boundary (misaligned chunking) pays a copy, which is counted.
     """
-    view = memoryview(data).cast("B")
-    if bytes(view[:4]) != MAGIC:
+    sc = _Scattered(_as_segments(data))
+    if bytes(sc.read(0, 4)) != MAGIC:
         raise ValueError("not a PSX1 serialized object")
-    hlen = int.from_bytes(view[4:8], "little")
-    header = msgpack.unpackb(bytes(view[8 : 8 + hlen]))
-    body = view[8 + hlen :]
-    buffers = _LazySplit(body, header.get("sizes", []))
+    hlen = int.from_bytes(sc.read(4, 4), "little")
+    header = msgpack.unpackb(bytes(sc.read(8, hlen)))
+    buffers = _ScatteredSplit(sc, 8 + hlen, header.get("sizes", []))
     kind = header["kind"]
     if kind == "raw":
         return bytes(buffers[0]) if len(buffers) else b""

@@ -234,7 +234,10 @@ class Client:
             self._resolve(futures, p["result"])
             return
         # Large result: fetch it from the data plane by reference -- the
-        # scheduler only relayed (ref, nbytes).
+        # scheduler only relayed (ref, nbytes).  The fetch is frame-native
+        # (a FrameBundle view of the store's bytes: retained frames, an
+        # mmap'd file, an attached shm segment) and ``deserialize``
+        # reconstructs arrays directly over it -- gather never joins.
         ref = p.get("ref")
         if ref is None or self._results is None:
             for f in futures:
@@ -253,7 +256,7 @@ class Client:
             return
         self._resolve(futures, blob)
 
-    def _resolve(self, futures: list[RuntimeFuture], blob: bytes) -> None:
+    def _resolve(self, futures: list[RuntimeFuture], blob: Any) -> None:
         result = deserialize(blob)
         for f in futures:
             if not f.done():
@@ -423,11 +426,13 @@ class LocalCluster:
 
     def worker_stats(self) -> dict[str, dict[str, Any]]:
         """Per-worker memory/telemetry view, one row per live worker:
-        ``{running, managed_bytes, spilled_bytes, state, ...}``.
+        ``{running, managed_bytes, spilled_bytes, state, bytes_moved,
+        bytes_copied, copies_per_byte, zero_copy_hits, ...}``.
 
         ``running`` is the scheduler's dispatched-not-done count; the
-        memory fields read the worker's live accounting directly (not the
-        last heartbeat), so tests and dashboards see current state.
+        memory and copy-accounting fields read the worker's live
+        accounting directly (not the last heartbeat), so tests and
+        dashboards see current state.
         """
         out: dict[str, dict[str, Any]] = {}
         for worker_id, w in self.workers.items():

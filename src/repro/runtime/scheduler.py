@@ -149,6 +149,11 @@ class WorkerState:
     spilled_bytes: int = 0
     memory_limit: int | None = None
     memory_state: str = "running"  # running | paused
+    #: copy-accounting telemetry from the last heartbeat: payload bytes the
+    #: worker pulled through the data plane vs bytes memcpy'd doing so
+    #: (the zero-copy regression signal, surfaced in ``worker_stats()``).
+    bytes_moved: int = 0
+    bytes_copied: int = 0
     #: dependency bytes dispatched to (but not yet resolved by) this worker
     #: -- the backpressure quantity; maintained by _assign/_unassign so every
     #: removal path (done, failed, stolen, released, worker lost) decrements.
@@ -328,6 +333,8 @@ class Scheduler:
                 ws.spilled_bytes = p.get("spilled_bytes", ws.spilled_bytes)
                 ws.memory_limit = p.get("memory_limit", ws.memory_limit)
                 ws.memory_state = p.get("state", ws.memory_state) or "running"
+                ws.bytes_moved = p.get("bytes_moved", ws.bytes_moved)
+                ws.bytes_copied = p.get("bytes_copied", ws.bytes_copied)
                 if "spilled_keys" in p:
                     ws.spilled = set(p["spilled_keys"] or [])
         elif tag == M.TASK_DONE:

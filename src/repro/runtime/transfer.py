@@ -32,6 +32,17 @@ reads never perturb the producer's LRU order), and the consumer side
 lands oversized blobs directly in its own disk tier -- so a transfer never
 holds two full copies of a blob in memory at once.
 
+The whole path is **frame-native** (zero-copy end to end): caches retain
+results as :class:`~repro.core.serialize.FrameBundle` frame lists exactly
+as ``serialize`` emitted them, peer serving slices ``memoryview`` ranges
+bounded at frame edges (never joining the payload), spilled blobs are
+``mmap``-served (restores and range reads touch only the pages read), and
+consumers hand the received bundle straight to ``deserialize``.  A
+result's bytes are copied at most once on the chunked peer path (the
+receiver-side assembly) and zero times on the same-host shm fast path --
+and every copy is accounted (:class:`~repro.core.serialize.CopyCounter`),
+so the zero-copy claim is measured, not asserted.
+
 Both sides of every peer fetch are byte-counted, so benchmarks can
 attribute traffic the way the paper's Figs 3-4 do: scheduler bytes vs
 peer bytes vs mediated-store bytes.
@@ -48,7 +59,15 @@ import uuid
 from collections import OrderedDict
 from typing import Any, Iterable, Iterator
 
-from repro.core.connectors.base import Key, has_peer_capability
+from repro.core.connectors.base import (
+    Key,
+    Payload,
+    has_peer_capability,
+    has_zero_copy_capability,
+    mmap_readonly_view,
+    payload_nbytes,
+)
+from repro.core.serialize import CopyCounter, FrameBundle
 from repro.core.store import get_or_create_store, unregister_store
 from repro.runtime.comm import ByteCounter
 
@@ -88,40 +107,45 @@ class BlobCache:
 
     def __init__(self, max_bytes: int = 256 * 1024 * 1024):
         self.max_bytes = max_bytes
-        self._data: OrderedDict[str, bytes] = OrderedDict()
+        self._data: OrderedDict[str, FrameBundle] = OrderedDict()
         self._nbytes = 0
         self._lock = threading.RLock()
         self._dropped = 0
         self._dropped_bytes = 0
+        #: Copy accounting for bytes that land in / are served from this
+        #: cache; the owning worker reports it in ``worker_stats()``.
+        self.copies = CopyCounter()
 
     # -- read side -----------------------------------------------------------
 
-    def get(self, key: str) -> bytes | None:
+    def get(self, key: str) -> FrameBundle | None:
         with self._lock:
-            blob = self._data.get(key)
-            if blob is not None:
+            bundle = self._data.get(key)
+            if bundle is not None:
                 self._data.move_to_end(key)
-            return blob
+            return bundle
 
     def nbytes_of(self, key: str) -> int | None:
         """Size of ``key``'s blob in any tier, or ``None`` if absent."""
         with self._lock:
-            blob = self._data.get(key)
-            return None if blob is None else len(blob)
+            bundle = self._data.get(key)
+            return None if bundle is None else bundle.nbytes
 
-    def read_range(self, key: str, offset: int, size: int) -> bytes | None:
-        """Read a slice of ``key``'s blob without touching LRU order.
+    def read_range(self, key: str, offset: int, size: int) -> memoryview | None:
+        """Zero-copy view of a slice of ``key``'s blob, without touching
+        LRU order.
 
         This is the peer-transfer read path: a remote fetch must not
         refresh the producer's recency (the producer may never use the
-        blob again), and must never force a full-blob copy on the serving
-        side.
+        blob again), and must never force a copy on the serving side --
+        the returned view is bounded at the containing frame's edge (so it
+        may be shorter than ``size``; callers advance by its length).
         """
         with self._lock:
-            blob = self._data.get(key)
-            if blob is None:
+            bundle = self._data.get(key)
+            if bundle is None:
                 return None
-            return blob[offset : offset + size]
+            return bundle.read_range(offset, size)
 
     def is_hot(self, key: str) -> bool:
         """Whether ``key`` is resident in the memory tier."""
@@ -130,43 +154,45 @@ class BlobCache:
 
     # -- write side ----------------------------------------------------------
 
-    def put(self, key: str, blob: bytes) -> bool:
-        """Retain ``blob``; returns False when the bytes were discarded."""
-        if len(blob) > self.max_bytes:
-            return self._admit_oversize(key, blob)
+    def put(self, key: str, blob: Payload) -> bool:
+        """Retain ``blob``'s frames (no join, no copy); returns False when
+        the bytes were discarded."""
+        bundle = FrameBundle.of(blob)
+        if bundle.nbytes > self.max_bytes:
+            return self._admit_oversize(key, bundle)
         with self._lock:
             old = self._data.pop(key, None)
             if old is not None:
-                self._nbytes -= len(old)
-            self._data[key] = blob
-            self._nbytes += len(blob)
+                self._nbytes -= old.nbytes
+            self._data[key] = bundle
+            self._nbytes += bundle.nbytes
             while self._nbytes > self.max_bytes and self._data:
                 self._evict_one()
             return True
 
-    def _admit_oversize(self, key: str, blob: bytes) -> bool:
+    def _admit_oversize(self, key: str, bundle: FrameBundle) -> bool:
         """A blob larger than the whole memory budget.  The memory-only
         cache cannot hold it: count the drop (the shared store is its only
         home) and tell the caller.  The spill tier overrides this to stream
         the blob to disk instead."""
         with self._lock:
             self._dropped += 1
-            self._dropped_bytes += len(blob)
+            self._dropped_bytes += bundle.nbytes
         return False
 
     def _evict_one(self) -> None:
         """Discard the LRU entry (caller holds the lock).  Overridden by
         the spill tier to demote instead of drop."""
         _, evicted = self._data.popitem(last=False)
-        self._nbytes -= len(evicted)
+        self._nbytes -= evicted.nbytes
         self._dropped += 1
-        self._dropped_bytes += len(evicted)
+        self._dropped_bytes += evicted.nbytes
 
     def pop(self, key: str) -> None:
         with self._lock:
-            blob = self._data.pop(key, None)
-            if blob is not None:
-                self._nbytes -= len(blob)
+            bundle = self._data.pop(key, None)
+            if bundle is not None:
+                self._nbytes -= bundle.nbytes
 
     def clear(self) -> None:
         with self._lock:
@@ -209,6 +235,7 @@ class BlobCache:
                 "dropped_bytes": self._dropped_bytes,
                 "spill_count": 0,
                 "restore_count": 0,
+                "mmap_restores": 0,
             }
 
 
@@ -225,9 +252,17 @@ class SpillCache(BlobCache):
     * ``shed(target)`` demotes until the memory tier fits ``target`` --
       the pause-state pressure-relief hook.
 
+    Disk-tier reads are **mmap-served**: a restore or range read attaches
+    the spill file once and hands out views over the mapping, so neither
+    path ever loads the full file (pages fault in only as they are read)
+    and a restored blob is byte-for-byte the mapped file.  The mapping
+    stays valid after the file is unlinked (POSIX), so promotion frees the
+    disk space while the hot-tier bundle keeps serving.
+
     All tier movements are counted (``spill_count`` / ``restore_count`` /
-    ``spilled_bytes``) so heartbeats and ``worker_stats()`` can report
-    real memory state.  ``dropped`` stays 0 unless disk writes fail.
+    ``mmap_restores`` / ``spilled_bytes``) so heartbeats and
+    ``worker_stats()`` can report real memory state.  ``dropped`` stays 0
+    unless disk writes fail.
     """
 
     def __init__(self, max_bytes: int = 256 * 1024 * 1024, spill_dir: str | None = None):
@@ -236,9 +271,11 @@ class SpillCache(BlobCache):
         self.spill_dir = spill_dir or tempfile.mkdtemp(prefix="repro-spill-")
         os.makedirs(self.spill_dir, exist_ok=True)
         self._disk: dict[str, int] = {}  # key -> nbytes on disk
+        self._mmaps: dict[str, memoryview] = {}  # key -> attached spill mapping
         self._spilled_bytes = 0
         self._spill_count = 0
         self._restore_count = 0
+        self._mmap_restores = 0
         self._spilled_bytes_total = 0
 
     def _path(self, key: str) -> str:
@@ -249,25 +286,30 @@ class SpillCache(BlobCache):
     #
     # Demotion writes happen under the lock: moving them out would open a
     # window where a blob is in neither tier and a dependent would falsely
-    # conclude the bytes are gone.  Reads (get/read_range) drop the lock
-    # around file I/O instead -- see those methods.
+    # conclude the bytes are gone.  Disk *reads* are a cheap mmap attach,
+    # so they stay under the lock too; the actual page I/O happens when the
+    # consumer reads the returned views, outside any cache lock.
 
-    def _demote(self, key: str, blob: bytes) -> bool:
+    def _demote(self, key: str, bundle: FrameBundle) -> bool:
         try:
             with open(self._path(key), "wb") as f:
-                f.write(blob)
+                # writev-style: frames stream out without a join.
+                for frame in bundle.frames:
+                    f.write(frame)
         except OSError:
             self._dropped += 1
-            self._dropped_bytes += len(blob)
+            self._dropped_bytes += bundle.nbytes
             return False
-        self._disk[key] = len(blob)
-        self._spilled_bytes += len(blob)
+        self._disk[key] = bundle.nbytes
+        self._mmaps.pop(key, None)  # a fresh write invalidates old mappings
+        self._spilled_bytes += bundle.nbytes
         self._spill_count += 1
-        self._spilled_bytes_total += len(blob)
+        self._spilled_bytes_total += bundle.nbytes
         return True
 
     def _drop_disk(self, key: str) -> None:
         n = self._disk.pop(key, None)
+        self._mmaps.pop(key, None)  # live views keep the mapping alive
         if n is not None:
             self._spilled_bytes -= n
             try:
@@ -275,90 +317,82 @@ class SpillCache(BlobCache):
             except OSError:
                 pass
 
+    def _attach_disk(self, key: str) -> memoryview | None:
+        """mmap the spill file (cached per key); caller holds the lock."""
+        view = self._mmaps.get(key)
+        if view is not None:
+            return view
+        view = mmap_readonly_view(self._path(key))
+        if view is None:
+            return None
+        self._mmaps[key] = view
+        return view
+
     def _evict_one(self) -> None:
         key, evicted = self._data.popitem(last=False)
-        self._nbytes -= len(evicted)
+        self._nbytes -= evicted.nbytes
         self._drop_disk(key)  # a stale disk copy would double-count
         self._demote(key, evicted)
 
-    def _admit_oversize(self, key: str, blob: bytes) -> bool:
+    def _admit_oversize(self, key: str, bundle: FrameBundle) -> bool:
         with self._lock:
             self._drop_disk(key)
-            return self._demote(key, blob)
+            return self._demote(key, bundle)
 
     # -- read side -------------------------------------------------------------
 
-    def get(self, key: str) -> bytes | None:
-        # Disk reads happen OUTSIDE the lock (peer range-reads and local
-        # hits must not stall behind a restore); the re-locked epilogue
-        # re-checks tier membership, so racing restores, pops, and
-        # promotions stay consistent.
+    def get(self, key: str) -> FrameBundle | None:
         with self._lock:
-            blob = self._data.get(key)
-            if blob is not None:
+            bundle = self._data.get(key)
+            if bundle is not None:
                 self._data.move_to_end(key)
-                return blob
+                return bundle
             n = self._disk.get(key)
             if n is None:
                 return None
-            path = self._path(key)
-        try:
-            with open(path, "rb") as f:
-                blob = f.read()
-        except OSError:
-            # The file vanished mid-read: a racing get() promoted it (serve
-            # the hot copy) or pop() released it (really gone).
-            with self._lock:
-                hot = self._data.get(key)
-                if hot is not None:
-                    self._data.move_to_end(key)
-                    return hot
+            fresh = key not in self._mmaps
+            view = self._attach_disk(key)
+            if view is None:  # disk file lost (I/O error): really gone
                 self._drop_disk(key)
-            return None
-        with self._lock:
-            self._restore_count += 1
-            if key in self._data:  # racing restore already promoted it
-                self._data.move_to_end(key)
-                return self._data[key]
-            if key not in self._disk:  # popped while we read: just serve
-                return blob
+                return None
+            if fresh:
+                # A restore is a tier movement: count the attach, not every
+                # re-read through the cached mapping (an oversized blob is
+                # served disk-resident many times but restored once).
+                self._restore_count += 1
+                self._mmap_restores += 1
+            bundle = FrameBundle([view])
             if n <= self.max_bytes:
                 # Promote back to the hot tier (demoting others as needed).
+                # The bundle keeps the mapping alive, so dropping the disk
+                # entry (and its file) cannot tear concurrent readers.
                 self._drop_disk(key)
-                self._data[key] = blob
+                self._data[key] = bundle
                 self._nbytes += n
                 while self._nbytes > self.max_bytes and len(self._data) > 1:
                     self._evict_one()
-        return blob
+            return bundle
 
     def nbytes_of(self, key: str) -> int | None:
         with self._lock:
-            blob = self._data.get(key)
-            if blob is not None:
-                return len(blob)
+            bundle = self._data.get(key)
+            if bundle is not None:
+                return bundle.nbytes
             return self._disk.get(key)
 
-    def read_range(self, key: str, offset: int, size: int) -> bytes | None:
+    def read_range(self, key: str, offset: int, size: int) -> memoryview | None:
         with self._lock:
-            blob = self._data.get(key)
-            if blob is not None:
-                return blob[offset : offset + size]
+            bundle = self._data.get(key)
+            if bundle is not None:
+                return bundle.read_range(offset, size)
             if key not in self._disk:
                 return None
-            path = self._path(key)
-        try:
-            with open(path, "rb") as f:
-                f.seek(offset)
-                return f.read(size)
-        except OSError:
-            # Promoted or popped mid-transfer: retry the memory tier once;
-            # a truly gone blob aborts the transfer (caller falls back).
-            with self._lock:
-                blob = self._data.get(key)
-                if blob is not None:
-                    return blob[offset : offset + size]
+            view = self._attach_disk(key)
+            if view is None:
                 self._drop_disk(key)
-            return None
+                return None
+            # mmap-served range: a view over the mapping, no file read.
+            return view[offset : offset + size]
 
     # -- streaming write (chunked peer transfers) ------------------------------
 
@@ -380,7 +414,7 @@ class SpillCache(BlobCache):
             buf = bytearray()
             for c in chunks:
                 buf += c
-            return self.put(key, bytes(buf))
+            return self.put(key, FrameBundle([memoryview(buf)]))
         path = self._path(key)
         tmp = f"{path}.part-{uuid.uuid4().hex[:8]}"
         try:
@@ -429,9 +463,9 @@ class SpillCache(BlobCache):
 
     def pop(self, key: str) -> None:
         with self._lock:
-            blob = self._data.pop(key, None)
-            if blob is not None:
-                self._nbytes -= len(blob)
+            bundle = self._data.pop(key, None)
+            if bundle is not None:
+                self._nbytes -= bundle.nbytes
             self._drop_disk(key)
 
     def clear(self) -> None:
@@ -475,6 +509,7 @@ class SpillCache(BlobCache):
                 "dropped_bytes": self._dropped_bytes,
                 "spill_count": self._spill_count,
                 "restore_count": self._restore_count,
+                "mmap_restores": self._mmap_restores,
             }
 
 
@@ -504,6 +539,9 @@ class PeerTransfer:
         self._peers: dict[str, BlobCache] = {}
         self._lock = threading.Lock()
         self.counter = ByteCounter()
+        #: Copy accounting for sink-less fetches (tests, gather helpers);
+        #: fetches with a sink charge the sink cache's counter instead.
+        self.copies = CopyCounter()
 
     def register(self, worker_id: str, cache: BlobCache) -> None:
         with self._lock:
@@ -517,27 +555,42 @@ class PeerTransfer:
         with self._lock:
             return list(self._peers)
 
-    def _chunks(self, cache: BlobCache, key: str, nbytes: int) -> Iterator[bytes]:
+    def _chunks(
+        self, cache: BlobCache, key: str, nbytes: int
+    ) -> Iterator[memoryview]:
+        """Serve ``key`` as a stream of zero-copy views from the holder's
+        cache.  Views are bounded at frame boundaries (so chunks may be
+        shorter than ``chunk_size``); nothing on the serving side joins or
+        copies the payload."""
         offset = 0
         while offset < nbytes:
             chunk = cache.read_range(key, offset, self.chunk_size)
-            if not chunk:
+            if chunk is None or len(chunk) == 0:
                 # Evicted from every tier mid-transfer (or the worker died
                 # and its cache was cleared): abort, caller falls back.
+                raise _LostDuringTransfer(key)
+            if offset + len(chunk) > nbytes:
+                # The source blob was replaced with a *larger* one between
+                # chunks (impure recompute): any landing would be torn
+                # old/new bytes.  Abort like any other mid-transfer loss.
                 raise _LostDuringTransfer(key)
             self.counter.add_sent(len(chunk))
             self.counter.add_recv(len(chunk))
             offset += len(chunk)
             yield chunk
 
-    def fetch(self, worker_id: str, key: str, *, sink: BlobCache | None = None) -> bytes | None:
+    def fetch(
+        self, worker_id: str, key: str, *, sink: BlobCache | None = None
+    ) -> FrameBundle | None:
         """Fetch ``key``'s serialized bytes directly from a peer's cache.
 
         With a ``sink`` (the fetching worker's own cache) the transfer
         lands tier-appropriately -- oversized blobs stream chunk-by-chunk
-        into the sink's disk tier and are read back from there; everything
-        else assembles into exactly one resident copy and is retained via
-        ``sink.put``.
+        into the sink's disk tier and are mmap-read back from there;
+        everything else assembles into exactly **one** resident copy
+        (pre-sized, counted on the sink's :class:`CopyCounter`) and is
+        retained via ``sink.put``.  That assembly is the only copy on the
+        whole chunked path -- the serving side yields views.
         """
         with self._lock:
             cache = self._peers.get(worker_id)
@@ -546,8 +599,9 @@ class PeerTransfer:
         nbytes = cache.nbytes_of(key)
         if nbytes is None:
             return None
+        copies = getattr(sink, "copies", None) or self.copies
         if nbytes == 0:
-            return b""
+            return FrameBundle([])
         try:
             if (
                 sink is not None
@@ -558,16 +612,29 @@ class PeerTransfer:
                 # to its disk tier, at most one chunk resident at a time.
                 if not sink.put_stream(key, nbytes, self._chunks(cache, key, nbytes)):
                     return None
+                copies.add_moved(nbytes)
+                copies.add_copied(nbytes)  # the disk landing
                 return sink.get(key)
-            buf = bytearray()
+            buf = memoryview(bytearray(nbytes))
+            pos = 0
             for chunk in self._chunks(cache, key, nbytes):
-                buf += chunk
-            blob = bytes(buf)
+                if pos + len(chunk) > nbytes:
+                    # The source blob was replaced with a larger one
+                    # mid-transfer (impure recompute): the assembly would
+                    # be torn.  Abort like any other mid-transfer loss.
+                    raise _LostDuringTransfer(key)
+                buf[pos : pos + len(chunk)] = chunk
+                pos += len(chunk)
+            if pos != nbytes:
+                raise _LostDuringTransfer(key)
         except _LostDuringTransfer:
             return None
+        copies.add_moved(nbytes)
+        copies.add_copied(nbytes)  # the receiver-side assembly
+        bundle = FrameBundle([buf])
         if sink is not None:
-            sink.put(key, blob)
-        return blob
+            sink.put(key, bundle)
+        return bundle
 
     def snapshot(self) -> dict[str, int]:
         snap = self.counter.snapshot()
@@ -611,20 +678,52 @@ class ResultStore:
 
     # -- publish / fetch -----------------------------------------------------
 
-    def publish(self, task_key: str, blob: bytes) -> str:
-        """Store a serialized result; returns the ref dependents fetch by."""
+    @property
+    def zero_copy(self) -> bool:
+        """Whether published bytes are same-host attachable with zero
+        copies (shm connector) -- enables the data plane's fast path:
+        dependents fetch by ref *before* trying the chunked peer channel."""
+        return has_zero_copy_capability(self.connector)
+
+    def publish(self, task_key: str, blob: Payload) -> str:
+        """Store a serialized result; returns the ref dependents fetch by.
+
+        Frame-native: a ``SerializedObject``/``FrameBundle`` payload passes
+        straight through to the connector's writev-style put -- the
+        publish never joins the frames.
+        """
         connector = self.connector
         if has_peer_capability(connector):
-            key = connector.put_at(Key(object_id=task_key, size=len(blob)), blob)
+            key = connector.put_at(
+                Key(object_id=task_key, size=payload_nbytes(blob)), blob
+            )
         else:
             key = connector.put(blob)
         return key.object_id
 
-    def fetch(self, ref: str, nbytes: int = -1) -> bytes | None:
-        blob = self.connector.get(Key(object_id=ref, size=nbytes))
-        if blob is None:
+    def fetch(
+        self, ref: str, nbytes: int = -1, copies: CopyCounter | None = None
+    ) -> FrameBundle | None:
+        """Fetch published bytes as a :class:`FrameBundle`.
+
+        Prefers the connector's zero-copy view (``get_view`` / a retained
+        frame list / an mmap-backed read) and never materializes a joined
+        blob itself; ``copies`` (when given) is charged for the delivery,
+        with a copy recorded only when the connector had to hand back
+        fresh ``bytes``.
+        """
+        connector = self.connector
+        get_view = getattr(connector, "get_view", None)
+        key = Key(object_id=ref, size=nbytes)
+        raw = get_view(key) if get_view is not None else connector.get(key)
+        if raw is None:
             return None
-        return bytes(blob) if not isinstance(blob, bytes) else blob
+        bundle = FrameBundle.of(raw)
+        if copies is not None:
+            copies.add_moved(bundle.nbytes)
+            if isinstance(raw, (bytes, bytearray)):
+                copies.add_copied(bundle.nbytes)
+        return bundle
 
     def exists(self, ref: str) -> bool:
         return self.connector.exists(Key(object_id=ref))

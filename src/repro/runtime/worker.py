@@ -53,7 +53,7 @@ import traceback
 from collections import deque
 from typing import Any
 
-from repro.core.serialize import deserialize, serialize
+from repro.core.serialize import FrameBundle, deserialize, serialize
 from repro.runtime import messages as M
 from repro.runtime.graph import substitute_refs
 from repro.runtime.scheduler import Mailbox, Scheduler
@@ -160,6 +160,7 @@ class ThreadWorker:
         self.nthreads = nthreads
         self.state = "running"  # running | paused
         self.refetch_count = 0  # dependency fetches that fell back to the store
+        self.zero_copy_hits = 0  # deps attached by ref on the shm fast path
         self._inflight_bytes = 0
         self._mem_lock = threading.Lock()
         self._stop = threading.Event()
@@ -240,6 +241,7 @@ class ThreadWorker:
     def stats(self) -> dict[str, Any]:
         """Per-worker memory telemetry (the ``worker_stats()`` row)."""
         cache_stats = self.cache.stats()
+        copy_stats = self.cache.copies.snapshot()
         with self._pcv:
             queued = len(self._pending)
         return {
@@ -250,9 +252,17 @@ class ThreadWorker:
             "memory_limit": self.memory_limit,
             "queued": queued,
             "refetch_count": self.refetch_count,
+            "zero_copy_hits": self.zero_copy_hits,
             "dropped": cache_stats["dropped"],
             "spill_count": cache_stats["spill_count"],
             "restore_count": cache_stats["restore_count"],
+            "mmap_restores": cache_stats["mmap_restores"],
+            # Copy accounting: payload bytes this worker pulled through the
+            # data plane vs bytes memcpy'd doing so (0 on the shm fast
+            # path, exactly 1x on a chunked peer fetch).
+            "bytes_moved": copy_stats["bytes_moved"],
+            "bytes_copied": copy_stats["bytes_copied"],
+            "copies_per_byte": copy_stats["copies_per_byte"],
         }
 
     def _note_inflight(self, delta: int) -> None:
@@ -289,6 +299,7 @@ class ThreadWorker:
         spilled = self.cache.spilled_keys()
         if len(spilled) > _HEARTBEAT_SPILLED_MAX:
             spilled = spilled[:_HEARTBEAT_SPILLED_MAX]
+        copy_stats = self.cache.copies.snapshot()
         self._send(
             M.msg(
                 M.HEARTBEAT,
@@ -298,6 +309,8 @@ class ThreadWorker:
                 memory_limit=self.memory_limit,
                 state=self.state,
                 spilled_keys=spilled,
+                bytes_moved=copy_stats["bytes_moved"],
+                bytes_copied=copy_stats["bytes_copied"],
             )
         )
 
@@ -441,28 +454,49 @@ class ThreadWorker:
         blob = self.cache.get(key)
         if blob is None:
             blob = self._fetch_remote(key, info or {})
+        # ``blob`` is a FrameBundle on every path; deserialize reconstructs
+        # arrays directly over the received/mapped views -- no join.
         return deserialize(blob)
 
-    def _fetch_remote(self, key: str, info: dict[str, Any]) -> bytes:
-        """Pull dependency bytes without touching the scheduler: direct
-        peer-to-peer first (chunked; the producer serves from whichever
-        tier holds the blob), shared store as the durable fallback."""
+    def _fetch_remote(self, key: str, info: dict[str, Any]) -> FrameBundle:
+        """Pull dependency bytes without touching the scheduler.
+
+        Same-host shm fast path first: when the cluster store's bytes are
+        attachable by ref with zero copies (shm connector), attach the
+        published segment and hand ``deserialize`` the mapped view --
+        skipping the chunked peer channel (and its assembly copy)
+        entirely.  Otherwise: direct peer-to-peer (chunked; the producer
+        serves frame-bounded views from whichever tier holds the blob),
+        then the shared store as the durable fallback.
+        """
         ref = info.get("ref")
         locations = info.get("locations") or []
+        nbytes = info.get("nbytes", -1)
         for attempt in range(_FETCH_RETRIES):
+            if self.results is not None and ref is not None and self.results.zero_copy:
+                bundle = self.results.fetch(ref, nbytes, copies=self.cache.copies)
+                if bundle is not None:
+                    self.zero_copy_hits += 1
+                    # Retain only what fits the hot tier: an attached view
+                    # larger than the budget would be demoted wholesale to
+                    # the spill disk (or counted dropped), and re-attaching
+                    # the segment by ref costs nothing anyway.
+                    if bundle.nbytes <= self.cache.max_bytes:
+                        self.cache.put(key, bundle)
+                    return bundle
             if self.transfers is not None:
                 for loc in locations:
                     if loc == self.worker_id:
                         continue
-                    blob = self.transfers.fetch(loc, key, sink=self.cache)
-                    if blob is not None:
-                        return blob
+                    bundle = self.transfers.fetch(loc, key, sink=self.cache)
+                    if bundle is not None:
+                        return bundle
             if self.results is not None and ref is not None:
-                blob = self.results.fetch(ref, info.get("nbytes", -1))
-                if blob is not None:
+                bundle = self.results.fetch(ref, nbytes, copies=self.cache.copies)
+                if bundle is not None:
                     self.refetch_count += 1
-                    self.cache.put(key, blob)
-                    return blob
+                    self.cache.put(key, bundle)
+                    return bundle
             if attempt + 1 < _FETCH_RETRIES:
                 time.sleep(_FETCH_RETRY_SLEEP)
         raise MissingDependencyError([key])
@@ -513,16 +547,25 @@ class ThreadWorker:
             args = substitute_refs(args_spec["args"], dep_results)
             kwargs = substitute_refs(args_spec["kwargs"], dep_results)
             result = fn(*list(args), **kwargs)
-            blob = serialize(result).to_bytes()
-            inflight += len(blob)
-            self._note_inflight(len(blob))
-            self.cache.put(key, blob)
-            if len(blob) <= self.scheduler.inline_result_max or self.results is None:
-                inline, ref = blob, None
+            # Frame-native result path: retain and publish the serialized
+            # frames exactly as ``serialize`` emitted them (views over the
+            # result's arrays) -- the bytes are never joined here.  They
+            # are copied at most once downstream: the consumer-side
+            # assembly of a chunked peer fetch, or zero times when a
+            # dependent attaches the shm-published segment by ref.
+            bundle = FrameBundle.of(serialize(result))
+            nbytes = bundle.nbytes
+            inflight += nbytes
+            self._note_inflight(nbytes)
+            self.cache.put(key, bundle)
+            if nbytes <= self.scheduler.inline_result_max or self.results is None:
+                # Tiny result: one inline blob rides the control plane (a
+                # sub-threshold join, not data-plane traffic).
+                inline, ref = bundle.to_bytes(), None
             else:
                 # Publish-then-report: by the time the scheduler dispatches
                 # any dependent, the bytes are already fetchable.
-                inline, ref = None, self.results.publish(key, blob)
+                inline, ref = None, self.results.publish(key, bundle)
             self._report(
                 M.TASK_DONE,
                 {
@@ -530,7 +573,7 @@ class ThreadWorker:
                     "worker": self.worker_id,
                     "result": inline,
                     "ref": ref,
-                    "nbytes": len(blob),
+                    "nbytes": nbytes,
                 },
             )
         except Exception as exc:  # noqa: BLE001 - report any task failure
