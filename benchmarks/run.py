@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows and writes JSON artifacts under
     PYTHONPATH=src python -m benchmarks.run fig3 fig5    # a subset
     BENCH_QUICK=1 ... python -m benchmarks.run           # CI-sized
     PYTHONPATH=src python -m benchmarks.run --smoke      # CI data-plane guard
+    PYTHONPATH=src python -m benchmarks.run --smoke-process  # process backend
 
 ``--smoke`` is the CI regression guard: it runs the Fig-3 overheads with
 tiny payloads, the zero-copy data-path row, the 512-task fan-out/fan-in
@@ -21,6 +22,12 @@ mmap-served), graph submission staying <= 2 scheduler msgs/task and
 over-budget workload with zero dropped blobs, spill bytes > 0, and fewer
 store refetches than the memory-only baseline.  Wired into
 ``scripts/ci.sh smoke``.
+
+``--smoke-process`` guards the process backend (``worker_kind="process"``
+over tcp): the 512-task fan-out/fan-in graph must hold <= 2 scheduler
+msgs/task across the wire, CPU-bound ``Session.map`` must hit the
+core-count-adaptive GIL-escape speedup floor, and the zero-copy data-path
+row must keep its invariants.  Wired into ``scripts/ci.sh smoke-process``.
 """
 
 from __future__ import annotations
@@ -41,6 +48,15 @@ def main() -> None:
         ok = scaling.smoke() and ok
         ok = scaling.memory_smoke() and ok
         print(f"# smoke {'PASS' if ok else 'FAIL'}", flush=True)
+        sys.exit(0 if ok else 1)
+
+    if "--smoke-process" in sys.argv:
+        from benchmarks import overheads, scaling
+
+        print("name,us_per_call,derived")
+        ok = scaling.process_smoke()
+        ok = overheads.zerocopy_smoke() and ok
+        print(f"# smoke-process {'PASS' if ok else 'FAIL'}", flush=True)
         sys.exit(0 if ok else 1)
 
     picked = [a for a in sys.argv[1:] if not a.startswith("-")] or list(SUITES)

@@ -1,10 +1,11 @@
 #!/usr/bin/env bash
 # One CI entrypoint for local runs and the GitHub Actions jobs:
 #
-#   scripts/ci.sh lint    # ruff check + format check (skips if ruff absent)
-#   scripts/ci.sh test    # pytest (-x locally; full failure list when CI=true)
-#   scripts/ci.sh smoke   # benchmark regression guards (writes JSON artifacts)
-#   scripts/ci.sh [all]   # everything, in that order (the default)
+#   scripts/ci.sh lint           # ruff check + format check (skips if ruff absent)
+#   scripts/ci.sh test           # pytest (-x locally; full failure list when CI=true)
+#   scripts/ci.sh smoke          # benchmark regression guards (writes JSON artifacts)
+#   scripts/ci.sh smoke-process  # process-backend guards (worker_kind="process", tcp)
+#   scripts/ci.sh [all]          # lint + test + smoke, in that order (the default)
 #
 # Extra arguments after `test`/`all` pass through to pytest.
 # (pyproject.toml sets pythonpath=src for pytest; the env var below keeps
@@ -46,15 +47,26 @@ cmd_smoke() {
   BENCH_QUICK=1 python -m benchmarks.run --smoke
 }
 
+cmd_smoke_process() {
+  # Process-backend regression guards: the 512-task fan-out/fan-in graph
+  # must hold <= 2 scheduler msgs/task with every message crossing the
+  # tcp wire to spawned-interpreter workers, CPU-bound Session.map must
+  # hit the core-count-adaptive GIL-escape speedup floor, and the
+  # zero-copy invariants must survive the process boundary.  JSON lands
+  # in artifacts/bench/ for the CI artifact upload.
+  BENCH_QUICK=1 python -m benchmarks.run --smoke-process
+}
+
 cmd="${1:-all}"
 if [ "$#" -gt 0 ]; then shift; fi
 case "$cmd" in
   lint)  cmd_lint ;;
   test)  cmd_test "$@" ;;
   smoke) cmd_smoke ;;
+  smoke-process) cmd_smoke_process ;;
   all)   cmd_lint; cmd_test "$@"; cmd_smoke ;;
   *)
-    echo "usage: scripts/ci.sh [lint|test|smoke|all] [pytest args...]" >&2
+    echo "usage: scripts/ci.sh [lint|test|smoke|smoke-process|all] [pytest args...]" >&2
     exit 2
     ;;
 esac

@@ -364,6 +364,14 @@ class ClusterSpec:
     budgets, spill-to-disk caching, and pause/resume pressure thresholds.
     ``None`` (the default) keeps the memory-only LRU cache sized by
     ``worker_cache_bytes``.
+
+    ``worker_kind`` picks the execution substrate: ``"thread"`` (default,
+    in-process) or ``"process"`` (each worker in its own interpreter --
+    CPU-bound graphs escape the GIL).  ``transport`` selects the comm
+    transport (``"inproc"`` or ``"tcp"``); ``None`` means direct calls for
+    thread workers and tcp for process workers.  Process workers need a
+    cross-process ``data_plane`` (file/shm/kv); the in-memory default is
+    replaced by a cluster-private file store at build time.
     """
 
     n_workers: int = 2
@@ -375,6 +383,8 @@ class ClusterSpec:
     worker_cache_bytes: int = 256 * 1024 * 1024
     data_plane: ConnectorSpec | None = None
     memory: MemorySpec | None = None
+    worker_kind: str = "thread"
+    transport: str | None = None
 
     def __init__(
         self,
@@ -388,6 +398,8 @@ class ClusterSpec:
         worker_cache_bytes: int = 256 * 1024 * 1024,
         data_plane: ConnectorSpec | Mapping[str, Any] | str | None = None,
         memory: MemorySpec | Mapping[str, Any] | None = None,
+        worker_kind: str = "thread",
+        transport: str | None = None,
     ):
         if isinstance(data_plane, str):
             data_plane = ConnectorSpec(data_plane)
@@ -404,6 +416,10 @@ class ClusterSpec:
         object.__setattr__(self, "worker_cache_bytes", int(worker_cache_bytes))
         object.__setattr__(self, "data_plane", data_plane)
         object.__setattr__(self, "memory", memory)
+        object.__setattr__(self, "worker_kind", str(worker_kind))
+        object.__setattr__(
+            self, "transport", None if transport is None else str(transport)
+        )
         self.validate()
 
     def validate(self) -> None:
@@ -425,6 +441,27 @@ class ClusterSpec:
                 )
         if self.memory is not None:
             self.memory.validate()
+        if self.worker_kind not in ("thread", "process"):
+            raise SpecValidationError(
+                f"worker_kind must be 'thread' or 'process', got "
+                f"{self.worker_kind!r}"
+            )
+        if self.transport not in (None, "inproc", "tcp"):
+            raise SpecValidationError(
+                f"transport must be None, 'inproc', or 'tcp', got "
+                f"{self.transport!r}"
+            )
+        if self.worker_kind == "process":
+            if self.transport not in (None, "tcp"):
+                raise SpecValidationError(
+                    "process workers cross interpreter boundaries and "
+                    "require transport='tcp'"
+                )
+            if self.data_plane is not None and self.data_plane.kind == "memory":
+                raise SpecValidationError(
+                    "the 'memory' connector is process-local and cannot "
+                    "back process workers; use file, shm, or kv"
+                )
 
     def to_dict(self) -> dict[str, Any]:
         return {
@@ -439,6 +476,8 @@ class ClusterSpec:
                 self.data_plane.to_dict() if self.data_plane is not None else None
             ),
             "memory": self.memory.to_dict() if self.memory is not None else None,
+            "worker_kind": self.worker_kind,
+            "transport": self.transport,
         }
 
     @classmethod
@@ -476,4 +515,6 @@ class ClusterSpec:
             inline_result_max=self.inline_result_max,
             worker_cache_bytes=self.worker_cache_bytes,
             memory=self.memory,
+            worker_kind=self.worker_kind,
+            transport=self.transport,
         )

@@ -2,11 +2,20 @@
 
 Control plane (``scheduler``) and data plane (``transfer``) are separate:
 the scheduler moves metadata; result bytes move worker-to-worker or
-through the shared cluster store.
+through the shared cluster store.  The comm subsystem (``comm``) carries
+the control plane over pluggable transports (inproc queues or tcp
+sockets); ``proc`` runs workers in their own interpreters on top of it.
 """
 
 from repro.runtime.client import Client, LocalCluster, ProxyClient, RuntimeFuture
+from repro.runtime.comm import ByteCounter, ChannelClosed, Comm, connect, listen
 from repro.runtime.graph import FutureRef, tokenize
+from repro.runtime.proc import (
+    CommServer,
+    ProcessWorker,
+    SchedulerLink,
+    start_comm_worker,
+)
 from repro.runtime.scheduler import Scheduler
 from repro.runtime.transfer import (
     BlobCache,
@@ -18,11 +27,17 @@ from repro.runtime.transfer import (
 from repro.runtime.worker import ThreadWorker
 
 __all__ = [
+    "ByteCounter",
+    "ChannelClosed",
     "Client",
+    "Comm",
+    "CommServer",
     "LocalCluster",
+    "ProcessWorker",
     "ProxyClient",
     "RuntimeFuture",
     "FutureRef",
+    "SchedulerLink",
     "tokenize",
     "Scheduler",
     "ThreadWorker",
@@ -31,4 +46,7 @@ __all__ = [
     "MissingDependencyError",
     "PeerTransfer",
     "ResultStore",
+    "connect",
+    "listen",
+    "start_comm_worker",
 ]

@@ -16,7 +16,10 @@ from __future__ import annotations
 
 import functools
 import queue
+import shutil
+import tempfile
 import threading
+import time
 import uuid
 from concurrent.futures import Future
 from typing import Any, Callable, Iterable, Sequence
@@ -341,6 +344,12 @@ class LocalCluster:
     of drop), workers pause above the budget's pause threshold, and the
     scheduler's dispatch backpressure scales to the budget.
     ``worker_stats()`` surfaces the live per-worker telemetry.
+
+    ``worker_kind="process"`` spawns each worker in its own interpreter
+    connected over ``transport`` (tcp) -- CPU-bound graphs escape the GIL.
+    Process workers exchange results through the shared store tier (file
+    connector by default; shm stays the same-host zero-copy fast path),
+    since in-memory peer transfers cannot cross a process boundary.
     """
 
     def __init__(
@@ -355,20 +364,61 @@ class LocalCluster:
         inline_result_max: int = 64 * 1024,
         worker_cache_bytes: int = 256 * 1024 * 1024,
         memory: Any = None,  # api.MemorySpec | wire dict | None
+        worker_kind: str = "thread",  # thread | process
+        transport: str | None = None,  # None | inproc | tcp
     ):
         uid = uuid.uuid4().hex[:8]
+        if worker_kind not in ("thread", "process"):
+            raise ValueError(f"worker_kind must be thread|process, got {worker_kind!r}")
+        if worker_kind == "process":
+            transport = transport or "tcp"
+            if transport != "tcp":
+                raise ValueError(
+                    f"process workers require transport='tcp', got {transport!r}"
+                )
+        self.worker_kind = worker_kind
+        self.transport = transport
+        self._store_dir: str | None = None
         if store is None:
-            store_config = {
-                "name": f"cluster-{uid}",
-                "connector": {"connector_type": "memory", "segment": f"cluster-{uid}"},
-                "serializer": "default",
-                "cache_size": 0,
-            }
+            if worker_kind == "process":
+                # Memory-connector segments are process-local; the file
+                # connector is the default cross-process store tier.
+                self._store_dir = tempfile.mkdtemp(prefix=f"cluster-{uid}-")
+                store_config = {
+                    "name": f"cluster-{uid}",
+                    "connector": {
+                        "connector_type": "file",
+                        "store_dir": self._store_dir,
+                    },
+                    "serializer": "default",
+                    "cache_size": 0,
+                }
+            else:
+                store_config = {
+                    "name": f"cluster-{uid}",
+                    "connector": {
+                        "connector_type": "memory",
+                        "segment": f"cluster-{uid}",
+                    },
+                    "serializer": "default",
+                    "cache_size": 0,
+                }
         elif hasattr(store, "to_dict"):  # api.StoreConfig without importing api
             store_config = store.to_dict()
         else:
             store_config = dict(store)
+        if (
+            worker_kind == "process"
+            and store_config.get("connector", {}).get("connector_type") == "memory"
+        ):
+            raise ValueError(
+                "the memory connector is process-local and cannot back "
+                "process workers; use a file, shm, or kv store"
+            )
         self.data_plane = ResultStore(store_config)
+        # Process workers never register on the peer mesh (it cannot cross
+        # a process boundary -- deps move through the shared store tier),
+        # but the mesh object always exists so telemetry reads uniformly.
         self.transfers = PeerTransfer()
         self.worker_cache_bytes = worker_cache_bytes
         # MemorySpec travels as its wire dict so runtime never imports api.
@@ -391,28 +441,90 @@ class LocalCluster:
             result_store=self.data_plane,
             max_outstanding_bytes=max_outstanding,
         ).start()
-        self.workers: dict[str, ThreadWorker] = {}
+        self._server = None
+        if transport is not None:
+            from repro.runtime.proc import CommServer
+
+            address = (
+                "tcp://127.0.0.1:0" if transport == "tcp" else f"inproc://cluster-{uid}"
+            )
+            self._server = CommServer(self.scheduler, address)
+        self._comms: dict[str, Any] = {}
+        self.workers: dict[str, Any] = {}  # ThreadWorker | ProcessWorker
         for _ in range(n_workers):
             self.add_worker(threads_per_worker)
 
     def add_worker(self, nthreads: int = 1) -> str:
         worker_id = f"worker-{len(self.workers)}-{uuid.uuid4().hex[:6]}"
-        w = ThreadWorker(
-            worker_id,
-            self.scheduler,
-            nthreads=nthreads,
-            result_store=self.data_plane,
-            transfers=self.transfers,
-            cache_bytes=self.worker_cache_bytes,
-            memory=self.memory_config,
-        ).start()
+        if self.worker_kind == "process":
+            from repro.runtime.proc import ProcessWorker
+
+            cfg = {
+                "nthreads": nthreads,
+                "store": self.data_plane.config(),
+                "cache_bytes": self.worker_cache_bytes,
+                "memory": self.memory_config,
+                "inline_result_max": self.scheduler.inline_result_max,
+            }
+            w = ProcessWorker(worker_id, self._server.address, cfg).start()
+        elif self.transport is not None:
+            # Thread workers over the wire: same threads, but every message
+            # crosses a real transport -- the conformance configuration.
+            from repro.runtime.proc import start_comm_worker
+
+            w, comm = start_comm_worker(
+                self._server.address,
+                worker_id,
+                nthreads=nthreads,
+                result_store=self.data_plane,
+                transfers=self.transfers,
+                cache_bytes=self.worker_cache_bytes,
+                memory=self.memory_config,
+                inline_result_max=self.scheduler.inline_result_max,
+            )
+            self._comms[worker_id] = comm
+        else:
+            w = ThreadWorker(
+                worker_id,
+                self.scheduler,
+                nthreads=nthreads,
+                result_store=self.data_plane,
+                transfers=self.transfers,
+                cache_bytes=self.worker_cache_bytes,
+                memory=self.memory_config,
+            ).start()
         self.workers[worker_id] = w
         return worker_id
+
+    def wait_for_workers(self, n: int | None = None, timeout: float = 60.0) -> None:
+        """Block until ``n`` (default: all spawned) workers have completed
+        wire registration -- process workers register asynchronously."""
+        n = len(self.workers) if n is None else n
+        deadline = time.monotonic() + timeout
+        while True:
+            alive = sum(1 for ws in self.scheduler.workers.values() if ws.alive)
+            if alive >= n:
+                return
+            if time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"only {alive}/{n} workers registered within {timeout}s"
+                )
+            time.sleep(0.02)
 
     def remove_worker(self, worker_id: str) -> None:
         w = self.workers.pop(worker_id, None)
         if w is not None:
+            if not isinstance(w, ThreadWorker):
+                # A process worker must be told over the wire; stop() alone
+                # would wait out the join timeout and then escalate.
+                ws = self.scheduler.workers.get(worker_id)
+                if ws is not None:
+                    try:
+                        ws.mailbox.put_msg(M.msg(M.STOP))
+                    except Exception:
+                        pass
             w.stop()
+            self._comms.pop(worker_id, None)
             self.scheduler.inbox.put_msg(M.msg(M.DEREGISTER, worker=worker_id))
 
     def kill_worker(self, worker_id: str) -> None:
@@ -420,6 +532,7 @@ class LocalCluster:
         w = self.workers.pop(worker_id, None)
         if w is not None:
             w.kill()
+            self._comms.pop(worker_id, None)
 
     def get_client(self) -> Client:
         return Client(self)
@@ -429,28 +542,48 @@ class LocalCluster:
         ``{running, managed_bytes, spilled_bytes, state, bytes_moved,
         bytes_copied, copies_per_byte, zero_copy_hits, ...}``.
 
-        ``running`` is the scheduler's dispatched-not-done count; the
-        memory and copy-accounting fields read the worker's live
-        accounting directly (not the last heartbeat), so tests and
-        dashboards see current state.
+        ``running`` is the scheduler's dispatched-not-done count; for
+        in-process workers the memory and copy-accounting fields read the
+        worker's live accounting directly (not the last heartbeat), so
+        tests and dashboards see current state.  A process worker has no
+        reachable object to ask, so its row is the full ``stats()``
+        snapshot carried by its last heartbeat.
         """
         out: dict[str, dict[str, Any]] = {}
         for worker_id, w in self.workers.items():
-            row = w.stats()
             ws = self.scheduler.workers.get(worker_id)
+            if hasattr(w, "stats"):
+                row = w.stats()
+            elif ws is not None and ws.last_stats is not None:
+                row = dict(ws.last_stats)
+            else:
+                row = {}  # process worker that has not heartbeat yet
             row["running"] = len(ws.running) if ws is not None else 0
             row["outstanding_bytes"] = ws.outstanding_bytes if ws is not None else 0
             out[worker_id] = row
         return out
 
     def close(self) -> None:
+        # In-process workers stop directly; the scheduler's shutdown
+        # broadcast below carries STOP over the wire to process workers.
         for w in list(self.workers.values()):
-            w.stop()
-        self.workers.clear()
+            if isinstance(w, ThreadWorker):
+                w.stop()
         self.scheduler.stop()
+        for w in list(self.workers.values()):
+            if not isinstance(w, ThreadWorker):
+                w.stop()
+        self.workers.clear()
+        for comm in list(self._comms.values()):
+            comm.close()
+        self._comms.clear()
+        if self._server is not None:
+            self._server.close()
         # The data-plane namespace is cluster-owned: closing the cluster
         # evicts every still-published ref.
         self.data_plane.close()
+        if self._store_dir is not None:
+            shutil.rmtree(self._store_dir, ignore_errors=True)
 
     def __enter__(self) -> "LocalCluster":
         return self

@@ -1,0 +1,214 @@
+"""TCP transport: length-prefixed framed wire protocol over a socket.
+
+Wire format per message: an 8-byte little-endian payload length followed
+by the encoded blob.  The blob is *sent* as the codec's frame list via
+``socket.sendmsg`` (writev-style scatter/gather), so a message carrying
+array buffers crosses the socket without ever being joined in user space
+-- the PR 5 zero-copy discipline survives the boundary.  The receive side
+pays the one unavoidable copy: a single preallocated buffer filled with
+``recv_into``, handed to ``decode_message`` which builds array views over
+it in place.
+
+Blocking sockets with ``TCP_NODELAY``; receives poll via ``select`` in
+short slices so ``close()`` from another thread (or the peer dying) wakes
+a blocked ``recv`` with :class:`ChannelClosed` instead of hanging.  A
+reader that timed out mid-message would desync the stream, so only the
+wait for a message's *first* byte honors the caller's timeout.
+"""
+
+from __future__ import annotations
+
+import select
+import socket
+import threading
+import time
+from typing import Any, Callable
+
+from repro.runtime.comm.core import (
+    WIRE_HEADER,
+    ChannelClosed,
+    Comm,
+    Listener,
+    encode_message_frames,
+    is_control,
+    register_transport,
+)
+
+#: Buffers per sendmsg call; Linux IOV_MAX is 1024, stay safely under it.
+_IOV_CHUNK = 512
+
+#: Poll granularity for blocked receives re-checking the closed flag.
+_POLL = 0.1
+
+
+def _as_view(frame: Any) -> memoryview:
+    view = memoryview(frame)
+    if view.ndim != 1 or view.format != "B":
+        view = view.cast("B") if view.contiguous else memoryview(bytes(view))
+    return view
+
+
+class TCPComm(Comm):
+    def __init__(self, sock: socket.socket, name: str = ""):
+        super().__init__(name)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        sock.settimeout(None)
+        self._sock = sock
+        self._send_lock = threading.Lock()
+        self._recv_lock = threading.Lock()
+        self._closed = threading.Event()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed.is_set()
+
+    # -- send ---------------------------------------------------------------
+
+    def send(self, message: Any) -> int:
+        frames = [_as_view(f) for f in encode_message_frames(message)]
+        total = sum(v.nbytes for v in frames)
+        fast = bool(frames) and is_control(frames[0])
+        header = WIRE_HEADER.pack(total)
+        views = [memoryview(header)] + [v for v in frames if v.nbytes]
+        with self._send_lock:
+            if self._closed.is_set():
+                raise ChannelClosed(f"{self.name}: comm closed")
+            try:
+                self._writev(views)
+            except (OSError, ValueError):
+                self._closed.set()
+                raise ChannelClosed(f"{self.name}: send failed") from None
+        self.counter.add_sent(total, fast=fast)
+        return total
+
+    def _writev(self, views: list[memoryview]) -> None:
+        while views:
+            sent = self._sock.sendmsg(views[:_IOV_CHUNK])
+            while sent > 0:
+                head = views[0]
+                if sent >= head.nbytes:
+                    sent -= head.nbytes
+                    views.pop(0)
+                else:
+                    views[0] = head[sent:]
+                    sent = 0
+
+    # -- recv ---------------------------------------------------------------
+
+    def recv_blob(self, timeout: float | None = None) -> bytearray:
+        with self._recv_lock:
+            header = bytearray(WIRE_HEADER.size)
+            self._read_into(header, timeout=timeout, first=True)
+            (total,) = WIRE_HEADER.unpack(header)
+            blob = bytearray(total)
+            if total:
+                self._read_into(blob, timeout=None, first=False)
+        self.counter.add_recv(total, fast=total > 0 and is_control(blob))
+        return blob
+
+    def _read_into(self, buf: bytearray, timeout: float | None, first: bool) -> None:
+        """Fill ``buf`` completely.  ``first`` marks the wait for a
+        message's first byte -- the only point where timing out is clean;
+        a timeout mid-message would desync the framing, so body reads only
+        fail by the connection dying."""
+        view = memoryview(buf)
+        got = 0
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while got < len(buf):
+            if self._closed.is_set():
+                raise ChannelClosed(f"{self.name}: comm closed")
+            wait = _POLL
+            if first and got == 0 and deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError
+                wait = min(wait, remaining)
+            try:
+                ready, _, _ = select.select([self._sock], [], [], wait)
+            except (OSError, ValueError):
+                self._closed.set()
+                raise ChannelClosed(f"{self.name}: comm closed") from None
+            if not ready:
+                continue
+            try:
+                n = self._sock.recv_into(view[got:])
+            except OSError:
+                self._closed.set()
+                raise ChannelClosed(f"{self.name}: connection lost") from None
+            if n == 0:
+                self._closed.set()
+                raise ChannelClosed(f"{self.name}: peer closed")
+            got += n
+
+    def close(self) -> None:
+        self._closed.set()
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+# -- listener / connector ------------------------------------------------------
+
+
+def _split_host_port(rest: str) -> tuple[str, int]:
+    host, _, port = rest.rpartition(":")
+    if not port:
+        raise ValueError(f"tcp address {rest!r} lacks a :port")
+    return host or "127.0.0.1", int(port)
+
+
+class TCPListener(Listener):
+    def __init__(
+        self,
+        rest: str,
+        handler: Callable[[Comm], None],
+        backlog: int = 128,
+    ):
+        host, port = _split_host_port(rest)
+        self._sock = socket.create_server((host, port), backlog=backlog)
+        bound_host, bound_port = self._sock.getsockname()[:2]
+        self.address = f"tcp://{bound_host}:{bound_port}"
+        self._handler = handler
+        self._stopped = threading.Event()
+        self._thread = threading.Thread(
+            target=self._accept_loop, daemon=True, name=f"tcp-listen-{bound_port}"
+        )
+        self._thread.start()
+
+    def _accept_loop(self) -> None:
+        while not self._stopped.is_set():
+            try:
+                conn, addr = self._sock.accept()
+            except OSError:
+                return  # listener socket closed
+            comm = TCPComm(conn, name=f"tcp://{addr[0]}:{addr[1]}")
+            try:
+                self._handler(comm)
+            except Exception:
+                comm.close()
+
+    def stop(self) -> None:
+        self._stopped.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        self._thread.join(timeout=2)
+
+
+def _listen(rest: str, handler: Callable[[Comm], None], **kwargs: Any) -> Listener:
+    return TCPListener(rest, handler, **kwargs)
+
+
+def _connect(rest: str, timeout: float = 5.0, **kwargs: Any) -> Comm:
+    host, port = _split_host_port(rest)
+    sock = socket.create_connection((host, port), timeout=timeout)
+    return TCPComm(sock, name=f"tcp://{host}:{port}")
+
+
+register_transport("tcp", _listen, _connect)

@@ -158,6 +158,9 @@ class WorkerState:
     #: -- the backpressure quantity; maintained by _assign/_unassign so every
     #: removal path (done, failed, stolen, released, worker lost) decrements.
     outstanding_bytes: int = 0
+    #: full worker.stats() snapshot from the last heartbeat -- the only view
+    #: of a process worker's telemetry (no shared-memory object to ask).
+    last_stats: dict[str, Any] | None = None
 
     def occupancy(self) -> float:
         """Outstanding tasks per thread -- the dispatch balance metric."""
@@ -318,9 +321,13 @@ class Scheduler:
         elif tag == M.SUBMIT_GRAPH:
             self._on_submit_graph(p)
         elif tag == M.REGISTER:
-            self._register_worker(
-                p["worker"], p["mailbox"], p.get("nthreads", 1)
-            )
+            # Wire registrations carry no mailbox handle -- the CommServer
+            # binds the connection as the mailbox before this message would
+            # ever reach the inbox, so only in-process REGISTERs land here.
+            if p.get("mailbox") is not None:
+                self._register_worker(
+                    p["worker"], p["mailbox"], p.get("nthreads", 1)
+                )
         elif tag == M.DEREGISTER:
             self._on_worker_lost(p["worker"], graceful=True)
         elif tag == M.HEARTBEAT:
@@ -337,6 +344,8 @@ class Scheduler:
                 ws.bytes_copied = p.get("bytes_copied", ws.bytes_copied)
                 if "spilled_keys" in p:
                     ws.spilled = set(p["spilled_keys"] or [])
+                if "stats" in p:
+                    ws.last_stats = p["stats"]
         elif tag == M.TASK_DONE:
             self._on_task_done(p)
         elif tag == M.TASK_FAILED:

@@ -311,6 +311,9 @@ class ThreadWorker:
                 spilled_keys=spilled,
                 bytes_moved=copy_stats["bytes_moved"],
                 bytes_copied=copy_stats["bytes_copied"],
+                # Full telemetry snapshot: for process workers the heartbeat
+                # is the only channel worker_stats() can be served from.
+                stats=self.stats(),
             )
         )
 
