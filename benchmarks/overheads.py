@@ -16,13 +16,17 @@ reduction ratio; the acceptance bar is a >=10x drop at >=1 MiB payloads.
 
 from __future__ import annotations
 
+import threading
+import time
 import uuid
 
 import numpy as np
 
 from benchmarks.common import QUICK, bench_store_config, record, save_artifact, timeit
 from repro.api import ClusterSpec, PolicySpec, Session
+from repro.core.compress import LINK_SHM, LINK_TCP, TransferLedger
 from repro.core.serialize import CopyCounter, FrameBundle, deserialize, serialize
+from repro.runtime import comm as rcomm
 from repro.runtime.client import LocalCluster
 from repro.runtime.transfer import BlobCache, PeerTransfer, ResultStore, SpillCache
 
@@ -287,6 +291,227 @@ def zerocopy_smoke() -> bool:
         ok = False
     out["ok"] = ok
     save_artifact("smoke_zerocopy", out)
+    return ok
+
+
+def _tcp_pair(transfer: dict | None = None, ledger: TransferLedger | None = None):
+    """A connected loopback tcp (listener, client, server) triple."""
+    accepted: list = []
+    ready = threading.Event()
+
+    def handler(c):
+        accepted.append(c)
+        ready.set()
+
+    kw: dict = {}
+    if transfer is not None:
+        kw["transfer"] = transfer
+    if ledger is not None:
+        kw["ledger"] = ledger
+    listener = rcomm.listen("tcp://127.0.0.1:0", handler, **kw)
+    client = rcomm.connect(listener.address, **kw)
+    ready.wait(5)
+    return listener, client, accepted[0]
+
+
+def _one_way(client, server, msg, sent: list, k: int = 1) -> float:
+    """``k`` pipelined one-way transfers: send from a thread (a multi-MiB
+    message legitimately blocks the sender until the peer drains), recv on
+    this side.  Returns seconds per transfer and appends each wire byte
+    count ``send`` returned to ``sent``.  Pipelining amortizes the thread
+    start/join over ``k`` messages, which otherwise dominates millisecond
+    transfers on a loaded single-core CI box."""
+
+    def pump():
+        for _ in range(k):
+            sent.append(client.send(msg))
+
+    t = threading.Thread(target=pump)
+    t0 = time.perf_counter()
+    t.start()
+    for _ in range(k):
+        server.recv(timeout=120)
+    dt = time.perf_counter() - t0
+    t.join()
+    return dt / k
+
+
+def compression(payloads_mib: list[int] | None = None, reps: int | None = None) -> dict:
+    """Adaptive-compression row: effective one-way tcp throughput, raw vs
+    adaptive, for a compressible f32 payload (1/8 dense, the padded-tensor
+    / sparse-gradient shape) and an incompressible random payload -- plus
+    the shm publish/fetch ledger check (the zero-copy link must show zero
+    compression activity).
+
+    Saved to ``artifacts/bench/smoke_compression.json`` (the smoke guard
+    asserts on the same dict).
+    """
+    payloads_mib = payloads_mib or (ZC_PAYLOADS_MIB[:2] if QUICK else ZC_PAYLOADS_MIB)
+    reps = reps if reps is not None else (3 if QUICK else 5)
+    out: dict = {
+        "payload_mib": list(payloads_mib),
+        "raw_compressible_mib_s": [],
+        "adaptive_compressible_mib_s": [],
+        "compressible_speedup": [],
+        "compressible_wire_ratio": [],
+        "raw_random_mib_s": [],
+        "adaptive_random_mib_s": [],
+        "random_overhead_pct": [],
+    }
+
+    ledger = TransferLedger()
+
+    def _measure(msg) -> dict[str, tuple[float, int]]:
+        """Min-of-rounds one-way time for the raw and adaptive variants,
+        with the rounds *interleaved* so both variants sit under the same
+        load drift, on *fresh* pairs so neither inherits the other's
+        kernel socket autotuning (per-connection buffers grow with
+        traffic, which would systematically favor whichever pair shipped
+        big messages first)."""
+        pairs = {
+            "raw": _tcp_pair(transfer={"compression": "off"}),
+            "adaptive": _tcp_pair(transfer={"compression": "auto"}, ledger=ledger),
+        }
+        try:
+            times: dict[str, list[float]] = {"raw": [], "adaptive": []}
+            sent: dict[str, list] = {"raw": [], "adaptive": []}
+            for variant, (_, client, server) in pairs.items():
+                _one_way(client, server, msg, sent[variant])  # warmup
+            for _ in range(reps):
+                for variant, (_, client, server) in pairs.items():
+                    times[variant].append(
+                        _one_way(client, server, msg, sent[variant], k=5)
+                    )
+            return {
+                v: (min(times[v]), sent[v][-1]) for v in ("raw", "adaptive")
+            }
+        finally:
+            for listener, client, server in pairs.values():
+                for c in (client, server):
+                    try:
+                        c.close()
+                    except Exception:
+                        pass
+                listener.stop()
+
+    rng = np.random.default_rng(11)
+    for mib in payloads_mib:
+        # Zero-block f32: the padded-tensor / zero-initialized-buffer
+        # shape the cascade codec exists for.  uint8 noise for the
+        # incompressible row (true ~8 bits/byte, so the entropy
+        # bail-out is deterministic).
+        sparse = np.zeros(mib * (1 << 20) // 4, dtype=np.float32)
+        noise = np.frombuffer(rng.bytes(mib * (1 << 20)), dtype=np.uint8)
+        mib_s = lambda t: mib / max(t, 1e-9)  # noqa: E731
+        res = {}
+        for kind, payload in (("compressible", sparse), ("random", noise)):
+            cells = _measure(("b", {"a": payload}))
+            for variant, (t_min, last_sent) in cells.items():
+                res[f"{variant}_{kind}"] = (mib_s(t_min), last_sent)
+                out[f"{variant}_{kind}_mib_s"].append(mib_s(t_min))
+        speedup = res["adaptive_compressible"][0] / max(
+            res["raw_compressible"][0], 1e-9
+        )
+        wire_ratio = res["raw_compressible"][1] / max(
+            res["adaptive_compressible"][1], 1
+        )
+        overhead_pct = 100.0 * (
+            res["raw_random"][0] / max(res["adaptive_random"][0], 1e-9) - 1.0
+        )
+        out["compressible_speedup"].append(speedup)
+        out["compressible_wire_ratio"].append(wire_ratio)
+        out["random_overhead_pct"].append(overhead_pct)
+        record(
+            f"compression/tcp_compressible/{mib}MiB",
+            res["adaptive_compressible"][0],
+            f"raw={res['raw_compressible'][0]:.0f}MiB/s "
+            f"speedup={speedup:.1f}x wire_ratio={wire_ratio:.1f}x",
+        )
+        record(
+            f"compression/tcp_random/{mib}MiB",
+            res["adaptive_random"][0],
+            f"raw={res['raw_random'][0]:.0f}MiB/s overhead={overhead_pct:.1f}%",
+        )
+    out["tcp_ledger"] = ledger.snapshot().get(LINK_TCP, {})
+
+    # Same-host shm: the never-compress link.  The ledger must show the
+    # publish/fetch traffic at ratio 1.0 with zero bytes traveling encoded
+    # (compression here would add a copy to the zero-copy handoff).
+    uid = uuid.uuid4().hex[:8]
+    shm_ledger = TransferLedger()
+    shm_store = ResultStore(
+        {
+            "name": f"cp-{uid}",
+            "connector": {"connector_type": "shm", "prefix": f"cp{uid[:4]}"},
+            "serializer": "default",
+            "cache_size": 0,
+            "transfer": {"compression": "auto"},
+        }
+    )
+    try:
+        sobj = serialize(np.zeros(2 * (1 << 20), dtype=np.float32))  # 8 MiB
+        ref = shm_store.publish("cp-shm", sobj, ledger=shm_ledger)
+        shm_store.fetch(ref, sobj.nbytes, ledger=shm_ledger)
+    finally:
+        shm_store.close()
+    shm_row = shm_ledger.snapshot().get(LINK_SHM, {})
+    out["shm_ledger"] = shm_row
+    out["shm_ratio"] = shm_row.get("ratio", 0.0)
+    out["shm_compressed_bytes"] = shm_row.get("compressed_bytes", -1)
+    record(
+        "compression/shm_ledger", out["shm_ratio"],
+        f"compressed_bytes={out['shm_compressed_bytes']}",
+    )
+
+    save_artifact("smoke_compression", out)
+    return out
+
+
+def _fmt_ledger_line(row: dict) -> str:
+    if not row:
+        return "# ledger: tcp (no traffic recorded)"
+    return (
+        f"# ledger: tcp logical={row['logical_bytes'] / (1 << 20):.1f}MiB "
+        f"wire={row['wire_bytes'] / (1 << 20):.1f}MiB "
+        f"ratio={row.get('ratio', 0.0):.2f}x "
+        f"codec={row.get('codec_mib_s', 0.0):.0f}MiB/s "
+        f"transfers={row['transfers']}"
+    )
+
+
+def compression_smoke() -> bool:
+    """CI guard for adaptive per-link compression.
+
+    Fails (returns False) when: the compressible 8 MiB payload does not
+    move >= 2x faster (effective one-way throughput) with adaptive
+    compression than raw over tcp; the incompressible payload regresses
+    > 5% (min-of-reps); or the shm link shows any compression activity
+    (ratio != 1.0 or compressed bytes != 0 -- the zero-copy handoff must
+    stay byte-for-byte untouched).
+    """
+    out = compression()
+    ok = True
+    guard_mib = 8 if 8 in out["payload_mib"] else out["payload_mib"][-1]
+    i = out["payload_mib"].index(guard_mib)
+    speedup = out["compressible_speedup"][i]
+    if speedup < 2.0:
+        print(f"# SMOKE FAIL: adaptive compression only {speedup:.2f}x raw tcp "
+              f"throughput on compressible {guard_mib} MiB (must be >= 2x)")
+        ok = False
+    overhead = out["random_overhead_pct"][i]
+    if overhead > 5.0:
+        print(f"# SMOKE FAIL: incompressible payload regressed {overhead:.1f}% "
+              f"under the adaptive policy at {guard_mib} MiB (must be <= 5%)")
+        ok = False
+    if out["shm_ratio"] != 1.0 or out["shm_compressed_bytes"] != 0:
+        print(f"# SMOKE FAIL: shm link shows compression activity "
+              f"(ratio={out['shm_ratio']:.3f}, "
+              f"compressed_bytes={out['shm_compressed_bytes']}) -- "
+              f"same-host-shm must stay uncompressed")
+        ok = False
+    print(_fmt_ledger_line(out["tcp_ledger"]))
+    out["ok"] = ok
+    save_artifact("smoke_compression", out)
     return ok
 
 

@@ -27,7 +27,11 @@ store refetches than the memory-only baseline.  Wired into
 over tcp): the 512-task fan-out/fan-in graph must hold <= 2 scheduler
 msgs/task across the wire, CPU-bound ``Session.map`` must hit the
 core-count-adaptive GIL-escape speedup floor, and the zero-copy data-path
-row must keep its invariants.  Wired into ``scripts/ci.sh smoke-process``.
+row must keep its invariants.  It also guards adaptive per-link
+compression: compressible payloads must move >= 2x faster over tcp than
+raw, incompressible payloads must not regress > 5%, and the same-host
+shm link must show zero compression activity in the transfer ledger.
+Wired into ``scripts/ci.sh smoke-process``.
 """
 
 from __future__ import annotations
@@ -56,6 +60,7 @@ def main() -> None:
         print("name,us_per_call,derived")
         ok = scaling.process_smoke()
         ok = overheads.zerocopy_smoke() and ok
+        ok = overheads.compression_smoke() and ok
         print(f"# smoke-process {'PASS' if ok else 'FAIL'}", flush=True)
         sys.exit(0 if ok else 1)
 

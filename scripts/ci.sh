@@ -52,8 +52,13 @@ cmd_smoke_process() {
   # must hold <= 2 scheduler msgs/task with every message crossing the
   # tcp wire to spawned-interpreter workers, CPU-bound Session.map must
   # hit the core-count-adaptive GIL-escape speedup floor, and the
-  # zero-copy invariants must survive the process boundary.  JSON lands
-  # in artifacts/bench/ for the CI artifact upload.
+  # zero-copy invariants must survive the process boundary.  The adaptive
+  # compression guard rides along: compressible payloads >= 2x effective
+  # tcp throughput vs raw, incompressible payloads < 5% overhead, zero
+  # compression activity on the same-host shm link -- and it prints a
+  # one-line "# ledger:" summary (wire vs logical bytes, ratio) so the
+  # perf trajectory is visible in CI logs, not only in the JSON
+  # artifacts.  JSON lands in artifacts/bench/ for the CI artifact upload.
   BENCH_QUICK=1 python -m benchmarks.run --smoke-process
 }
 

@@ -29,6 +29,7 @@ from repro.api.config import (
     PolicySpec,
     SpecValidationError,
     StoreConfig,
+    TransferSpec,
 )
 from repro.api.session import Session, as_completed
 from repro.core.connectors.base import (
@@ -52,6 +53,7 @@ __all__ = [
     "PolicySpec",
     "SpecValidationError",
     "StoreConfig",
+    "TransferSpec",
     "Session",
     "as_completed",
     "GraphNode",

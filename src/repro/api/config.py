@@ -210,6 +210,7 @@ class StoreConfig:
     connector: ConnectorSpec
     serializer: str = "default"
     cache_size: int = 16
+    transfer: "TransferSpec | None" = None
 
     def __init__(
         self,
@@ -217,6 +218,7 @@ class StoreConfig:
         connector: ConnectorSpec | Mapping[str, Any] | tuple | str,
         serializer: str = "default",
         cache_size: int = 16,
+        transfer: "TransferSpec | Mapping[str, Any] | str | None" = None,
     ):
         if isinstance(connector, str):
             connector = ConnectorSpec(connector)
@@ -224,10 +226,15 @@ class StoreConfig:
             connector = ConnectorSpec.from_dict(connector)
         elif isinstance(connector, tuple):
             connector = ConnectorSpec(*connector)
+        if isinstance(transfer, str):
+            transfer = TransferSpec(transfer)
+        elif isinstance(transfer, Mapping):
+            transfer = TransferSpec.from_dict(transfer)
         object.__setattr__(self, "name", name)
         object.__setattr__(self, "connector", connector)
         object.__setattr__(self, "serializer", serializer)
         object.__setattr__(self, "cache_size", int(cache_size))
+        object.__setattr__(self, "transfer", transfer)
         self.validate()
 
     def validate(self) -> None:
@@ -240,23 +247,35 @@ class StoreConfig:
         _ensure_lazy_serializers()
         serializer_registry.get(self.serializer)
         self.connector.validate()
+        if self.transfer is not None:
+            self.transfer.validate()
 
     def to_dict(self) -> dict[str, Any]:
-        """The exact wire format ``Store.from_config`` consumes."""
-        return {
+        """The exact wire format ``Store.from_config`` consumes.
+
+        ``transfer`` (the data-plane compression policy) rides the dict
+        only when set, so configs without the knob are byte-identical to
+        pre-compression wire dicts.
+        """
+        out = {
             "name": self.name,
             "connector": self.connector.to_dict(),
             "serializer": self.serializer,
             "cache_size": self.cache_size,
         }
+        if self.transfer is not None:
+            out["transfer"] = self.transfer.to_dict()
+        return out
 
     @classmethod
     def from_dict(cls, config: Mapping[str, Any]) -> "StoreConfig":
+        transfer = config.get("transfer")
         return cls(
             config["name"],
             ConnectorSpec.from_dict(config["connector"]),
             serializer=config.get("serializer", "default"),
             cache_size=config.get("cache_size", 16),
+            transfer=TransferSpec.from_dict(transfer) if transfer else None,
         )
 
     def build(self, *, register: bool = False) -> Store:
@@ -346,6 +365,99 @@ class MemorySpec:
 
 
 @dataclass(frozen=True, init=False)
+class TransferSpec:
+    """Declarative compression policy for the cluster's byte paths.
+
+    Attaching a ``TransferSpec`` to a :class:`ClusterSpec` (or a
+    ``StoreConfig`` used as a cluster data plane) configures the adaptive
+    per-link compression layer on every path bytes travel: tcp comm
+    links, store publishes/fetches, and (optionally) the spill disk tier.
+
+    * ``compression``      -- ``"auto"`` (default: probe each frame and
+      pick the best-paying codec), ``"off"`` (ship everything raw), or a
+      codec name to force (``none`` / ``zlib`` / ``lz4`` / ``cascade``;
+      ``lz4`` falls back to zlib when the package is absent).
+    * ``min_frame_bytes``  -- frames below this never compress: header
+      overhead and codec latency dominate tiny payloads.
+    * ``probe_ratio``      -- a frame compresses only when its sampled
+      trial encode beats this ratio (stored/original); the guard that
+      keeps incompressible payloads within a whisker of raw speed.
+    * ``spill_compression`` -- codec for the spill disk tier (``None``
+      keeps demotes raw).  Disk reads decode transparently.
+    * ``level``            -- deflate level for the zlib-family codecs.
+
+    The ``same-host-shm`` and ``inproc`` link classes are hard-wired to
+    no compression regardless of these knobs: the zero-copy paths must
+    never grow a copy.  Round-trips through plain dicts like every other
+    spec; the wire dict is exactly what ``TransferPolicy.from_config``
+    consumes.
+    """
+
+    compression: str = "auto"
+    min_frame_bytes: int = 64 * 1024
+    probe_ratio: float = 0.9
+    spill_compression: str | None = None
+    level: int = 1
+
+    def __init__(
+        self,
+        compression: str = "auto",
+        *,
+        min_frame_bytes: int = 64 * 1024,
+        probe_ratio: float = 0.9,
+        spill_compression: str | None = None,
+        level: int = 1,
+    ):
+        object.__setattr__(self, "compression", str(compression))
+        object.__setattr__(self, "min_frame_bytes", int(min_frame_bytes))
+        object.__setattr__(self, "probe_ratio", float(probe_ratio))
+        object.__setattr__(self, "spill_compression", spill_compression)
+        object.__setattr__(self, "level", int(level))
+        self.validate()
+
+    def validate(self) -> None:
+        from repro.core.compress import available_codecs
+
+        codecs = available_codecs()
+        if self.compression not in ("auto", "off") and self.compression not in codecs:
+            raise SpecValidationError(
+                f"compression must be 'auto', 'off', or one of {codecs}, "
+                f"got {self.compression!r}"
+            )
+        if self.spill_compression is not None and self.spill_compression not in codecs:
+            raise SpecValidationError(
+                f"spill_compression must be None or one of {codecs}, "
+                f"got {self.spill_compression!r}"
+            )
+        if self.min_frame_bytes < 0:
+            raise SpecValidationError("min_frame_bytes must be >= 0")
+        if not (0.0 < self.probe_ratio <= 1.0):
+            raise SpecValidationError(
+                f"probe_ratio must be in (0, 1], got {self.probe_ratio}"
+            )
+        if self.level < 0 or self.level > 9:
+            raise SpecValidationError(f"level must be in [0, 9], got {self.level}")
+
+    def to_dict(self) -> dict[str, Any]:
+        """The exact wire format ``TransferPolicy.from_config`` consumes."""
+        return {
+            "compression": self.compression,
+            "min_frame_bytes": self.min_frame_bytes,
+            "probe_ratio": self.probe_ratio,
+            "spill_compression": self.spill_compression,
+            "level": self.level,
+        }
+
+    @classmethod
+    def from_dict(cls, config: Mapping[str, Any]) -> "TransferSpec":
+        config = dict(config)
+        return cls(
+            config.pop("compression", "auto"),
+            **config,
+        )
+
+
+@dataclass(frozen=True, init=False)
 class ClusterSpec:
     """Declarative description of a :class:`repro.runtime.client.LocalCluster`.
 
@@ -365,6 +477,11 @@ class ClusterSpec:
     ``None`` (the default) keeps the memory-only LRU cache sized by
     ``worker_cache_bytes``.
 
+    ``transfer`` attaches a :class:`TransferSpec`: the adaptive per-link
+    compression policy for comm links, store publishes/fetches, and the
+    spill disk tier.  ``None`` (the default) means the stock adaptive
+    policy (probe-and-pick, shm/inproc exempt).
+
     ``worker_kind`` picks the execution substrate: ``"thread"`` (default,
     in-process) or ``"process"`` (each worker in its own interpreter --
     CPU-bound graphs escape the GIL).  ``transport`` selects the comm
@@ -383,6 +500,7 @@ class ClusterSpec:
     worker_cache_bytes: int = 256 * 1024 * 1024
     data_plane: ConnectorSpec | None = None
     memory: MemorySpec | None = None
+    transfer: TransferSpec | None = None
     worker_kind: str = "thread"
     transport: str | None = None
 
@@ -398,6 +516,7 @@ class ClusterSpec:
         worker_cache_bytes: int = 256 * 1024 * 1024,
         data_plane: ConnectorSpec | Mapping[str, Any] | str | None = None,
         memory: MemorySpec | Mapping[str, Any] | None = None,
+        transfer: TransferSpec | Mapping[str, Any] | str | None = None,
         worker_kind: str = "thread",
         transport: str | None = None,
     ):
@@ -407,6 +526,10 @@ class ClusterSpec:
             data_plane = ConnectorSpec.from_dict(data_plane)
         if isinstance(memory, Mapping):
             memory = MemorySpec.from_dict(memory)
+        if isinstance(transfer, str):
+            transfer = TransferSpec(transfer)
+        elif isinstance(transfer, Mapping):
+            transfer = TransferSpec.from_dict(transfer)
         object.__setattr__(self, "n_workers", int(n_workers))
         object.__setattr__(self, "threads_per_worker", int(threads_per_worker))
         object.__setattr__(self, "heartbeat_timeout", float(heartbeat_timeout))
@@ -416,6 +539,7 @@ class ClusterSpec:
         object.__setattr__(self, "worker_cache_bytes", int(worker_cache_bytes))
         object.__setattr__(self, "data_plane", data_plane)
         object.__setattr__(self, "memory", memory)
+        object.__setattr__(self, "transfer", transfer)
         object.__setattr__(self, "worker_kind", str(worker_kind))
         object.__setattr__(
             self, "transport", None if transport is None else str(transport)
@@ -441,6 +565,8 @@ class ClusterSpec:
                 )
         if self.memory is not None:
             self.memory.validate()
+        if self.transfer is not None:
+            self.transfer.validate()
         if self.worker_kind not in ("thread", "process"):
             raise SpecValidationError(
                 f"worker_kind must be 'thread' or 'process', got "
@@ -476,6 +602,7 @@ class ClusterSpec:
                 self.data_plane.to_dict() if self.data_plane is not None else None
             ),
             "memory": self.memory.to_dict() if self.memory is not None else None,
+            "transfer": self.transfer.to_dict() if self.transfer is not None else None,
             "worker_kind": self.worker_kind,
             "transport": self.transport,
         }
@@ -485,12 +612,14 @@ class ClusterSpec:
         config = dict(config)
         data_plane = config.pop("data_plane", None)
         memory = config.pop("memory", None)
+        transfer = config.pop("transfer", None)
         return cls(
             config.pop("n_workers", 2),
             data_plane=(
                 ConnectorSpec.from_dict(data_plane) if data_plane else None
             ),
             memory=MemorySpec.from_dict(memory) if memory else None,
+            transfer=TransferSpec.from_dict(transfer) if transfer else None,
             **config,
         )
 
@@ -515,6 +644,7 @@ class ClusterSpec:
             inline_result_max=self.inline_result_max,
             worker_cache_bytes=self.worker_cache_bytes,
             memory=self.memory,
+            transfer=self.transfer,
             worker_kind=self.worker_kind,
             transport=self.transport,
         )

@@ -1,0 +1,650 @@
+"""Adaptive per-link frame compression + the transfer ledger.
+
+ROADMAP item 4: the data plane (tcp comms, store publishes/fetches, spill
+demotes) never consulted a codec -- every cross-process transfer shipped
+raw frames, and :class:`~repro.core.serialize.CopyCounter` could not tell
+wire bytes from logical bytes.  This module supplies the three missing
+pieces:
+
+* a **frame-codec registry** (``none`` / ``zlib`` / ``lz4`` with a zlib
+  fallback when the package is absent / ``cascade``) behind a small
+  self-describing envelope, so any byte path can shrink eligible frames
+  and any consumer can restore them without out-of-band metadata,
+* a **decision probe** (:class:`TransferPolicy`): payload-size threshold,
+  a first+middle+last 4 KiB entropy/trial sample, and the link class --
+  ``inproc`` and ``same-host-shm`` are hard-wired to ``none`` (the PR 5
+  zero-copy paths must never grow a copy), ``cross-process`` and ``tcp``
+  compress adaptively,
+* a **transfer ledger** (:class:`TransferLedger`): per-link-class logical
+  bytes vs wire bytes, compression ratio, codec nanoseconds, and derived
+  codec throughput -- carried on worker heartbeats into
+  ``worker_stats()``, so the "fewer bytes on every wire" claim is
+  measured, not asserted.
+
+Codecs are byte-level and **lossless** (delivery is asserted
+byte-identical by the conformance tests).  ``cascade`` is the frame-level
+analogue of :mod:`repro.distributed.compression`'s delta codec for float
+payloads: a vectorized zero-block suppression stage (sparse/padded
+tensors and gradients collapse at memory bandwidth) cascaded with a
+byte-lane shuffle + deflate stage for dense-but-structured arrays.  The
+*lossy* int8-delta codec stays an object-level opt-in over there; the
+wire must not quantize.
+
+Envelope wire format (first byte 0x02 -- ``serialize`` blobs start with
+``PSX1`` and control messages with 0x01, so the three can never collide)::
+
+    0x02 | u32 meta_len | msgpack [[codec_id, orig_len, stored_len], ...]
+         | frame bodies back-to-back
+
+Frames the probe declined ride the envelope unchanged (``codec_id`` 0)
+and decode as zero-copy views over the received buffer.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import zlib
+from typing import Any, Iterable, Sequence
+
+import msgpack
+import numpy as np
+
+__all__ = [
+    "COMPRESS_PREFIX",
+    "LINK_INPROC",
+    "LINK_PROCESS",
+    "LINK_SHM",
+    "LINK_TCP",
+    "NEVER_COMPRESS_LINKS",
+    "Codec",
+    "TransferLedger",
+    "TransferPolicy",
+    "available_codecs",
+    "compress_frames",
+    "decompress_frames",
+    "is_compressed",
+    "resolve_codec",
+]
+
+#: Envelope marker byte (see module docstring for the collision argument).
+COMPRESS_PREFIX = b"\x02"
+
+#: Link classes the policy decides over.  ``inproc`` and ``same-host-shm``
+#: are the PR 5 zero-copy paths: compressing them would *add* a copy to
+#: paths whose whole point is zero, so they are hard-wired to ``none``.
+LINK_INPROC = "inproc"
+LINK_SHM = "same-host-shm"
+LINK_PROCESS = "cross-process"
+LINK_TCP = "tcp"
+
+NEVER_COMPRESS_LINKS = frozenset({LINK_INPROC, LINK_SHM})
+
+#: Probe sample geometry: first + middle + last windows of this many bytes.
+_SAMPLE_WINDOW = 4096
+
+#: Byte-histogram entropy (bits/byte) above which a frame is presumed
+#: incompressible and the (costlier) trial encodes are skipped entirely.
+#: True random bytes measure ~7.97+ on a 12 KiB sample; structured float
+#: payloads (whose histograms look busy but whose *lanes* compress) stay
+#: well below it.
+_ENTROPY_BAIL_BITS = 7.9
+
+#: Zero-block suppression granularity for the cascade codec.
+_ZB_BLOCK = 4096
+
+
+def _as_byte_view(frame: Any) -> memoryview:
+    view = frame if isinstance(frame, memoryview) else memoryview(frame)
+    if view.ndim != 1 or view.format != "B":
+        view = view.cast("B") if view.contiguous else memoryview(bytes(view))
+    return view
+
+
+# -- codecs --------------------------------------------------------------------
+
+
+class Codec:
+    """A reversible byte-level frame transform.
+
+    ``encode`` returns the stored form; ``decode(stored, orig_len)`` must
+    return exactly the original bytes.  ``codec_id`` rides the envelope
+    meta so decode is self-describing.
+    """
+
+    codec_id: int = 0
+    name: str = "none"
+
+    def encode(self, view: memoryview) -> bytes:
+        raise NotImplementedError
+
+    def decode(self, stored: memoryview, orig_len: int) -> bytes | memoryview:
+        raise NotImplementedError
+
+
+class _NoneCodec(Codec):
+    codec_id = 0
+    name = "none"
+
+    def encode(self, view: memoryview) -> bytes:
+        return bytes(view)
+
+    def decode(self, stored: memoryview, orig_len: int) -> memoryview:
+        return stored
+
+
+class _ZlibCodec(Codec):
+    """Deflate at level 1: the general-purpose fallback, always available."""
+
+    codec_id = 1
+    name = "zlib"
+
+    def __init__(self, level: int = 1):
+        self.level = int(level)
+
+    def encode(self, view: memoryview) -> bytes:
+        return zlib.compress(view, self.level)
+
+    def decode(self, stored: memoryview, orig_len: int) -> bytes:
+        return zlib.decompress(stored)
+
+
+class _Lz4Codec(Codec):
+    """lz4.frame when the optional package is importable.
+
+    :func:`resolve_codec` substitutes :class:`_ZlibCodec` when it is not,
+    so configs naming ``lz4`` stay valid everywhere -- the envelope records
+    the codec that actually ran, never the one that was asked for.
+    """
+
+    codec_id = 2
+    name = "lz4"
+
+    def __init__(self) -> None:
+        import lz4.frame as _lz4f  # raises ImportError when absent
+
+        self._lz4f = _lz4f
+
+    def encode(self, view: memoryview) -> bytes:
+        return self._lz4f.compress(bytes(view))
+
+    def decode(self, stored: memoryview, orig_len: int) -> bytes:
+        return self._lz4f.decompress(bytes(stored))
+
+
+def _shuffle4(data: np.ndarray) -> np.ndarray:
+    """Stride-4 byte-lane shuffle (lossless permutation): groups the
+    exponent/mantissa byte lanes of packed f32/int32 payloads so deflate
+    sees long same-lane runs.  Bytes past the last full 4-byte word pass
+    through unchanged."""
+    cut = data.size - (data.size % 4)
+    out = np.empty_like(data)
+    out[:cut] = data[:cut].reshape(-1, 4).T.reshape(-1)
+    out[cut:] = data[cut:]
+    return out
+
+
+def _unshuffle4(data: np.ndarray) -> np.ndarray:
+    cut = data.size - (data.size % 4)
+    out = np.empty_like(data)
+    out[:cut] = data[:cut].reshape(4, -1).T.reshape(-1)
+    out[cut:] = data[cut:]
+    return out
+
+
+class _CascadeCodec(Codec):
+    """Zero-block suppression, cascaded with shuffle+deflate when sparsity
+    alone did not pay.
+
+    Stage 1 drops all-zero ``_ZB_BLOCK``-byte blocks behind a packbits
+    bitmap -- pure vectorized numpy, ~memory-bandwidth throughput, and the
+    common shape of float workloads on this data plane (zero-initialized
+    buffers, padded tensors, sparse gradients).  When the surviving bytes
+    are still most of the frame, stage 2 byte-lane-shuffles them and
+    deflates (measurably ahead of plain deflate on dense f32).  A leading
+    flag byte records whether stage 2 ran.
+    """
+
+    codec_id = 3
+    name = "cascade"
+
+    #: Run stage 2 only when stage 1 kept more than this fraction.
+    _STAGE2_KEEP_FRACTION = 0.5
+
+    def __init__(self, level: int = 1):
+        self.level = int(level)
+
+    def encode(self, view: memoryview) -> bytes:
+        data = np.frombuffer(view, dtype=np.uint8)
+        nfull = data.size // _ZB_BLOCK
+        if nfull:
+            blocks = data[: nfull * _ZB_BLOCK].reshape(nfull, _ZB_BLOCK)
+            mask = blocks.any(axis=1)
+            bitmap = np.packbits(mask).tobytes()
+            kept = blocks[mask].reshape(-1)
+        else:
+            bitmap = b""
+            kept = data[:0]
+        tail = data[nfull * _ZB_BLOCK :]
+        body = np.concatenate([kept, tail]) if tail.size or kept.size else kept
+        if body.size > self._STAGE2_KEEP_FRACTION * max(data.size, 1):
+            packed = zlib.compress(_shuffle4(body).tobytes(), self.level)
+            if len(packed) < body.size:
+                return b"\x01" + bitmap + packed
+        return b"\x00" + bitmap + body.tobytes()
+
+    def decode(self, stored: memoryview, orig_len: int) -> bytes:
+        flag = stored[0]
+        nfull = orig_len // _ZB_BLOCK
+        bitmap_len = (nfull + 7) // 8
+        bitmap = np.frombuffer(stored[1 : 1 + bitmap_len], dtype=np.uint8)
+        body = stored[1 + bitmap_len :]
+        if flag:
+            data = _unshuffle4(
+                np.frombuffer(zlib.decompress(body), dtype=np.uint8)
+            )
+        else:
+            data = np.frombuffer(body, dtype=np.uint8)
+        out = np.zeros(orig_len, dtype=np.uint8)
+        if nfull:
+            mask = np.unpackbits(bitmap, count=nfull).astype(bool)
+            kept_len = int(mask.sum()) * _ZB_BLOCK
+            out[: nfull * _ZB_BLOCK].reshape(nfull, _ZB_BLOCK)[mask] = data[
+                :kept_len
+            ].reshape(-1, _ZB_BLOCK)
+        else:
+            kept_len = 0
+        tail = data[kept_len:]
+        if tail.size:
+            out[nfull * _ZB_BLOCK :] = tail
+        return out.data  # the view keeps the array's buffer alive
+
+
+# -- registry --------------------------------------------------------------------
+
+_NONE = _NoneCodec()
+
+
+def _build_registry() -> dict[str, Codec]:
+    registry: dict[str, Codec] = {
+        "none": _NONE,
+        "zlib": _ZlibCodec(),
+        "cascade": _CascadeCodec(),
+    }
+    try:
+        registry["lz4"] = _Lz4Codec()
+    except ImportError:
+        # The zlib fallback keeps lz4-naming configs valid without the
+        # optional dependency; encoded frames record zlib's codec_id, so
+        # peers decode correctly regardless of what either side installed.
+        registry["lz4"] = registry["zlib"]
+    return registry
+
+
+_REGISTRY = _build_registry()
+_BY_ID: dict[int, Codec] = {}
+for _codec in _REGISTRY.values():
+    _BY_ID.setdefault(_codec.codec_id, _codec)
+_BY_ID.setdefault(_Lz4Codec.codec_id, _REGISTRY["zlib"])  # lz4 absent here
+
+
+def available_codecs() -> list[str]:
+    """Registered codec names (``lz4`` is always nameable; see fallback)."""
+    return sorted(_REGISTRY)
+
+
+def resolve_codec(name: str) -> Codec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown codec {name!r} (available: {available_codecs()})"
+        ) from None
+
+
+def _codec_by_id(codec_id: int) -> Codec:
+    try:
+        return _BY_ID[codec_id]
+    except KeyError:
+        raise ValueError(f"envelope names unknown codec id {codec_id}") from None
+
+
+# -- decision probe --------------------------------------------------------------
+
+
+def _sample(view: memoryview) -> memoryview | bytes:
+    """First + middle + last ``_SAMPLE_WINDOW`` bytes (the whole frame when
+    it is smaller than three windows)."""
+    n = view.nbytes
+    if n <= 3 * _SAMPLE_WINDOW:
+        return view
+    mid = (n // 2) & ~3  # word-aligned so float lanes keep their phase
+    return (
+        bytes(view[:_SAMPLE_WINDOW])
+        + bytes(view[mid : mid + _SAMPLE_WINDOW])
+        + bytes(view[n - _SAMPLE_WINDOW :])
+    )
+
+
+def _byte_entropy_bits(sample: memoryview | bytes) -> float:
+    counts = np.bincount(np.frombuffer(sample, dtype=np.uint8), minlength=256)
+    total = counts.sum()
+    if total == 0:
+        return 0.0
+    p = counts[counts > 0] / total
+    return float(-(p * np.log2(p)).sum())
+
+
+class TransferPolicy:
+    """Per-frame compression verdicts for one link's byte path.
+
+    ``compression`` is ``"auto"`` (probe and pick), ``"off"``, or a codec
+    name to force (still subject to the size threshold and the never-
+    compress links).  The probe is deliberately cheap: a size gate, a byte-
+    entropy bail-out on a 3x4 KiB sample, then trial encodes of the same
+    sample with the candidate codecs -- a frame compresses only when its
+    best sample ratio clears ``probe_ratio``.
+    """
+
+    def __init__(
+        self,
+        compression: str = "auto",
+        *,
+        min_frame_bytes: int = 64 * 1024,
+        probe_ratio: float = 0.9,
+        spill_compression: str | None = None,
+        level: int = 1,
+    ):
+        if compression not in ("auto", "off") and compression not in _REGISTRY:
+            raise ValueError(
+                f"compression must be 'auto', 'off', or one of "
+                f"{available_codecs()}, got {compression!r}"
+            )
+        if spill_compression is not None and spill_compression not in _REGISTRY:
+            raise ValueError(
+                f"spill_compression must be None or one of "
+                f"{available_codecs()}, got {spill_compression!r}"
+            )
+        self.compression = compression
+        self.min_frame_bytes = int(min_frame_bytes)
+        self.probe_ratio = float(probe_ratio)
+        self.spill_compression = spill_compression
+        self.level = int(level)
+        self._general = resolve_codec("lz4")  # zlib when lz4 is absent
+        self._cascade = resolve_codec("cascade")
+
+    @classmethod
+    def from_config(cls, config: Any) -> "TransferPolicy":
+        """Accept a policy, its wire dict (``TransferSpec.to_dict()``), a
+        bare mode string, or ``None`` (the adaptive default)."""
+        if isinstance(config, TransferPolicy):
+            return config
+        if config is None:
+            return DEFAULT_POLICY
+        if isinstance(config, str):
+            return cls(config)
+        if hasattr(config, "to_dict"):
+            config = config.to_dict()
+        return cls(
+            config.get("compression", "auto"),
+            min_frame_bytes=config.get("min_frame_bytes", 64 * 1024),
+            probe_ratio=config.get("probe_ratio", 0.9),
+            spill_compression=config.get("spill_compression"),
+            level=config.get("level", 1),
+        )
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "compression": self.compression,
+            "min_frame_bytes": self.min_frame_bytes,
+            "probe_ratio": self.probe_ratio,
+            "spill_compression": self.spill_compression,
+            "level": self.level,
+        }
+
+    @property
+    def spill_codec(self) -> Codec | None:
+        if self.spill_compression is None or self.spill_compression == "none":
+            return None
+        return resolve_codec(self.spill_compression)
+
+    def select(self, view: memoryview, link_class: str) -> Codec | None:
+        """The per-frame verdict: a codec, or ``None`` to ship raw."""
+        if self.compression == "off" or link_class in NEVER_COMPRESS_LINKS:
+            return None
+        if view.nbytes < self.min_frame_bytes:
+            return None
+        if self.compression != "auto":
+            return resolve_codec(self.compression)
+        sample = _sample(view)
+        if _byte_entropy_bits(sample) > _ENTROPY_BAIL_BITS:
+            return None  # random-looking bytes: not worth a trial encode
+        best: Codec | None = None
+        best_ratio = self.probe_ratio
+        for codec in (self._cascade, self._general):
+            ratio = len(codec.encode(_as_byte_view(sample))) / max(
+                len(sample), 1
+            )
+            if ratio < best_ratio:
+                best, best_ratio = codec, ratio
+            if best_ratio < 0.5:
+                # Cascade runs ~10x faster than deflate: once it clearly
+                # pays on the sample, a marginally better deflate ratio
+                # cannot buy back the codec time on the full frame.
+                break
+        return best
+
+
+#: Module default: adaptive compression with stock thresholds.  Paths
+#: created without an explicit ``TransferSpec`` share this instance.
+DEFAULT_POLICY = TransferPolicy()
+
+
+# -- envelope --------------------------------------------------------------------
+
+
+def is_compressed(blob: Any) -> bool:
+    """Whether an encoded blob (or frame list) is a compression envelope."""
+    if blob is None:
+        return False
+    frames = blob if isinstance(blob, (list, tuple)) else [blob]
+    for frame in frames:
+        view = _as_byte_view(frame)
+        if view.nbytes == 0:
+            continue
+        return bytes(view[:1]) == COMPRESS_PREFIX
+    return False
+
+
+def compress_frames(
+    frames: Sequence[Any],
+    *,
+    policy: TransferPolicy,
+    link_class: str,
+) -> tuple[list[Any], dict[str, int]] | None:
+    """Wrap ``frames`` in a compression envelope, or ``None`` when the
+    policy declined every frame (caller ships the original frames raw).
+
+    Returns ``(envelope_frames, stats)`` with ``stats`` carrying
+    ``logical_bytes`` / ``wire_bytes`` / ``compressed_bytes`` (logical
+    bytes that traveled encoded) / ``compress_ns``.  Declined frames ride
+    the envelope as zero-copy views; only encoded frames own new bytes.
+    """
+    views = [_as_byte_view(f) for f in frames]
+    if any(v.nbytes and bytes(v[:1]) == COMPRESS_PREFIX for v in views[:1]):
+        return None  # already an envelope: never double-wrap
+    t0 = time.perf_counter_ns()
+    entries: list[list[int]] = []
+    out: list[Any] = []
+    compressed_logical = 0
+    for view in views:
+        codec = policy.select(view, link_class)
+        if codec is None or codec.codec_id == 0:
+            entries.append([0, view.nbytes, view.nbytes])
+            out.append(view)
+            continue
+        stored = codec.encode(view)
+        if len(stored) >= view.nbytes:
+            # The probe liked the sample but the full frame did not pay:
+            # ship raw rather than grow the wire.
+            entries.append([0, view.nbytes, view.nbytes])
+            out.append(view)
+            continue
+        entries.append([codec.codec_id, view.nbytes, len(stored)])
+        out.append(stored)
+        compressed_logical += view.nbytes
+    if compressed_logical == 0:
+        return None
+    meta = msgpack.packb(entries, use_bin_type=True)
+    header = COMPRESS_PREFIX + len(meta).to_bytes(4, "little") + meta
+    envelope = [header] + out
+    logical = sum(v.nbytes for v in views)
+    wire = len(header) + sum(_as_byte_view(f).nbytes for f in out)
+    return envelope, {
+        "logical_bytes": logical,
+        "wire_bytes": wire,
+        "compressed_bytes": compressed_logical,
+        "compress_ns": time.perf_counter_ns() - t0,
+    }
+
+
+def _parse_contiguous(view: memoryview) -> list[memoryview | bytes]:
+    meta_len = int.from_bytes(view[1:5], "little")
+    entries = msgpack.unpackb(bytes(view[5 : 5 + meta_len]), raw=False)
+    frames: list[memoryview | bytes] = []
+    offset = 5 + meta_len
+    for codec_id, orig_len, stored_len in entries:
+        stored = view[offset : offset + stored_len]
+        if stored.nbytes != stored_len:
+            raise ValueError("truncated compression envelope")
+        offset += stored_len
+        if codec_id == 0:
+            frames.append(stored)  # zero-copy view over the received buffer
+        else:
+            decoded = _codec_by_id(codec_id).decode(stored, orig_len)
+            if len(decoded) != orig_len:
+                raise ValueError(
+                    f"codec {codec_id} restored {len(decoded)} bytes, "
+                    f"expected {orig_len}"
+                )
+            frames.append(decoded)
+    return frames
+
+
+def decompress_frames(blob: Any) -> list[memoryview | bytes]:
+    """Restore the original frame list from an envelope.
+
+    Accepts the contiguous received buffer (tcp/mmap/kv) *or* the frame
+    list exactly as :func:`compress_frames` emitted it (a store that
+    retained frames).  Raw (codec 0) frames come back as zero-copy views.
+    """
+    if isinstance(blob, (list, tuple)):
+        views = [_as_byte_view(f) for f in blob]
+        header = views[0]
+        meta_len = int.from_bytes(header[1:5], "little")
+        if header.nbytes == 5 + meta_len and len(views) > 1:
+            # Frame-preserved envelope: bodies are the subsequent frames.
+            entries = msgpack.unpackb(bytes(header[5:]), raw=False)
+            bodies = [v for v in views[1:] if v.nbytes]
+            live = [e for e in entries if e[2]]
+            if len(live) == len(bodies):
+                frames: list[memoryview | bytes] = []
+                body_i = 0
+                for codec_id, orig_len, stored_len in entries:
+                    if stored_len == 0:
+                        frames.append(memoryview(b""))
+                        continue
+                    stored = bodies[body_i]
+                    body_i += 1
+                    if codec_id == 0:
+                        frames.append(stored)
+                    else:
+                        decoded = _codec_by_id(codec_id).decode(stored, orig_len)
+                        if len(decoded) != orig_len:
+                            raise ValueError("corrupt compression envelope")
+                        frames.append(decoded)
+                return frames
+        # Scattered unexpectedly (re-chunked in a store): join and parse.
+        blob = b"".join(bytes(v) for v in views)
+    view = _as_byte_view(blob)
+    if view.nbytes == 0 or bytes(view[:1]) != COMPRESS_PREFIX:
+        raise ValueError("not a compression envelope")
+    return _parse_contiguous(view)
+
+
+# -- ledger ----------------------------------------------------------------------
+
+
+class TransferLedger:
+    """Per-link-class wire accounting: the auditable half of the tentpole.
+
+    Extends the spirit of :class:`~repro.core.serialize.CopyCounter` (which
+    counts memcpys of *logical* bytes) down to the wire: for every link
+    class it tracks logical bytes (what the payload weighs), wire bytes
+    (what actually crossed), the logical bytes that traveled encoded, and
+    codec time -- enough to derive ratio and codec throughput per link.
+    Snapshots ride worker heartbeats into ``worker_stats()``.
+    """
+
+    _FIELDS = (
+        "transfers",
+        "logical_bytes",
+        "wire_bytes",
+        "compressed_bytes",
+        "compress_ns",
+        "decompress_ns",
+    )
+
+    def __init__(self) -> None:
+        self._links: dict[str, dict[str, int]] = {}
+        self._lock = threading.Lock()
+
+    def record(
+        self,
+        link_class: str,
+        *,
+        logical_bytes: int,
+        wire_bytes: int,
+        compressed_bytes: int = 0,
+        compress_ns: int = 0,
+        decompress_ns: int = 0,
+    ) -> None:
+        with self._lock:
+            row = self._links.get(link_class)
+            if row is None:
+                row = self._links[link_class] = dict.fromkeys(self._FIELDS, 0)
+            row["transfers"] += 1
+            row["logical_bytes"] += int(logical_bytes)
+            row["wire_bytes"] += int(wire_bytes)
+            row["compressed_bytes"] += int(compressed_bytes)
+            row["compress_ns"] += int(compress_ns)
+            row["decompress_ns"] += int(decompress_ns)
+
+    @staticmethod
+    def _derive(row: dict[str, int]) -> dict[str, Any]:
+        out: dict[str, Any] = dict(row)
+        out["ratio"] = row["logical_bytes"] / max(row["wire_bytes"], 1)
+        codec_ns = row["compress_ns"] + row["decompress_ns"]
+        out["codec_mib_s"] = (
+            (row["logical_bytes"] / (1 << 20)) / (codec_ns / 1e9)
+            if codec_ns
+            else 0.0
+        )
+        return out
+
+    def snapshot(self) -> dict[str, dict[str, Any]]:
+        with self._lock:
+            return {link: self._derive(row) for link, row in self._links.items()}
+
+    @staticmethod
+    def merge(snapshots: Iterable[dict[str, dict[str, Any]]]) -> dict[str, dict[str, Any]]:
+        """Aggregate per-worker snapshots into one cluster-wide view."""
+        totals: dict[str, dict[str, int]] = {}
+        for snap in snapshots:
+            for link, row in (snap or {}).items():
+                agg = totals.setdefault(
+                    link, dict.fromkeys(TransferLedger._FIELDS, 0)
+                )
+                for f in TransferLedger._FIELDS:
+                    agg[f] += int(row.get(f, 0))
+        return {link: TransferLedger._derive(row) for link, row in totals.items()}

@@ -115,18 +115,31 @@ class CompressedDeltaCodec:
         self.block = block
 
     def encode(self, state: Pytree) -> Pytree:
+        # The dtype token records the *leaf's* dtype (bf16/f16 included,
+        # via the same ml_dtypes-aware token the serializer uses), so
+        # decode restores the original precision instead of widening every
+        # consumer to float32.
+        from repro.core.serialize import _dtype_token
+
         def one(x, b):
             d = np.asarray(x, np.float32) - b
             q, s = quantize_int8(jnp.asarray(d), self.block)
-            return (np.asarray(q), np.asarray(s), x.shape, np.dtype(np.float32).str)
+            return (
+                np.asarray(q),
+                np.asarray(s),
+                x.shape,
+                _dtype_token(np.dtype(x.dtype)),
+            )
 
         return jax.tree.map(one, state, self.base)
 
     def decode(self, payload: Pytree) -> Pytree:
+        from repro.core.serialize import _np_dtype
+
         def one(t, b):
-            q, s, shape, _ = t
+            q, s, shape, dtype_token = t
             d = np.asarray(dequantize_int8(jnp.asarray(q), jnp.asarray(s), shape))
-            return b + d
+            return (b + d).astype(_np_dtype(dtype_token))
 
         return jax.tree.map(
             one, payload, self.base,

@@ -25,6 +25,7 @@ from concurrent.futures import Future
 from typing import Any, Callable, Iterable, Sequence
 
 from repro.core._deprecation import warn_legacy
+from repro.core.compress import TransferLedger
 from repro.core.executor import _proxy_result_task
 from repro.core.policy import Policy, SizePolicy
 from repro.core.proxy import is_proxy
@@ -364,6 +365,7 @@ class LocalCluster:
         inline_result_max: int = 64 * 1024,
         worker_cache_bytes: int = 256 * 1024 * 1024,
         memory: Any = None,  # api.MemorySpec | wire dict | None
+        transfer: Any = None,  # api.TransferSpec | wire dict | None
         worker_kind: str = "thread",  # thread | process
         transport: str | None = None,  # None | inproc | tcp
     ):
@@ -415,6 +417,14 @@ class LocalCluster:
                 "the memory connector is process-local and cannot back "
                 "process workers; use a file, shm, or kv store"
             )
+        # TransferSpec travels as its wire dict (like MemorySpec) so the
+        # runtime never imports api.  It configures compression on every
+        # byte path: comm links, store publishes/fetches, and spill disks.
+        if transfer is not None and hasattr(transfer, "to_dict"):
+            transfer = transfer.to_dict()
+        self.transfer_config = dict(transfer) if transfer is not None else None
+        if self.transfer_config is not None:
+            store_config = {**store_config, "transfer": self.transfer_config}
         self.data_plane = ResultStore(store_config)
         # Process workers never register on the peer mesh (it cannot cross
         # a process boundary -- deps move through the shared store tier),
@@ -448,7 +458,9 @@ class LocalCluster:
             address = (
                 "tcp://127.0.0.1:0" if transport == "tcp" else f"inproc://cluster-{uid}"
             )
-            self._server = CommServer(self.scheduler, address)
+            self._server = CommServer(
+                self.scheduler, address, transfer=self.transfer_config
+            )
         self._comms: dict[str, Any] = {}
         self.workers: dict[str, Any] = {}  # ThreadWorker | ProcessWorker
         for _ in range(n_workers):
@@ -464,6 +476,7 @@ class LocalCluster:
                 "store": self.data_plane.config(),
                 "cache_bytes": self.worker_cache_bytes,
                 "memory": self.memory_config,
+                "transfer": self.transfer_config,
                 "inline_result_max": self.scheduler.inline_result_max,
             }
             w = ProcessWorker(worker_id, self._server.address, cfg).start()
@@ -480,6 +493,7 @@ class LocalCluster:
                 transfers=self.transfers,
                 cache_bytes=self.worker_cache_bytes,
                 memory=self.memory_config,
+                transfer=self.transfer_config,
                 inline_result_max=self.scheduler.inline_result_max,
             )
             self._comms[worker_id] = comm
@@ -492,6 +506,7 @@ class LocalCluster:
                 transfers=self.transfers,
                 cache_bytes=self.worker_cache_bytes,
                 memory=self.memory_config,
+                transfer=self.transfer_config,
             ).start()
         self.workers[worker_id] = w
         return worker_id
@@ -562,6 +577,15 @@ class LocalCluster:
             row["outstanding_bytes"] = ws.outstanding_bytes if ws is not None else 0
             out[worker_id] = row
         return out
+
+    def transfer_summary(self) -> dict[str, dict[str, Any]]:
+        """Cluster-wide transfer ledger: per-link-class logical vs wire
+        bytes, compression ratio, and codec throughput, merged across
+        every worker's ``transfer_ledger`` row (live for thread workers,
+        last-heartbeat for process workers)."""
+        return TransferLedger.merge(
+            row.get("transfer_ledger") or {} for row in self.worker_stats().values()
+        )
 
     def close(self) -> None:
         # In-process workers stop directly; the scheduler's shutdown

@@ -43,6 +43,7 @@ from typing import Any, Callable
 
 import msgpack
 
+from repro.core.compress import decompress_frames, is_compressed
 from repro.core.serialize import deserialize, serialize
 from repro.runtime import messages as M
 
@@ -83,7 +84,7 @@ class ChannelClosed(Exception):
 
 
 #: In-band close sentinel for queue/pipe transports (never a valid blob:
-#: real blobs start with 0x01 or "P").
+#: real blobs start with 0x01, 0x02, or "P").
 _CLOSE = b"\x00__CLOSE__"
 
 
@@ -169,11 +170,19 @@ def encode_message_frames(message: Any) -> list[Any]:
 
 
 def decode_message(blob: Any) -> Any:
-    """Inverse of :func:`encode_message`; accepts bytes/bytearray/memoryview."""
+    """Inverse of :func:`encode_message`; accepts bytes/bytearray/memoryview.
+
+    Also accepts a compression envelope (first byte 0x02): a transport may
+    have compressed eligible frames on send, and a server may forward the
+    still-compressed blob into a mailbox -- decode is self-describing, so
+    the envelope unwraps wherever the message is finally read.
+    """
     if is_control(blob):
         body = blob[1:] if isinstance(blob, (bytes, bytearray)) else bytes(blob[1:])
         tag, payload = msgpack.unpackb(body, raw=False, strict_map_key=False)
         return tag, payload
+    if is_compressed(blob):
+        return deserialize(decompress_frames(blob))
     return deserialize(blob)
 
 

@@ -177,6 +177,10 @@ class InprocListener(Listener):
 
 
 def _listen(rest: str, handler: Callable[[Comm], None], **kwargs: Any) -> Listener:
+    # In-process queues pass blobs by reference: the inproc link class is
+    # hard-wired to no compression, so transfer/ledger knobs are inert here.
+    kwargs.pop("transfer", None)
+    kwargs.pop("ledger", None)
     return InprocListener(rest, handler, **kwargs)
 
 

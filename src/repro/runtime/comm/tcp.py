@@ -24,11 +24,21 @@ import threading
 import time
 from typing import Any, Callable
 
+from repro.core.compress import (
+    LINK_TCP,
+    TransferLedger,
+    TransferPolicy,
+    compress_frames,
+    decompress_frames,
+    is_compressed,
+)
+from repro.core.serialize import deserialize
 from repro.runtime.comm.core import (
     WIRE_HEADER,
     ChannelClosed,
     Comm,
     Listener,
+    decode_message,
     encode_message_frames,
     is_control,
     register_transport,
@@ -49,11 +59,26 @@ def _as_view(frame: Any) -> memoryview:
 
 
 class TCPComm(Comm):
-    def __init__(self, sock: socket.socket, name: str = ""):
+    """``transfer`` configures the adaptive compression policy for this
+    link (``None`` = the stock adaptive default: control messages and
+    sub-threshold frames untouched, eligible frames probed per frame).
+    ``ledger`` (a :class:`TransferLedger`) records logical-vs-wire bytes
+    and codec time for every message on the ``tcp`` link class."""
+
+    def __init__(
+        self,
+        sock: socket.socket,
+        name: str = "",
+        *,
+        transfer: Any = None,
+        ledger: TransferLedger | None = None,
+    ):
         super().__init__(name)
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         sock.settimeout(None)
         self._sock = sock
+        self._policy = TransferPolicy.from_config(transfer)
+        self._ledger = ledger
         self._send_lock = threading.Lock()
         self._recv_lock = threading.Lock()
         self._closed = threading.Event()
@@ -66,8 +91,19 @@ class TCPComm(Comm):
 
     def send(self, message: Any) -> int:
         frames = [_as_view(f) for f in encode_message_frames(message)]
-        total = sum(v.nbytes for v in frames)
+        logical = sum(v.nbytes for v in frames)
         fast = bool(frames) and is_control(frames[0])
+        comp_stats = None
+        if not fast:
+            # Adaptive per-frame compression: the msgpack control fast path
+            # and sub-threshold frames never enter the probe.  Compressed
+            # messages ship a self-describing envelope; the concatenation
+            # discipline (and writev below) is unchanged.
+            packed = compress_frames(frames, policy=self._policy, link_class=LINK_TCP)
+            if packed is not None:
+                envelope, comp_stats = packed
+                frames = [_as_view(f) for f in envelope]
+        total = sum(v.nbytes for v in frames)
         header = WIRE_HEADER.pack(total)
         views = [memoryview(header)] + [v for v in frames if v.nbytes]
         with self._send_lock:
@@ -79,6 +115,14 @@ class TCPComm(Comm):
                 self._closed.set()
                 raise ChannelClosed(f"{self.name}: send failed") from None
         self.counter.add_sent(total, fast=fast)
+        if self._ledger is not None:
+            self._ledger.record(
+                LINK_TCP,
+                logical_bytes=logical,
+                wire_bytes=total,
+                compressed_bytes=comp_stats["compressed_bytes"] if comp_stats else 0,
+                compress_ns=comp_stats["compress_ns"] if comp_stats else 0,
+            )
         return total
 
     def _writev(self, views: list[memoryview]) -> None:
@@ -105,6 +149,31 @@ class TCPComm(Comm):
                 self._read_into(blob, timeout=None, first=False)
         self.counter.add_recv(total, fast=total > 0 and is_control(blob))
         return blob
+
+    def recv(self, timeout: float | None = None) -> Any:
+        """Decode with receive-side ledger accounting: a compressed
+        envelope is timed through ``decompress_frames`` and recorded as
+        wire-vs-logical bytes on the ``tcp`` link class."""
+        blob = self.recv_blob(timeout)
+        if self._ledger is None:
+            return decode_message(blob)
+        if is_compressed(blob):
+            t0 = time.perf_counter_ns()
+            frames = decompress_frames(blob)
+            decompress_ns = time.perf_counter_ns() - t0
+            logical = sum(
+                f.nbytes if isinstance(f, memoryview) else len(f) for f in frames
+            )
+            self._ledger.record(
+                LINK_TCP,
+                logical_bytes=logical,
+                wire_bytes=len(blob),
+                compressed_bytes=logical,
+                decompress_ns=decompress_ns,
+            )
+            return deserialize(frames)
+        self._ledger.record(LINK_TCP, logical_bytes=len(blob), wire_bytes=len(blob))
+        return decode_message(blob)
 
     def _read_into(self, buf: bytearray, timeout: float | None, first: bool) -> None:
         """Fill ``buf`` completely.  ``first`` marks the wait for a
@@ -168,12 +237,16 @@ class TCPListener(Listener):
         rest: str,
         handler: Callable[[Comm], None],
         backlog: int = 128,
+        transfer: Any = None,
+        ledger: TransferLedger | None = None,
     ):
         host, port = _split_host_port(rest)
         self._sock = socket.create_server((host, port), backlog=backlog)
         bound_host, bound_port = self._sock.getsockname()[:2]
         self.address = f"tcp://{bound_host}:{bound_port}"
         self._handler = handler
+        self._transfer = transfer
+        self._ledger = ledger
         self._stopped = threading.Event()
         self._thread = threading.Thread(
             target=self._accept_loop, daemon=True, name=f"tcp-listen-{bound_port}"
@@ -186,7 +259,12 @@ class TCPListener(Listener):
                 conn, addr = self._sock.accept()
             except OSError:
                 return  # listener socket closed
-            comm = TCPComm(conn, name=f"tcp://{addr[0]}:{addr[1]}")
+            comm = TCPComm(
+                conn,
+                name=f"tcp://{addr[0]}:{addr[1]}",
+                transfer=self._transfer,
+                ledger=self._ledger,
+            )
             try:
                 self._handler(comm)
             except Exception:
@@ -208,7 +286,12 @@ def _listen(rest: str, handler: Callable[[Comm], None], **kwargs: Any) -> Listen
 def _connect(rest: str, timeout: float = 5.0, **kwargs: Any) -> Comm:
     host, port = _split_host_port(rest)
     sock = socket.create_connection((host, port), timeout=timeout)
-    return TCPComm(sock, name=f"tcp://{host}:{port}")
+    return TCPComm(
+        sock,
+        name=f"tcp://{host}:{port}",
+        transfer=kwargs.get("transfer"),
+        ledger=kwargs.get("ledger"),
+    )
 
 
 register_transport("tcp", _listen, _connect)

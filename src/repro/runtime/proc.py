@@ -59,13 +59,22 @@ class CommServer:
     heartbeat timeout reaps the worker and reschedules its lineage.
     """
 
-    def __init__(self, scheduler: Any, address: str = "tcp://127.0.0.1:0"):
+    def __init__(
+        self,
+        scheduler: Any,
+        address: str = "tcp://127.0.0.1:0",
+        *,
+        transfer: Any = None,
+    ):
         self.scheduler = scheduler
         self._comms: dict[str, Comm] = {}
         self._threads: list[threading.Thread] = []
         self._lock = threading.Lock()
         self._closing = threading.Event()
-        self.listener = listen(address, self._on_connection)
+        # ``transfer`` sets the compression policy for scheduler->worker
+        # sends on accepted connections (worker->scheduler blobs forward
+        # into the inbox still compressed; decode is self-describing).
+        self.listener = listen(address, self._on_connection, transfer=transfer)
 
     @property
     def address(self) -> str:
@@ -161,6 +170,7 @@ def start_comm_worker(
     transfers: Any = None,
     cache_bytes: int = 256 * 1024 * 1024,
     memory: Any = None,
+    transfer: Any = None,
     inline_result_max: int = 64 * 1024,
     connect_timeout: float = 30.0,
 ) -> tuple[Any, Comm]:
@@ -169,12 +179,18 @@ def start_comm_worker(
     Returns ``(worker, comm)``; the caller owns the worker's lifetime
     (``worker._stop.wait()`` then ``worker.stop()``).  Pass either a live
     ``result_store`` (same process) or a ``store_config`` to attach to the
-    cluster's shared store tier from another process.
+    cluster's shared store tier from another process.  ``transfer`` (the
+    ``TransferSpec`` wire dict) configures compression on both this
+    worker's comm link and its store byte paths; one shared
+    :class:`TransferLedger` covers both, so the heartbeat snapshot is the
+    whole per-worker wire story.
     """
+    from repro.core.compress import TransferLedger
     from repro.runtime.transfer import ResultStore
     from repro.runtime.worker import ThreadWorker
 
-    comm = connect(address, timeout=connect_timeout)
+    ledger = TransferLedger()
+    comm = connect(address, timeout=connect_timeout, transfer=transfer, ledger=ledger)
     comm.name = worker_id
     link = SchedulerLink(comm, inline_result_max=inline_result_max)
     if result_store is None and store_config is not None:
@@ -187,6 +203,8 @@ def start_comm_worker(
         transfers=transfers,
         cache_bytes=cache_bytes,
         memory=memory,
+        transfer=transfer,
+        ledger=ledger,
     )
     worker.start()
     threading.Thread(
@@ -207,6 +225,7 @@ def _worker_main(address: str, worker_id: str, cfg: dict[str, Any]) -> None:
         store_config=cfg.get("store"),
         cache_bytes=cfg.get("cache_bytes", 256 * 1024 * 1024),
         memory=cfg.get("memory"),
+        transfer=cfg.get("transfer"),
         inline_result_max=cfg.get("inline_result_max", 64 * 1024),
     )
     try:

@@ -55,10 +55,22 @@ import os
 import shutil
 import tempfile
 import threading
+import time
 import uuid
 from collections import OrderedDict
 from typing import Any, Iterable, Iterator
 
+from repro.core.compress import (
+    LINK_INPROC,
+    LINK_PROCESS,
+    LINK_SHM,
+    NEVER_COMPRESS_LINKS,
+    TransferLedger,
+    TransferPolicy,
+    compress_frames,
+    decompress_frames,
+    is_compressed,
+)
 from repro.core.connectors.base import (
     Key,
     Payload,
@@ -75,6 +87,10 @@ from repro.runtime.comm import ByteCounter
 #: bookkeeping, small enough that an in-flight transfer's resident slice
 #: stays far below any realistic worker memory budget.
 DEFAULT_CHUNK_BYTES = 4 * 1024 * 1024
+
+#: Spill-tier compression skips frames below this: envelope overhead
+#: dominates tiny frames and the disk write is already cheap.
+_ZB_SPILL_MIN = 4096
 
 
 class MissingDependencyError(RuntimeError):
@@ -263,15 +279,36 @@ class SpillCache(BlobCache):
     ``mmap_restores`` / ``spilled_bytes``) so heartbeats and
     ``worker_stats()`` can report real memory state.  ``dropped`` stays 0
     unless disk writes fail.
+
+    ``compress`` names a frame codec for the disk tier: demotes write a
+    compression envelope, restores and range reads decode it.  All public
+    accounting (``nbytes_of`` / ``spilled_bytes`` / promotion budgeting)
+    stays in *logical* bytes, so the knob trades codec time for disk I/O
+    without changing eviction behavior.
     """
 
-    def __init__(self, max_bytes: int = 256 * 1024 * 1024, spill_dir: str | None = None):
+    def __init__(
+        self,
+        max_bytes: int = 256 * 1024 * 1024,
+        spill_dir: str | None = None,
+        compress: str | None = None,
+    ):
         super().__init__(max_bytes)
         self._owns_dir = spill_dir is None
         self.spill_dir = spill_dir or tempfile.mkdtemp(prefix="repro-spill-")
         os.makedirs(self.spill_dir, exist_ok=True)
-        self._disk: dict[str, int] = {}  # key -> nbytes on disk
+        self._disk: dict[str, int] = {}  # key -> *logical* nbytes on disk
         self._mmaps: dict[str, memoryview] = {}  # key -> attached spill mapping
+        self._spill_policy = (
+            None
+            if compress in (None, "none")
+            else TransferPolicy(compress, min_frame_bytes=_ZB_SPILL_MIN)
+        )
+        self._disk_compressed: set[str] = set()
+        #: Decoded-form memo for exactly one compressed spill entry: peer
+        #: chunk loops re-read the same key many times in a row, and
+        #: decoding the envelope per range read would be quadratic.
+        self._decoded: tuple[str, FrameBundle] | None = None
         self._spilled_bytes = 0
         self._spill_count = 0
         self._restore_count = 0
@@ -291,16 +328,29 @@ class SpillCache(BlobCache):
     # consumer reads the returned views, outside any cache lock.
 
     def _demote(self, key: str, bundle: FrameBundle) -> bool:
+        frames: Iterable[Any] = bundle.frames
+        compressed = False
+        if self._spill_policy is not None and not is_compressed(bundle.frames):
+            packed = compress_frames(
+                bundle.frames, policy=self._spill_policy, link_class=LINK_PROCESS
+            )
+            if packed is not None:
+                frames = packed[0]
+                compressed = True
         try:
             with open(self._path(key), "wb") as f:
                 # writev-style: frames stream out without a join.
-                for frame in bundle.frames:
+                for frame in frames:
                     f.write(frame)
         except OSError:
             self._dropped += 1
             self._dropped_bytes += bundle.nbytes
             return False
         self._disk[key] = bundle.nbytes
+        if compressed:
+            self._disk_compressed.add(key)
+        else:
+            self._disk_compressed.discard(key)
         self._mmaps.pop(key, None)  # a fresh write invalidates old mappings
         self._spilled_bytes += bundle.nbytes
         self._spill_count += 1
@@ -310,6 +360,9 @@ class SpillCache(BlobCache):
     def _drop_disk(self, key: str) -> None:
         n = self._disk.pop(key, None)
         self._mmaps.pop(key, None)  # live views keep the mapping alive
+        self._disk_compressed.discard(key)
+        if self._decoded is not None and self._decoded[0] == key:
+            self._decoded = None
         if n is not None:
             self._spilled_bytes -= n
             try:
@@ -327,6 +380,18 @@ class SpillCache(BlobCache):
             return None
         self._mmaps[key] = view
         return view
+
+    def _disk_bundle(self, key: str, view: memoryview) -> FrameBundle:
+        """Logical-form bundle for a disk entry (caller holds the lock):
+        decodes the compression envelope when the entry was demoted
+        compressed, memoized for one key at a time."""
+        if key not in self._disk_compressed:
+            return FrameBundle([view])
+        if self._decoded is not None and self._decoded[0] == key:
+            return self._decoded[1]
+        bundle = FrameBundle(decompress_frames(view))
+        self._decoded = (key, bundle)
+        return bundle
 
     def _evict_one(self) -> None:
         key, evicted = self._data.popitem(last=False)
@@ -361,7 +426,7 @@ class SpillCache(BlobCache):
                 # served disk-resident many times but restored once).
                 self._restore_count += 1
                 self._mmap_restores += 1
-            bundle = FrameBundle([view])
+            bundle = self._disk_bundle(key, view)
             if n <= self.max_bytes:
                 # Promote back to the hot tier (demoting others as needed).
                 # The bundle keeps the mapping alive, so dropping the disk
@@ -391,6 +456,10 @@ class SpillCache(BlobCache):
             if view is None:
                 self._drop_disk(key)
                 return None
+            if key in self._disk_compressed:
+                # Ranges are logical-byte offsets: serve them from the
+                # decoded form (memoized, so a chunk loop decodes once).
+                return self._disk_bundle(key, view).read_range(offset, size)
             # mmap-served range: a view over the mapping, no file read.
             return view[offset : offset + size]
 
@@ -580,7 +649,13 @@ class PeerTransfer:
             yield chunk
 
     def fetch(
-        self, worker_id: str, key: str, *, sink: BlobCache | None = None
+        self,
+        worker_id: str,
+        key: str,
+        *,
+        sink: BlobCache | None = None,
+        policy: TransferPolicy | None = None,
+        ledger: TransferLedger | None = None,
     ) -> FrameBundle | None:
         """Fetch ``key``'s serialized bytes directly from a peer's cache.
 
@@ -591,6 +666,12 @@ class PeerTransfer:
         (pre-sized, counted on the sink's :class:`CopyCounter`) and is
         retained via ``sink.put``.  That assembly is the only copy on the
         whole chunked path -- the serving side yields views.
+
+        ``policy`` is consulted per the link class, which for this
+        in-process cache mesh is ``inproc`` -- one of the hard-wired
+        never-compress links (chunks are direct memory reads; a codec
+        would add a copy to both ends).  ``ledger`` records the transfer
+        with wire bytes == logical bytes accordingly.
         """
         with self._lock:
             cache = self._peers.get(worker_id)
@@ -614,6 +695,10 @@ class PeerTransfer:
                     return None
                 copies.add_moved(nbytes)
                 copies.add_copied(nbytes)  # the disk landing
+                if ledger is not None:
+                    ledger.record(
+                        LINK_INPROC, logical_bytes=nbytes, wire_bytes=nbytes
+                    )
                 return sink.get(key)
             buf = memoryview(bytearray(nbytes))
             pos = 0
@@ -631,6 +716,8 @@ class PeerTransfer:
             return None
         copies.add_moved(nbytes)
         copies.add_copied(nbytes)  # the receiver-side assembly
+        if ledger is not None:
+            ledger.record(LINK_INPROC, logical_bytes=nbytes, wire_bytes=nbytes)
         bundle = FrameBundle([buf])
         if sink is not None:
             sink.put(key, bundle)
@@ -661,6 +748,10 @@ class ResultStore:
         self._config = dict(store_config)
         self._lock = threading.Lock()
         self._connector: Any = None
+        #: Default compression policy for publishes through this store
+        #: (``transfer`` key in the store config; per-call ``policy``
+        #: overrides it).  The link class keeps shm/inproc exempt.
+        self._policy = TransferPolicy.from_config(store_config.get("transfer"))
 
     @property
     def name(self) -> str:
@@ -685,24 +776,76 @@ class ResultStore:
         dependents fetch by ref *before* trying the chunked peer channel."""
         return has_zero_copy_capability(self.connector)
 
-    def publish(self, task_key: str, blob: Payload) -> str:
+    @property
+    def link_class(self) -> str:
+        """The compression link class of this store's byte path: shm
+        connectors are the same-host zero-copy handoff, the in-memory
+        connector passes frames by reference, everything else crosses a
+        process boundary (file/kv/redis)."""
+        if self.zero_copy:
+            return LINK_SHM
+        connector_type = (self._config.get("connector") or {}).get("connector_type")
+        if connector_type == "memory":
+            return LINK_INPROC
+        return LINK_PROCESS
+
+    def publish(
+        self,
+        task_key: str,
+        blob: Payload,
+        *,
+        policy: TransferPolicy | None = None,
+        ledger: TransferLedger | None = None,
+    ) -> str:
         """Store a serialized result; returns the ref dependents fetch by.
 
         Frame-native: a ``SerializedObject``/``FrameBundle`` payload passes
         straight through to the connector's writev-style put -- the
-        publish never joins the frames.
+        publish never joins the frames.  On cross-process stores the
+        ``policy`` (defaulting to the store config's) may wrap eligible
+        frames in a compression envelope; ``fetch`` restores it (decode is
+        self-describing).  The shm and in-memory link classes never
+        compress, so the PR 5 zero-copy paths are byte-for-byte unchanged.
         """
         connector = self.connector
+        link = self.link_class
+        payload: Payload = blob
+        logical = payload_nbytes(blob)
+        stored_nbytes = logical
+        comp_stats: dict[str, int] | None = None
+        if link not in NEVER_COMPRESS_LINKS:
+            packed = compress_frames(
+                FrameBundle.of(blob).frames,
+                policy=policy if policy is not None else self._policy,
+                link_class=link,
+            )
+            if packed is not None:
+                envelope, comp_stats = packed
+                payload = FrameBundle(envelope)
+                stored_nbytes = comp_stats["wire_bytes"]
         if has_peer_capability(connector):
             key = connector.put_at(
-                Key(object_id=task_key, size=payload_nbytes(blob)), blob
+                Key(object_id=task_key, size=stored_nbytes), payload
             )
         else:
-            key = connector.put(blob)
+            key = connector.put(payload)
+        if ledger is not None:
+            ledger.record(
+                link,
+                logical_bytes=logical,
+                wire_bytes=stored_nbytes,
+                compressed_bytes=comp_stats["compressed_bytes"] if comp_stats else 0,
+                compress_ns=comp_stats["compress_ns"] if comp_stats else 0,
+            )
         return key.object_id
 
     def fetch(
-        self, ref: str, nbytes: int = -1, copies: CopyCounter | None = None
+        self,
+        ref: str,
+        nbytes: int = -1,
+        copies: CopyCounter | None = None,
+        *,
+        ledger: TransferLedger | None = None,
     ) -> FrameBundle | None:
         """Fetch published bytes as a :class:`FrameBundle`.
 
@@ -710,7 +853,9 @@ class ResultStore:
         frame list / an mmap-backed read) and never materializes a joined
         blob itself; ``copies`` (when given) is charged for the delivery,
         with a copy recorded only when the connector had to hand back
-        fresh ``bytes``.
+        fresh ``bytes``.  A publish-side compression envelope is detected
+        by its marker byte and restored here, with decode time and
+        wire-vs-logical bytes recorded on ``ledger``.
         """
         connector = self.connector
         get_view = getattr(connector, "get_view", None)
@@ -719,6 +864,28 @@ class ResultStore:
         if raw is None:
             return None
         bundle = FrameBundle.of(raw)
+        if is_compressed(bundle.frames):
+            t0 = time.perf_counter_ns()
+            out = FrameBundle(decompress_frames(bundle.frames))
+            decompress_ns = time.perf_counter_ns() - t0
+            if ledger is not None:
+                ledger.record(
+                    self.link_class,
+                    logical_bytes=out.nbytes,
+                    wire_bytes=bundle.nbytes,
+                    compressed_bytes=out.nbytes,
+                    decompress_ns=decompress_ns,
+                )
+            if copies is not None:
+                copies.add_moved(out.nbytes)
+                copies.add_copied(out.nbytes)  # decode materializes fresh bytes
+            return out
+        if ledger is not None:
+            ledger.record(
+                self.link_class,
+                logical_bytes=bundle.nbytes,
+                wire_bytes=bundle.nbytes,
+            )
         if copies is not None:
             copies.add_moved(bundle.nbytes)
             if isinstance(raw, (bytes, bytearray)):

@@ -53,6 +53,7 @@ import traceback
 from collections import deque
 from typing import Any
 
+from repro.core.compress import TransferLedger, TransferPolicy
 from repro.core.serialize import FrameBundle, deserialize, serialize
 from repro.runtime import messages as M
 from repro.runtime.graph import substitute_refs
@@ -138,18 +139,31 @@ class ThreadWorker:
         transfers: Any = None,  # transfer.PeerTransfer | None
         cache_bytes: int = 256 * 1024 * 1024,
         memory: dict[str, Any] | None = None,
+        transfer: Any = None,  # TransferSpec wire dict | TransferPolicy | None
+        ledger: TransferLedger | None = None,
     ):
         self.worker_id = worker_id
         self.scheduler = scheduler
         self.mailbox = Mailbox(worker_id)
         self.results = result_store
         self.transfers = transfers
+        #: Compression policy for this worker's byte paths (store
+        #: publishes/fetches; the comm link has its own copy) and the
+        #: per-link-class wire ledger its heartbeats carry.  Process
+        #: workers pass the ledger shared with their TCP comm so one
+        #: snapshot covers both the store and the wire.
+        self.transfer_policy = TransferPolicy.from_config(transfer)
+        self.ledger = ledger if ledger is not None else TransferLedger()
         if memory is not None:
             limit = int(memory.get("limit_bytes", cache_bytes))
             spill_dir = memory.get("spill_dir")
             if spill_dir is not None:
                 spill_dir = os.path.join(spill_dir, worker_id)
-            self.cache: BlobCache = SpillCache(limit, spill_dir=spill_dir)
+            self.cache: BlobCache = SpillCache(
+                limit,
+                spill_dir=spill_dir,
+                compress=self.transfer_policy.spill_compression,
+            )
             self.memory_limit: int | None = limit
             self._pause_bytes = int(limit * float(memory.get("pause_fraction", 0.85)))
             self._target_bytes = int(limit * float(memory.get("target_fraction", 0.6)))
@@ -263,6 +277,9 @@ class ThreadWorker:
             "bytes_moved": copy_stats["bytes_moved"],
             "bytes_copied": copy_stats["bytes_copied"],
             "copies_per_byte": copy_stats["copies_per_byte"],
+            # Wire accounting: per-link-class logical vs wire bytes,
+            # compression ratio, and codec time (see TransferLedger).
+            "transfer_ledger": self.ledger.snapshot(),
         }
 
     def _note_inflight(self, delta: int) -> None:
@@ -477,7 +494,9 @@ class ThreadWorker:
         nbytes = info.get("nbytes", -1)
         for attempt in range(_FETCH_RETRIES):
             if self.results is not None and ref is not None and self.results.zero_copy:
-                bundle = self.results.fetch(ref, nbytes, copies=self.cache.copies)
+                bundle = self.results.fetch(
+                    ref, nbytes, copies=self.cache.copies, ledger=self.ledger
+                )
                 if bundle is not None:
                     self.zero_copy_hits += 1
                     # Retain only what fits the hot tier: an attached view
@@ -491,11 +510,19 @@ class ThreadWorker:
                 for loc in locations:
                     if loc == self.worker_id:
                         continue
-                    bundle = self.transfers.fetch(loc, key, sink=self.cache)
+                    bundle = self.transfers.fetch(
+                        loc,
+                        key,
+                        sink=self.cache,
+                        policy=self.transfer_policy,
+                        ledger=self.ledger,
+                    )
                     if bundle is not None:
                         return bundle
             if self.results is not None and ref is not None:
-                bundle = self.results.fetch(ref, nbytes, copies=self.cache.copies)
+                bundle = self.results.fetch(
+                    ref, nbytes, copies=self.cache.copies, ledger=self.ledger
+                )
                 if bundle is not None:
                     self.refetch_count += 1
                     self.cache.put(key, bundle)
@@ -568,7 +595,9 @@ class ThreadWorker:
             else:
                 # Publish-then-report: by the time the scheduler dispatches
                 # any dependent, the bytes are already fetchable.
-                inline, ref = None, self.results.publish(key, bundle)
+                inline, ref = None, self.results.publish(
+                    key, bundle, policy=self.transfer_policy, ledger=self.ledger
+                )
             self._report(
                 M.TASK_DONE,
                 {

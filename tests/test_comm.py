@@ -81,13 +81,21 @@ def test_control_fast_path_counts_in_byte_counter():
 # transport conformance
 
 
-@pytest.fixture(params=["inproc", "tcp"])
+@pytest.fixture(params=["inproc", "tcp", "tcp-compressed"])
 def comm_pair(request):
-    """A connected (client, server) comm pair over the given transport."""
+    """A connected (client, server) comm pair over the given transport.
+
+    The ``tcp-compressed`` variant runs the whole contract with an
+    aggressive compression policy (tiny frame threshold), so ordering,
+    close semantics, and byte accounting are asserted over envelopes too.
+    """
     if request.param == "inproc":
         address = f"inproc://conf-{uuid.uuid4().hex[:8]}"
     else:
         address = "tcp://127.0.0.1:0"
+    kwargs = {}
+    if request.param == "tcp-compressed":
+        kwargs["transfer"] = {"compression": "auto", "min_frame_bytes": 1024}
     accepted = []
     ready = threading.Event()
 
@@ -95,8 +103,8 @@ def comm_pair(request):
         accepted.append(comm)
         ready.set()
 
-    listener = C.listen(address, handler)
-    client = C.connect(listener.address)
+    listener = C.listen(address, handler, **kwargs)
+    client = C.connect(listener.address, **kwargs)
     assert ready.wait(5), "listener never accepted"
     server = accepted[0]
     yield client, server
@@ -147,6 +155,54 @@ def test_big_frame_roundtrip_and_accounting(comm_pair):
         client.counter.snapshot()["sent_bytes"]
         == server.counter.snapshot()["recv_bytes"]
     )
+
+
+def test_compressed_tcp_saves_wire_bytes():
+    """Compressible frames cross tcp smaller than logical, byte-identical."""
+    from repro.core.compress import LINK_TCP, TransferLedger
+
+    ledger = TransferLedger()
+    transfer = {"compression": "auto", "min_frame_bytes": 1024}
+    accepted = []
+    ready = threading.Event()
+
+    def handler(comm):
+        accepted.append(comm)
+        ready.set()
+
+    listener = C.listen(
+        "tcp://127.0.0.1:0", handler, transfer=transfer, ledger=ledger
+    )
+    client = C.connect(listener.address, transfer=transfer, ledger=ledger)
+    assert ready.wait(5)
+    server = accepted[0]
+    try:
+        arr = np.zeros(1_000_000, dtype=np.float64)  # 8 MiB of zero blocks
+        sent = []
+        t = threading.Thread(target=lambda: sent.append(client.send(("z", {"a": arr}))))
+        t.start()
+        tag, p = server.recv(timeout=10)
+        t.join(timeout=10)
+        assert tag == "z"
+        np.testing.assert_array_equal(p["a"], arr)
+        assert sent and sent[0] < arr.nbytes // 10  # wire << logical
+        # Byte counters count wire bytes on both ends, so the conformance
+        # invariant survives compression.
+        assert (
+            client.counter.snapshot()["sent_bytes"]
+            == server.counter.snapshot()["recv_bytes"]
+        )
+        row = ledger.snapshot()[LINK_TCP]
+        assert row["logical_bytes"] > row["wire_bytes"]
+        assert row["compressed_bytes"] > 0
+        assert row["ratio"] > 1.0  # ratio = logical / wire
+    finally:
+        for comm in (client, server):
+            try:
+                comm.close()
+            except Exception:
+                pass
+        listener.stop()
 
 
 def test_concurrent_senders(comm_pair):
@@ -400,8 +456,10 @@ def test_worker_stats_survive_the_wire():
                 "bytes_copied",
                 "copies_per_byte",
                 "zero_copy_hits",
+                "transfer_ledger",
             ):
                 assert field in row, f"{wid} missing {field}"
+            assert isinstance(row["transfer_ledger"], dict)
             ws = cluster.scheduler.workers[wid]
             assert ws.last_stats is not None
             assert ws.last_stats["managed_bytes"] == row["managed_bytes"]

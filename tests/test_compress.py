@@ -1,0 +1,434 @@
+"""Adaptive per-link compression: codecs, probe, envelope, ledger, specs.
+
+Covers the compression tentpole end to end at the unit level:
+
+* every registered codec round-trips (including empty / 1-byte /
+  misaligned frames -- the shapes that break block codecs),
+* the decision probe (size gate, entropy bail-out, link-class hard-wiring:
+  shm and inproc must never compress),
+* the self-describing envelope in both its contiguous (tcp / file) and
+  frame-preserved (store) forms,
+* :class:`TransferLedger` accounting sums and cluster-wide ``merge``,
+* :class:`TransferSpec` validation + dict round-trip,
+* the byte paths that consume all of the above: ``SpillCache`` compressed
+  demote/restore and ``ResultStore`` publish/fetch over a cross-process
+  connector,
+* the ``dequantize_int8`` dtype regression (bf16/f16 states must decode
+  back to their own dtype, not float32).
+"""
+
+from __future__ import annotations
+
+import uuid
+
+import numpy as np
+import pytest
+
+from repro.api import ClusterSpec, SpecValidationError, StoreConfig, TransferSpec
+from repro.core.compress import (
+    LINK_INPROC,
+    LINK_PROCESS,
+    LINK_SHM,
+    LINK_TCP,
+    NEVER_COMPRESS_LINKS,
+    TransferLedger,
+    TransferPolicy,
+    available_codecs,
+    compress_frames,
+    decompress_frames,
+    is_compressed,
+    resolve_codec,
+)
+from repro.runtime.transfer import ResultStore, SpillCache
+
+# ---------------------------------------------------------------------------
+# codecs
+
+
+def _payloads():
+    rng = np.random.default_rng(7)
+    ramp = (np.arange(100_000, dtype=np.float32) * 0.001).tobytes()
+    return {
+        "empty": b"",
+        "one": b"x",
+        "misaligned": bytes(rng.integers(0, 4, 4097, dtype=np.uint8)),
+        "zeros": bytes(64 * 1024),
+        "zeros+tail": bytes(2 * 4096) + b"tail-bytes!",
+        "random": rng.bytes(50_000),
+        "f32-ramp": ramp,
+    }
+
+
+@pytest.mark.parametrize("name", sorted(set(available_codecs())))
+def test_codec_roundtrip_every_shape(name):
+    codec = resolve_codec(name)
+    for label, payload in _payloads().items():
+        stored = codec.encode(memoryview(payload))
+        back = codec.decode(memoryview(stored), len(payload))
+        assert bytes(back) == payload, f"{name} broke on {label}"
+
+
+def test_lz4_always_nameable():
+    # With the optional package absent the registry aliases lz4 -> zlib;
+    # either way the name resolves and the codec round-trips.
+    assert "lz4" in available_codecs()
+    codec = resolve_codec("lz4")
+    data = bytes(range(256)) * 64
+    assert bytes(codec.decode(memoryview(codec.encode(memoryview(data))), len(data))) == data
+
+
+def test_cascade_suppresses_zero_blocks():
+    codec = resolve_codec("cascade")
+    data = bytes(1 << 20)  # 256 all-zero 4 KiB blocks
+    stored = codec.encode(memoryview(data))
+    assert len(stored) < 1024
+    assert bytes(codec.decode(memoryview(stored), len(data))) == data
+
+
+def test_unknown_codec_rejected():
+    with pytest.raises(ValueError, match="unknown codec"):
+        resolve_codec("snappy")
+    with pytest.raises(ValueError):
+        TransferPolicy("snappy")
+
+
+# ---------------------------------------------------------------------------
+# decision probe
+
+
+def test_probe_size_gate():
+    policy = TransferPolicy("auto", min_frame_bytes=64 * 1024)
+    small = memoryview(bytes(64 * 1024 - 1))
+    big = memoryview(bytes(64 * 1024))
+    assert policy.select(small, LINK_TCP) is None
+    assert policy.select(big, LINK_TCP) is not None
+
+
+def test_probe_entropy_bailout_on_random():
+    policy = TransferPolicy("auto", min_frame_bytes=1024)
+    noise = memoryview(np.random.default_rng(0).bytes(1 << 20))
+    assert policy.select(noise, LINK_TCP) is None
+
+
+def test_never_compress_links_hard_wired():
+    # Even a forced codec and a trivially compressible frame must ship raw
+    # on the zero-copy links: compression there would *add* a copy.
+    policy = TransferPolicy("cascade", min_frame_bytes=0)
+    zeros = memoryview(bytes(1 << 20))
+    for link in sorted(NEVER_COMPRESS_LINKS):
+        assert policy.select(zeros, link) is None
+        assert compress_frames([zeros], policy=policy, link_class=link) is None
+    assert policy.select(zeros, LINK_TCP) is not None
+    assert policy.select(zeros, LINK_PROCESS) is not None
+
+
+def test_policy_off_and_forced():
+    zeros = memoryview(bytes(1 << 20))
+    assert TransferPolicy("off").select(zeros, LINK_TCP) is None
+    forced = TransferPolicy("zlib", min_frame_bytes=1024)
+    assert forced.select(zeros, LINK_TCP).name == "zlib"
+
+
+def test_policy_config_roundtrip():
+    policy = TransferPolicy(
+        "cascade", min_frame_bytes=2048, probe_ratio=0.5, spill_compression="zlib"
+    )
+    again = TransferPolicy.from_config(policy.to_dict())
+    assert again.to_dict() == policy.to_dict()
+    assert TransferPolicy.from_config(None).compression == "auto"
+    assert TransferPolicy.from_config("off").compression == "off"
+
+
+# ---------------------------------------------------------------------------
+# envelope
+
+
+def _mixed_frames():
+    rng = np.random.default_rng(3)
+    return [
+        bytes(256 * 1024),  # compressible
+        rng.bytes(128 * 1024),  # incompressible: rides raw in the envelope
+        b"tiny",  # under the size gate
+    ]
+
+
+def test_envelope_roundtrip_contiguous_and_frame_list():
+    frames = _mixed_frames()
+    policy = TransferPolicy("auto", min_frame_bytes=1024)
+    packed = compress_frames(frames, policy=policy, link_class=LINK_TCP)
+    assert packed is not None
+    envelope, stats = packed
+    assert is_compressed(envelope)
+    logical = sum(len(f) for f in frames)
+    assert stats["logical_bytes"] == logical
+    assert stats["wire_bytes"] < logical  # the zero frame collapsed
+    assert 0 < stats["compressed_bytes"] <= logical
+    assert stats["wire_bytes"] == sum(memoryview(f).nbytes for f in envelope)
+
+    # Contiguous form: what tcp / a file store hands back.
+    joined = b"".join(bytes(f) for f in envelope)
+    restored = decompress_frames(joined)
+    assert [bytes(f) for f in restored] == frames
+
+    # Frame-preserved form: what a frame-retaining store hands back.
+    restored = decompress_frames(envelope)
+    assert [bytes(f) for f in restored] == frames
+
+
+def test_envelope_never_double_wraps():
+    policy = TransferPolicy("auto", min_frame_bytes=1024)
+    packed = compress_frames([bytes(256 * 1024)], policy=policy, link_class=LINK_TCP)
+    assert packed is not None
+    assert compress_frames(packed[0], policy=policy, link_class=LINK_TCP) is None
+
+
+def test_all_incompressible_declines():
+    noise = np.random.default_rng(1).bytes(256 * 1024)
+    policy = TransferPolicy("auto", min_frame_bytes=1024)
+    assert compress_frames([noise], policy=policy, link_class=LINK_TCP) is None
+    assert not is_compressed([noise])
+
+
+def test_full_frame_bailout_ships_raw():
+    # First+last windows are zeros (the probe approves) but the body is
+    # noise: the full encode does not pay, so the frame must ride raw --
+    # codec id 0 -- rather than grow the wire.
+    rng = np.random.default_rng(9)
+    frame = bytes(8192) + rng.bytes(1 << 20) + bytes(8192)
+    policy = TransferPolicy("zlib", min_frame_bytes=1024)
+    packed = compress_frames([frame], policy=policy, link_class=LINK_TCP)
+    if packed is not None:  # zlib found a sliver; delivery must still be exact
+        assert bytes(b"".join(bytes(f) for f in decompress_frames(packed[0]))) == frame
+
+
+# ---------------------------------------------------------------------------
+# ledger
+
+
+def test_ledger_sums_and_derived_fields():
+    ledger = TransferLedger()
+    ledger.record(LINK_TCP, logical_bytes=100, wire_bytes=25, compressed_bytes=100, compress_ns=10)
+    ledger.record(LINK_TCP, logical_bytes=100, wire_bytes=75, decompress_ns=30)
+    ledger.record(LINK_SHM, logical_bytes=50, wire_bytes=50)
+    snap = ledger.snapshot()
+    tcp = snap[LINK_TCP]
+    assert tcp["transfers"] == 2
+    assert tcp["logical_bytes"] == 200
+    assert tcp["wire_bytes"] == 100
+    assert tcp["compressed_bytes"] == 100
+    assert tcp["ratio"] == pytest.approx(2.0)
+    assert tcp["codec_mib_s"] > 0
+    shm = snap[LINK_SHM]
+    assert shm["ratio"] == pytest.approx(1.0)
+    assert shm["compressed_bytes"] == 0
+    assert shm["codec_mib_s"] == 0.0
+
+
+def test_ledger_merge_aggregates_per_link():
+    a, b = TransferLedger(), TransferLedger()
+    a.record(LINK_TCP, logical_bytes=10, wire_bytes=5)
+    b.record(LINK_TCP, logical_bytes=30, wire_bytes=15)
+    b.record(LINK_INPROC, logical_bytes=7, wire_bytes=7)
+    merged = TransferLedger.merge([a.snapshot(), b.snapshot(), {}])
+    assert merged[LINK_TCP]["transfers"] == 2
+    assert merged[LINK_TCP]["logical_bytes"] == 40
+    assert merged[LINK_TCP]["wire_bytes"] == 20
+    assert merged[LINK_TCP]["ratio"] == pytest.approx(2.0)
+    assert merged[LINK_INPROC]["logical_bytes"] == 7
+
+
+# ---------------------------------------------------------------------------
+# TransferSpec
+
+
+def test_transfer_spec_roundtrip():
+    spec = TransferSpec(
+        "cascade", min_frame_bytes=2048, probe_ratio=0.5, spill_compression="zlib"
+    )
+    spec.validate()
+    d = spec.to_dict()
+    assert d == TransferSpec.from_dict(d).to_dict()
+    # The wire dict is exactly what TransferPolicy.from_config expects.
+    assert TransferPolicy.from_config(d).to_dict() == d
+
+
+@pytest.mark.parametrize(
+    "kwargs",
+    [
+        {"compression": "snappy"},
+        {"spill_compression": "snappy"},
+        {"min_frame_bytes": -1},
+        {"probe_ratio": 0.0},
+        {"probe_ratio": 1.5},
+        {"level": 42},
+    ],
+)
+def test_transfer_spec_validation(kwargs):
+    with pytest.raises(SpecValidationError):
+        TransferSpec(**kwargs).validate()
+
+
+def test_cluster_and_store_specs_carry_transfer():
+    cs = ClusterSpec(n_workers=1, transfer="off")
+    cs.validate()
+    assert cs.to_dict()["transfer"]["compression"] == "off"
+    assert ClusterSpec.from_dict(cs.to_dict()).transfer.compression == "off"
+
+    sc = StoreConfig(name="t", connector="memory", transfer={"compression": "auto"})
+    sc.validate()
+    assert StoreConfig.from_dict(sc.to_dict()).transfer.compression == "auto"
+    # Configs without a transfer spec keep their pre-compression wire shape.
+    assert "transfer" not in StoreConfig(name="t2", connector="memory").to_dict()
+
+
+# ---------------------------------------------------------------------------
+# byte paths: SpillCache disk tier + ResultStore publish/fetch
+
+
+def test_spill_cache_compressed_demote_restore(tmp_path):
+    cache = SpillCache(max_bytes=100, spill_dir=str(tmp_path), compress="cascade")
+    blob = bytes(128 * 1024) + b"payload-tail" * 32
+    assert cache.put("cold", blob)
+    assert cache.put("hot", b"y" * 80)  # demotes "cold" to disk, compressed
+    assert cache.spilled_keys() == ["cold"]
+    # Disk accounting stays in logical bytes: eviction budgets are unchanged.
+    assert cache.spilled_bytes == len(blob)
+    files = list(tmp_path.iterdir())
+    assert files and sum(f.stat().st_size for f in files) < len(blob) // 4
+
+    got = cache.get("cold")  # promotes back
+    assert got is not None and got.to_bytes() == blob
+    cache.close()
+
+
+def test_spill_cache_compressed_read_range(tmp_path):
+    cache = SpillCache(max_bytes=100, spill_dir=str(tmp_path), compress="cascade")
+    blob = bytes(64 * 1024) + b"ABCDEFGH" * 1024
+    assert cache.put("k", blob)
+    assert cache.put("k2", b"z" * 80)  # demote "k"
+    out, offset = bytearray(), 0
+    while offset < len(blob):
+        view = cache.read_range("k", offset, 10_000)
+        assert view is not None and view.nbytes > 0
+        out += bytes(view)
+        offset += view.nbytes
+    assert bytes(out) == blob
+    cache.close()
+
+
+def test_result_store_compresses_cross_process(tmp_path):
+    uid = uuid.uuid4().hex[:8]
+    rs = ResultStore(
+        {
+            "name": f"comp-{uid}",
+            "connector": {"connector_type": "file", "store_dir": str(tmp_path)},
+            "serializer": "default",
+            "cache_size": 0,
+            "transfer": {"compression": "auto", "min_frame_bytes": 1024},
+        }
+    )
+    assert rs.link_class == LINK_PROCESS
+    ledger = TransferLedger()
+    blob = np.zeros(500_000, dtype=np.float64).tobytes()
+    try:
+        ref = rs.publish("t1", blob, ledger=ledger)
+        pub = ledger.snapshot()[LINK_PROCESS]
+        assert pub["wire_bytes"] < pub["logical_bytes"] == len(blob)
+        got = rs.fetch(ref, ledger=ledger)
+        assert got is not None and got.to_bytes() == blob
+        row = ledger.snapshot()[LINK_PROCESS]
+        assert row["transfers"] == 2
+        assert row["decompress_ns"] > 0
+        # On-disk object is the envelope, not the logical bytes.
+        stored = sum(
+            f.stat().st_size for f in tmp_path.rglob("*") if f.is_file()
+        )
+        assert stored < len(blob) // 10
+    finally:
+        rs.close()
+
+
+def test_result_store_inproc_link_never_compresses():
+    uid = uuid.uuid4().hex[:8]
+    rs = ResultStore(
+        {
+            "name": f"nc-{uid}",
+            "connector": {"connector_type": "memory", "segment": f"nc-{uid}"},
+            "serializer": "default",
+            "cache_size": 0,
+            "transfer": {"compression": "auto", "min_frame_bytes": 1024},
+        }
+    )
+    assert rs.link_class == LINK_INPROC
+    ledger = TransferLedger()
+    blob = bytes(512 * 1024)
+    try:
+        ref = rs.publish("t1", blob, ledger=ledger)
+        got = rs.fetch(ref, ledger=ledger)
+        assert got is not None and got.to_bytes() == blob
+        row = ledger.snapshot()[LINK_INPROC]
+        assert row["wire_bytes"] == row["logical_bytes"]
+        assert row["compressed_bytes"] == 0
+        assert row["ratio"] == pytest.approx(1.0)
+    finally:
+        rs.close()
+
+
+# ---------------------------------------------------------------------------
+# cluster surface: worker_stats ledger + transfer_summary
+
+
+def test_thread_cluster_exposes_transfer_ledger():
+    from repro.runtime.client import LocalCluster
+
+    with LocalCluster(
+        n_workers=1, inline_result_max=256, transfer={"compression": "auto"}
+    ) as cluster:
+        with cluster.get_client() as client:
+            fut = client.submit(np.zeros, 200_000)
+            np.testing.assert_array_equal(fut.result(), np.zeros(200_000))
+        stats = cluster.worker_stats()
+        assert stats
+        for row in stats.values():
+            assert "transfer_ledger" in row
+        summary = cluster.transfer_summary()
+        # Thread workers publish/fetch over the in-memory connector: the
+        # inproc link must show zero compression activity.
+        for link, row in summary.items():
+            assert link in NEVER_COMPRESS_LINKS
+            assert row["compressed_bytes"] == 0
+            assert row["ratio"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# dequantize_int8 dtype regression (satellite)
+
+
+@pytest.mark.parametrize("dtype_name", ["bfloat16", "float16", "float32"])
+def test_delta_codec_preserves_leaf_dtype(dtype_name):
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.distributed.compression import CompressedDeltaCodec
+
+    dtype = jnp.dtype(dtype_name)
+    base = {"w": np.zeros(512, np.float32)}
+    codec = CompressedDeltaCodec(base)
+    state = {"w": jnp.asarray(np.linspace(-1, 1, 512, dtype=np.float32), dtype=dtype)}
+    decoded = codec.decode(codec.encode(state))
+    out = decoded["w"]
+    assert np.dtype(out.dtype) == np.dtype(dtype)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(state["w"], np.float32),
+        atol=2e-2,
+    )
+
+
+def test_dequantize_int8_dtype_argument():
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.distributed.compression import dequantize_int8, quantize_int8
+
+    x = jnp.asarray(np.linspace(0, 1, 300, dtype=np.float32), dtype=jnp.bfloat16)
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s, x.shape, dtype=x.dtype)
+    assert back.dtype == jnp.bfloat16
+    assert back.shape == x.shape
