@@ -31,7 +31,10 @@ row must keep its invariants.  It also guards adaptive per-link
 compression: compressible payloads must move >= 2x faster over tcp than
 raw, incompressible payloads must not regress > 5%, and the same-host
 shm link must show zero compression activity in the transfer ledger.
-Wired into ``scripts/ci.sh smoke-process``.
+It also guards continuous-batching serving: at saturation the batched
+server must hold >= 2x the unbatched throughput with a bounded p99 while
+the stream broker carries only metadata-sized events (payload bytes ride
+the store tiers).  Wired into ``scripts/ci.sh smoke-process``.
 """
 
 from __future__ import annotations
@@ -39,7 +42,7 @@ from __future__ import annotations
 import sys
 import time
 
-SUITES = ("serializer", "fig3", "fig4", "fig5", "roofline")
+SUITES = ("serializer", "fig3", "fig4", "fig5", "serving", "roofline")
 
 
 def main() -> None:
@@ -55,12 +58,13 @@ def main() -> None:
         sys.exit(0 if ok else 1)
 
     if "--smoke-process" in sys.argv:
-        from benchmarks import overheads, scaling
+        from benchmarks import overheads, scaling, serving
 
         print("name,us_per_call,derived")
         ok = scaling.process_smoke()
         ok = overheads.zerocopy_smoke() and ok
         ok = overheads.compression_smoke() and ok
+        ok = serving.serving_smoke() and ok
         print(f"# smoke-process {'PASS' if ok else 'FAIL'}", flush=True)
         sys.exit(0 if ok else 1)
 
@@ -84,6 +88,10 @@ def main() -> None:
         from benchmarks import applications
 
         applications.run()
+    if "serving" in picked:
+        from benchmarks import serving
+
+        serving.run()
     if "roofline" in picked:
         from benchmarks import roofline
 

@@ -1,0 +1,175 @@
+"""Continuous-batching serving: throughput + latency, batched vs unbatched.
+
+The model stand-in has the cost shape that makes dynamic batching win:
+a fixed per-call overhead (dispatch, jit launch, weight touch) plus a
+small per-item cost.  Unbatched serving pays the fixed cost once per
+request; the continuous batcher amortizes it across up to
+``max_batch_size`` requests per forward call, so at saturation the
+batched server sustains several times the throughput *and* a bounded
+latency distribution (the unbatched queue grows, so its p99 is the
+whole backlog).
+
+Requests travel the full streaming data plane: payload bytes through the
+cluster's store tiers, only (key, ref, nbytes, metadata) events on the
+broker -- ``broker_bytes`` vs ``payload_bytes`` in the artifact is the
+hub-byte accounting that proves it.
+
+    PYTHONPATH=src python -m benchmarks.run serving
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, record, save_artifact
+from repro.api import ClusterSpec, ServeSpec, Session
+
+#: Synthetic forward-pass cost model (seconds).
+PER_CALL_S = 0.010
+PER_ITEM_S = 0.001
+#: Request payload size: big enough that embedding it in broker events
+#: would dominate broker bytes, small enough to keep the smoke fast.
+PAYLOAD = 8 * 1024
+
+
+def _model_fn(batch: list) -> list:
+    time.sleep(PER_CALL_S + PER_ITEM_S * len(batch))
+    return [float(np.asarray(x).sum()) for x in batch]
+
+
+def serve_workload(
+    n_requests: int, max_batch_size: int, *, max_wait_ms: float = 5.0
+) -> dict:
+    """Push ``n_requests`` through a ModelServer at saturation.
+
+    All requests are submitted back to back (the producer never waits on
+    the model), so the server sees a standing queue -- the regime where
+    batching matters.  Returns throughput plus the server's latency
+    percentiles and the stream hub's byte accounting.
+    """
+    spec = ClusterSpec(
+        n_workers=1,
+        serve=ServeSpec(
+            max_batch_size=max_batch_size,
+            max_wait_ms=max_wait_ms,
+            queue_depth=max(128, n_requests),
+        ),
+    )
+    rng = np.random.default_rng(0)
+    payloads = [rng.normal(size=PAYLOAD // 8) for _ in range(n_requests)]
+    with Session(cluster=spec, name=f"bench-serve-{max_batch_size}") as session:
+        server = session.serve(_model_fn)
+        server.attach(
+            session.stream_consumer("requests"),
+            session.stream_producer("responses", buffer=n_requests + 8),
+        )
+        requests = session.stream_producer("requests", buffer=n_requests + 8)
+        responses = session.stream_consumer("responses")
+
+        t0 = time.perf_counter()
+        for p in payloads:
+            requests.send(p)
+        requests.close()
+        served = sum(
+            1 for item in responses if item.metadata.get("status") == "ok"
+        )
+        wall = time.perf_counter() - t0
+        stats = server.stats()
+        hub = session.cluster.streams().stats()
+
+    assert served == n_requests, f"served {served}/{n_requests}"
+    return {
+        "n_requests": n_requests,
+        "max_batch_size": max_batch_size,
+        "wall_s": wall,
+        "throughput_rps": n_requests / wall,
+        "batches": stats["batches"],
+        "mean_batch": stats["mean_batch"],
+        "latency_p50_ms": stats["latency_p50_ms"],
+        "latency_p99_ms": stats["latency_p99_ms"],
+        "queue_p50_ms": stats["queue_p50_ms"],
+        "queue_p99_ms": stats["queue_p99_ms"],
+        "events": hub["events"],
+        "broker_bytes": hub["broker_bytes"],
+        "payload_bytes": hub["payload_bytes"],
+    }
+
+
+def compare(n_requests: int = 64, max_batch_size: int = 16) -> dict:
+    """Batched vs unbatched on the identical saturating workload."""
+    unbatched = serve_workload(n_requests, 1)
+    batched = serve_workload(n_requests, max_batch_size)
+    speedup = batched["throughput_rps"] / unbatched["throughput_rps"]
+    for tag, res in (("unbatched", unbatched), ("batched", batched)):
+        record(
+            f"serving/{tag}/b{res['max_batch_size']}",
+            1e6 * res["wall_s"] / n_requests,
+            f"rps={res['throughput_rps']:.0f} "
+            f"p50={res['latency_p50_ms']:.0f}ms "
+            f"p99={res['latency_p99_ms']:.0f}ms "
+            f"mean_batch={res['mean_batch']:.2f}",
+        )
+    return {"unbatched": unbatched, "batched": batched, "speedup": speedup}
+
+
+def run() -> dict:
+    """Figure run: throughput/latency across batch widths."""
+    n = 32 if QUICK else 96
+    out: dict = {"n_requests": n, "sweep": []}
+    for width in (1, 4, 8, 16):
+        res = serve_workload(n, width)
+        out["sweep"].append(res)
+        record(
+            f"serving/sweep/b{width}",
+            1e6 * res["wall_s"] / n,
+            f"rps={res['throughput_rps']:.0f} "
+            f"p99={res['latency_p99_ms']:.0f}ms",
+        )
+    save_artifact("serving_sweep", out)
+    return out
+
+
+def serving_smoke(n_requests: int = 64, max_batch_size: int = 16) -> bool:
+    """CI guard: continuous batching must keep its serving win.
+
+    At saturation the batched server must sustain >= 2x the unbatched
+    throughput with a p99 no worse than unbatched (the whole point of
+    shedding + batching is a *bounded* tail), and the broker must carry
+    only metadata-sized events while payload bytes ride the store tiers.
+    """
+    out = compare(n_requests, max_batch_size)
+    save_artifact("smoke_serving", out)
+    ok = True
+    if out["speedup"] < 2.0:
+        print(f"# FAIL serving: batched speedup {out['speedup']:.2f}x < 2x")
+        ok = False
+    batched, unbatched = out["batched"], out["unbatched"]
+    if batched["latency_p99_ms"] > unbatched["latency_p99_ms"]:
+        print(
+            f"# FAIL serving: batched p99 {batched['latency_p99_ms']:.0f}ms "
+            f"exceeds unbatched {unbatched['latency_p99_ms']:.0f}ms"
+        )
+        ok = False
+    if batched["latency_p99_ms"] > 5000.0:
+        print(
+            f"# FAIL serving: batched p99 {batched['latency_p99_ms']:.0f}ms "
+            "unbounded (> 5s)"
+        )
+        ok = False
+    for tag, res in (("batched", batched), ("unbatched", unbatched)):
+        per_event = res["broker_bytes"] / max(1, res["events"])
+        if res["broker_bytes"] >= res["payload_bytes"] / 4:
+            print(
+                f"# FAIL serving: {tag} broker carried "
+                f"{res['broker_bytes']}B vs {res['payload_bytes']}B payload "
+                "(events are not metadata-sized)"
+            )
+            ok = False
+        if per_event > 4096:
+            print(
+                f"# FAIL serving: {tag} {per_event:.0f}B/event on the broker"
+            )
+            ok = False
+    return ok

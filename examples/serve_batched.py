@@ -1,10 +1,14 @@
-"""Serve a small LM with batched requests + proxy-distributed weights.
+"""Serve a small LM through the streaming data plane: request topic ->
+continuous batcher -> response topic, with proxy-distributed weights.
 
 The server restores weights *lazily* from the checkpoint store: each worker
 (here: the serving process) resolves only the shards it needs, just in time
 -- the pass-by-reference win applied to model loading / restart storms.
 
-Decode runs prefill once per batch, then steps the KV cache token by token.
+Requests enter as stream items (prompt bytes ride the cluster store tiers;
+only metadata events touch the broker); the ``ModelServer`` batcher groups
+them dynamically, runs prefill once per batch, then steps the KV cache
+token by token; responses flow back on a reply topic.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
@@ -15,15 +19,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import ConnectorSpec, StoreConfig
+from repro.api import ClusterSpec, ConnectorSpec, ServeSpec, Session, StoreConfig
 from repro.core import is_proxy
 from repro.configs import get_smoke_config
 from repro.models import transformer as tx
-from repro.models.layers import logits_matmul
 from repro.train.checkpoint import CheckpointManager
 
 ARCH = "qwen2.5-3b"
-BATCH, PROMPT_LEN, GEN_TOKENS = 4, 16, 24
+BATCH, PROMPT_LEN, GEN_TOKENS, REQUESTS = 4, 16, 24, 8
 
 
 def main() -> None:
@@ -46,30 +49,62 @@ def main() -> None:
         lambda p: jnp.asarray(np.asarray(p)), lazy, is_leaf=is_proxy
     )  # workers resolve just-in-time; here: all shards on one host
 
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (BATCH, PROMPT_LEN)).astype(np.int32)
-    )
-
     prefill = jax.jit(lambda p, t, c: tx.prefill(cfg, p, t, c))
     decode = jax.jit(lambda p, c, t, pos: tx.decode_step(cfg, p, c, t, pos))
 
-    cache = tx.init_cache(cfg, BATCH, PROMPT_LEN + GEN_TOKENS + 1)
-    t0 = time.perf_counter()
-    logits, cache = prefill(params, prompts, cache)
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    generated = [tok]
-    for i in range(GEN_TOKENS - 1):
-        pos = jnp.full((BATCH, 1), PROMPT_LEN + i, jnp.int32)
-        logits, cache = decode(params, cache, tok, pos)
+    def generate(prompts: list) -> list:
+        """One forward pass for a dynamic batch: pad to the serving width
+        (so jit compiles once), prefill, then decode token by token."""
+        k = len(prompts)
+        toks = np.stack([np.asarray(p, np.int32) for p in prompts])
+        if k < BATCH:
+            toks = np.concatenate([toks, np.zeros((BATCH - k, PROMPT_LEN), np.int32)])
+        cache = tx.init_cache(cfg, BATCH, PROMPT_LEN + GEN_TOKENS + 1)
+        logits, cache = prefill(params, jnp.asarray(toks), cache)
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        generated.append(tok)
-    out = jnp.concatenate(generated, axis=1)
-    dt = time.perf_counter() - t0
+        generated = [tok]
+        for i in range(GEN_TOKENS - 1):
+            pos = jnp.full((BATCH, 1), PROMPT_LEN + i, jnp.int32)
+            logits, cache = decode(params, cache, tok, pos)
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            generated.append(tok)
+        full = np.asarray(jnp.concatenate(generated, axis=1))
+        return [full[i] for i in range(k)]
 
-    print(f"served batch={BATCH} prompt={PROMPT_LEN} gen={GEN_TOKENS} "
-          f"in {dt:.2f}s ({BATCH*GEN_TOKENS/dt:.1f} tok/s)")
-    print("sample token ids:", np.asarray(out[0])[:10].tolist())
+    spec = ClusterSpec(
+        n_workers=1,
+        serve=ServeSpec(max_batch_size=BATCH, max_wait_ms=5.0),
+    )
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    with Session(cluster=spec, name="serve-example") as session:
+        server = session.serve(generate)
+        server.attach(
+            session.stream_consumer("requests"),
+            session.stream_producer("responses"),
+        )
+        requests = session.stream_producer("requests")
+        responses = session.stream_consumer("responses")
+
+        for i in range(REQUESTS):
+            prompt = rng.integers(0, cfg.vocab_size, (PROMPT_LEN,)).astype(np.int32)
+            requests.send(prompt, metadata={"req": i})
+        requests.close()  # EOS flushes the batcher and closes the reply topic
+
+        outs = [item.value for item in responses
+                if item.metadata.get("status") == "ok"]
+        dt = time.perf_counter() - t0
+        stats = server.stats()
+        hub = session.cluster.streams().stats()
+
+    assert len(outs) == REQUESTS
+    print(f"served {REQUESTS} reqs (batch<={BATCH}, gen={GEN_TOKENS}) "
+          f"in {dt:.2f}s: {stats['batches']} batches, "
+          f"mean {stats['mean_batch']:.2f}, "
+          f"p50/p99 {stats['latency_p50_ms']:.0f}/{stats['latency_p99_ms']:.0f} ms")
+    print(f"broker carried {hub['broker_bytes']:,}B of events; "
+          f"{hub['payload_bytes']:,}B of payload rode the store tiers")
+    print("sample token ids:", outs[0][:10].tolist())
     store.connector.clear()
     store.close()
 

@@ -58,7 +58,11 @@ cmd_smoke_process() {
   # compression activity on the same-host shm link -- and it prints a
   # one-line "# ledger:" summary (wire vs logical bytes, ratio) so the
   # perf trajectory is visible in CI logs, not only in the JSON
-  # artifacts.  JSON lands in artifacts/bench/ for the CI artifact upload.
+  # artifacts.  The continuous-batching serving guard runs here too:
+  # at saturation the batched server must hold >= 2x the unbatched
+  # throughput with a bounded p99 while the stream broker carries only
+  # metadata-sized events.  JSON lands in artifacts/bench/ for the CI
+  # artifact upload.
   BENCH_QUICK=1 python -m benchmarks.run --smoke-process
 }
 

@@ -18,8 +18,17 @@ through a single :class:`Session`, configured declaratively::
             print(f.result())
     # session exit evicts every session-owned proxy
 
-Direct ``Store(...)`` / ``ProxyClient(...)`` / ``StoreExecutor(...)``
-construction still works but emits :class:`DeprecationWarning`.
+Streaming and serving ride the same facade on the cluster backend:
+``Session.stream_producer(topic)`` / ``Session.stream_consumer(topic)``
+move bulk bytes through the cluster store tiers while only metadata
+events touch the broker, and ``Session.serve(model_fn)`` stands up a
+continuous-batching :class:`ModelServer` configured by
+``ClusterSpec(serve=ServeSpec(...))``.
+
+The old ``Store(...)`` / ``ProxyClient(...)`` / ``StoreExecutor(...)``
+deprecation shims have been removed: direct construction is a silent
+low-level escape hatch, and Session / StoreConfig are the supported
+entry points.
 """
 
 from repro.api.config import (
@@ -27,11 +36,20 @@ from repro.api.config import (
     ConnectorSpec,
     MemorySpec,
     PolicySpec,
+    ServeSpec,
     SpecValidationError,
     StoreConfig,
     TransferSpec,
 )
 from repro.api.session import Session, as_completed
+from repro.runtime.serving import ModelServer, ServerOverloaded
+from repro.runtime.stream import (
+    EndOfStream,
+    StreamClosed,
+    StreamConsumer,
+    StreamItem,
+    StreamProducer,
+)
 from repro.core.connectors.base import (
     connector_registry,
     list_connectors,
@@ -52,10 +70,18 @@ __all__ = [
     "MemorySpec",
     "PolicySpec",
     "SpecValidationError",
+    "ServeSpec",
     "StoreConfig",
     "TransferSpec",
     "Session",
     "as_completed",
+    "ModelServer",
+    "ServerOverloaded",
+    "StreamProducer",
+    "StreamConsumer",
+    "StreamItem",
+    "StreamClosed",
+    "EndOfStream",
     "GraphNode",
     "TaskGraph",
     "PluginRegistry",

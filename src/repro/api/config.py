@@ -20,7 +20,6 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, ClassVar, Mapping
 
-from repro.core._deprecation import api_managed
 from repro.core.connectors.base import (
     PEER_CAPABILITY,
     Connector,
@@ -279,14 +278,13 @@ class StoreConfig:
         )
 
     def build(self, *, register: bool = False) -> Store:
-        with api_managed():
-            return Store(
-                self.name,
-                self.connector.build(),
-                serializer=self.serializer,
-                cache_size=self.cache_size,
-                register=register,
-            )
+        return Store(
+            self.name,
+            self.connector.build(),
+            serializer=self.serializer,
+            cache_size=self.cache_size,
+            register=register,
+        )
 
 
 @dataclass(frozen=True, init=False)
@@ -458,6 +456,66 @@ class TransferSpec:
 
 
 @dataclass(frozen=True, init=False)
+class ServeSpec:
+    """Declarative continuous-batching knobs for model serving.
+
+    Attaching a ``ServeSpec`` to a :class:`ClusterSpec` sets the defaults
+    for :meth:`repro.api.Session.serve`'s dynamic batcher:
+
+    * ``max_batch_size`` -- most requests one ``model_fn`` call serves.
+    * ``max_wait_ms``    -- the batching window, measured from the first
+      queued request: a full batch fires immediately, a lone request
+      waits at most this long for company.
+    * ``queue_depth``    -- admission-control bound: requests beyond this
+      many pending are shed with ``ServerOverloaded`` (and counted)
+      instead of growing an unbounded backlog.
+
+    Round-trips through plain dicts like every other spec; the wire dict
+    is exactly what ``ModelServer`` consumes as keyword arguments.
+    """
+
+    max_batch_size: int = 8
+    max_wait_ms: float = 2.0
+    queue_depth: int = 128
+
+    def __init__(
+        self,
+        max_batch_size: int = 8,
+        *,
+        max_wait_ms: float = 2.0,
+        queue_depth: int = 128,
+    ):
+        object.__setattr__(self, "max_batch_size", int(max_batch_size))
+        object.__setattr__(self, "max_wait_ms", float(max_wait_ms))
+        object.__setattr__(self, "queue_depth", int(queue_depth))
+        self.validate()
+
+    def validate(self) -> None:
+        if self.max_batch_size < 1:
+            raise SpecValidationError("max_batch_size must be >= 1")
+        if self.max_wait_ms < 0:
+            raise SpecValidationError("max_wait_ms must be >= 0")
+        if self.queue_depth < 1:
+            raise SpecValidationError("queue_depth must be >= 1")
+
+    def to_dict(self) -> dict[str, Any]:
+        """The exact kwargs ``ModelServer`` consumes."""
+        return {
+            "max_batch_size": self.max_batch_size,
+            "max_wait_ms": self.max_wait_ms,
+            "queue_depth": self.queue_depth,
+        }
+
+    @classmethod
+    def from_dict(cls, config: Mapping[str, Any]) -> "ServeSpec":
+        config = dict(config)
+        return cls(
+            config.pop("max_batch_size", 8),
+            **config,
+        )
+
+
+@dataclass(frozen=True, init=False)
 class ClusterSpec:
     """Declarative description of a :class:`repro.runtime.client.LocalCluster`.
 
@@ -489,6 +547,11 @@ class ClusterSpec:
     thread workers and tcp for process workers.  Process workers need a
     cross-process ``data_plane`` (file/shm/kv); the in-memory default is
     replaced by a cluster-private file store at build time.
+
+    ``serve`` attaches a :class:`ServeSpec`: the continuous-batching
+    defaults (batch size, batching window, admission-queue depth) that
+    ``Session.serve`` uses when standing up a ``ModelServer`` on this
+    cluster.  ``None`` leaves the ``ModelServer`` defaults in force.
     """
 
     n_workers: int = 2
@@ -503,6 +566,7 @@ class ClusterSpec:
     transfer: TransferSpec | None = None
     worker_kind: str = "thread"
     transport: str | None = None
+    serve: ServeSpec | None = None
 
     def __init__(
         self,
@@ -519,6 +583,7 @@ class ClusterSpec:
         transfer: TransferSpec | Mapping[str, Any] | str | None = None,
         worker_kind: str = "thread",
         transport: str | None = None,
+        serve: "ServeSpec | Mapping[str, Any] | None" = None,
     ):
         if isinstance(data_plane, str):
             data_plane = ConnectorSpec(data_plane)
@@ -530,6 +595,8 @@ class ClusterSpec:
             transfer = TransferSpec(transfer)
         elif isinstance(transfer, Mapping):
             transfer = TransferSpec.from_dict(transfer)
+        if isinstance(serve, Mapping):
+            serve = ServeSpec.from_dict(serve)
         object.__setattr__(self, "n_workers", int(n_workers))
         object.__setattr__(self, "threads_per_worker", int(threads_per_worker))
         object.__setattr__(self, "heartbeat_timeout", float(heartbeat_timeout))
@@ -544,6 +611,7 @@ class ClusterSpec:
         object.__setattr__(
             self, "transport", None if transport is None else str(transport)
         )
+        object.__setattr__(self, "serve", serve)
         self.validate()
 
     def validate(self) -> None:
@@ -567,6 +635,8 @@ class ClusterSpec:
             self.memory.validate()
         if self.transfer is not None:
             self.transfer.validate()
+        if self.serve is not None:
+            self.serve.validate()
         if self.worker_kind not in ("thread", "process"):
             raise SpecValidationError(
                 f"worker_kind must be 'thread' or 'process', got "
@@ -605,6 +675,7 @@ class ClusterSpec:
             "transfer": self.transfer.to_dict() if self.transfer is not None else None,
             "worker_kind": self.worker_kind,
             "transport": self.transport,
+            "serve": self.serve.to_dict() if self.serve is not None else None,
         }
 
     @classmethod
@@ -613,6 +684,7 @@ class ClusterSpec:
         data_plane = config.pop("data_plane", None)
         memory = config.pop("memory", None)
         transfer = config.pop("transfer", None)
+        serve = config.pop("serve", None)
         return cls(
             config.pop("n_workers", 2),
             data_plane=(
@@ -620,6 +692,7 @@ class ClusterSpec:
             ),
             memory=MemorySpec.from_dict(memory) if memory else None,
             transfer=TransferSpec.from_dict(transfer) if transfer else None,
+            serve=ServeSpec.from_dict(serve) if serve else None,
             **config,
         )
 
@@ -647,4 +720,5 @@ class ClusterSpec:
             transfer=self.transfer,
             worker_kind=self.worker_kind,
             transport=self.transport,
+            serve=self.serve,
         )

@@ -35,7 +35,6 @@ from concurrent.futures import as_completed as _futures_as_completed
 from typing import Any, Callable, Iterable, Iterator, Sequence, TypeVar
 
 from repro.api.config import ClusterSpec, PolicySpec, StoreConfig
-from repro.core._deprecation import api_managed
 from repro.core.connectors.base import Key
 from repro.core.executor import StoreExecutor
 from repro.core.policy import Policy, SizePolicy
@@ -102,6 +101,12 @@ class Session:
             self.proxy_results = proxy_results
             self.ownership = ownership
             self._owned_keys: dict[str, Key] = {}
+            # Stream endpoints and model servers this session opened, in
+            # open order.  close() drains them (producers flush EOS,
+            # servers drain their admission queues, consumers release
+            # unacked refs) *before* the cluster data plane is wiped.
+            self._streams: list[Any] = []
+            self._servers: list[Any] = []
             self._closed = False
 
             # -- execution backend
@@ -110,24 +115,22 @@ class Session:
             self._cluster = cluster
             self._raw_executor = executor
             if cluster is not None:
-                with api_managed():
-                    self._client = _make_session_client(
-                        self,
-                        cluster,
-                        store=self.store,
-                        policy=self.policy,
-                        proxy_results=proxy_results,
-                    )
+                self._client = _make_session_client(
+                    self,
+                    cluster,
+                    store=self.store,
+                    policy=self.policy,
+                    proxy_results=proxy_results,
+                )
             elif executor is not None:
-                with api_managed():
-                    self._executor = _SessionStoreExecutor(
-                        self,
-                        executor,
-                        self.store,
-                        should_proxy=self.policy,
-                        proxy_results=proxy_results,
-                        ownership=ownership,
-                    )
+                self._executor = _SessionStoreExecutor(
+                    self,
+                    executor,
+                    self.store,
+                    should_proxy=self.policy,
+                    proxy_results=proxy_results,
+                    ownership=ownership,
+                )
         except BaseException:
             # A backend this constructor built must not outlive a failed
             # construction (bad store spec, unknown policy, ...): tear down
@@ -311,6 +314,72 @@ class Session:
         f.set_result(result)
         return f
 
+    # -- streaming & serving (cluster backend) ------------------------------------
+
+    def _stream_hub(self) -> Any:
+        self._check_open()
+        if self._cluster is None:
+            raise ValueError(
+                "streams need the cluster backend: its ResultStore tiers "
+                "carry the payload bytes (use Session(backend='cluster'))"
+            )
+        return self._cluster.streams()
+
+    def stream_producer(
+        self,
+        topic: str,
+        *,
+        buffer: int | None = None,
+        send_timeout: float | None = None,
+    ) -> Any:
+        """A :class:`~repro.runtime.stream.StreamProducer` on ``topic``.
+
+        Payload bytes ride the cluster's store tiers; only (key, ref,
+        nbytes, metadata) events touch the broker.  ``buffer`` bounds the
+        topic's event queue (backpressure); the endpoint is session-owned
+        and flushed/closed by ``Session.close``.
+        """
+        kwargs: dict[str, Any] = {}
+        if buffer is not None:
+            kwargs["buffer"] = buffer
+        if send_timeout is not None:
+            kwargs["send_timeout"] = send_timeout
+        producer = self._stream_hub().producer(topic, **kwargs)
+        self._streams.append(producer)
+        return producer
+
+    def stream_consumer(self, topic: str, *, auto_ack: bool = True) -> Any:
+        """A :class:`~repro.runtime.stream.StreamConsumer` on ``topic``.
+
+        Each consumed item's ack releases its bytes from the cluster
+        store exactly once; ``auto_ack=False`` defers that to
+        ``item.ack()``.  Session-owned: closed by ``Session.close``.
+        """
+        consumer = self._stream_hub().consumer(topic, auto_ack=auto_ack)
+        self._streams.append(consumer)
+        return consumer
+
+    def serve(self, model_fn: Callable[[list[Any]], Sequence[Any]], **overrides: Any) -> Any:
+        """A continuous-batching :class:`~repro.runtime.serving.ModelServer`.
+
+        Batching knobs default from the cluster's :class:`ServeSpec`
+        (``ClusterSpec(serve=...)``); keyword ``overrides`` win.  The
+        server is session-owned: ``Session.close`` drains and stops it.
+        """
+        self._check_open()
+        if self._cluster is None:
+            raise ValueError(
+                "serve() needs the cluster backend "
+                "(use Session(backend='cluster'))"
+            )
+        from repro.runtime.serving import ModelServer
+
+        kwargs = dict(getattr(self._cluster, "serve_config", None) or {})
+        kwargs.update(overrides)
+        server = ModelServer(model_fn, **kwargs)
+        self._servers.append(server)
+        return server
+
     # -- introspection -----------------------------------------------------------
 
     def stats(self) -> dict[str, int]:
@@ -364,6 +433,23 @@ class Session:
             except Exception:  # connector already gone: nothing to leak
                 pass
         self._owned_keys.clear()
+        # Streams drain before the backend dies: model servers finish
+        # admitted requests, producers flush their EOS markers, and
+        # consumers release delivered-but-unacked refs -- all while the
+        # cluster's broker and data plane are still alive.  Reverse open
+        # order closes downstream endpoints before the stages feeding them.
+        for server in reversed(self._servers):
+            try:
+                server.close()
+            except Exception:
+                pass
+        self._servers.clear()
+        for endpoint in reversed(self._streams):
+            try:
+                endpoint.close()
+            except Exception:
+                pass
+        self._streams.clear()
         if self._client is not None:
             self._client.close()
         if self._owns_backend:

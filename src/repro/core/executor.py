@@ -19,7 +19,6 @@ import functools
 from concurrent.futures import Future
 from typing import Any, Callable, TypeVar
 
-from repro.core._deprecation import warn_legacy
 from repro.core.policy import Policy, SizePolicy
 from repro.core.proxy import Proxy, is_proxy
 from repro.core.store import Store, get_or_create_store
@@ -63,7 +62,6 @@ class StoreExecutor:
         ownership: bool = False,
         evict_args_after_use: bool = True,
     ):
-        warn_legacy("StoreExecutor(...)", "repro.api.Session(executor=...)")
         self.executor = executor
         self.store = store
         self.should_proxy: Policy = should_proxy or SizePolicy(100_000)

@@ -13,7 +13,6 @@ import threading
 from collections import OrderedDict
 from typing import Any, Callable, Sequence, TypeVar
 
-from repro.core._deprecation import api_managed, warn_legacy
 from repro.core.connectors.base import Connector, Key, connector_from_config
 from repro.core.plugins import PluginRegistry
 from repro.core.proxy import (
@@ -99,7 +98,6 @@ class Store:
         cache_size: int = 16,
         register: bool = True,
     ):
-        warn_legacy("Store(...)", "repro.api.StoreConfig(...).build() or repro.api.Session")
         self.name = name
         self.connector = connector
         self.serializer_name = serializer
@@ -121,14 +119,13 @@ class Store:
 
     @classmethod
     def from_config(cls, config: dict[str, Any]) -> "Store":
-        with api_managed():  # internal re-open, not a legacy call-site
-            return cls(
-                config["name"],
-                connector_from_config(config["connector"]),
-                serializer=config.get("serializer", "default"),
-                cache_size=config.get("cache_size", 16),
-                register=False,
-            )
+        return cls(
+            config["name"],
+            connector_from_config(config["connector"]),
+            serializer=config.get("serializer", "default"),
+            cache_size=config.get("cache_size", 16),
+            register=False,
+        )
 
     # -- byte-level ------------------------------------------------------------
 

@@ -1,10 +1,15 @@
-"""Production serving driver: batched KV-cache decode with proxy-restored
-weights.
+"""Production serving driver: continuous-batching decode behind the
+streaming data plane, with proxy-restored weights.
 
 Composes: lazy checkpoint restore (pytree of proxies -- each host resolves
 just-in-time), jitted prefill + decode_step with serving shardings
-(``fsdp_params=False``: TP + replication, no per-token weight gathers), and
-a simple continuous-batching request loop over synthetic prompts.
+(``fsdp_params=False``: TP + replication, no per-token weight gathers),
+and the runtime's :class:`~repro.runtime.serving.ModelServer`: requests
+ride a stream topic (prompt bytes through the cluster store tiers, only
+metadata events on the broker), the dynamic batcher groups them up to
+``--batch`` within ``--max-wait-ms``, and generated tokens flow back on a
+reply topic.  Batching knobs travel declaratively as
+``ClusterSpec(serve=ServeSpec(...))``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
         --batch 4 --prompt-len 16 --gen 32
@@ -19,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import ConnectorSpec, StoreConfig
+from repro.api import ClusterSpec, ConnectorSpec, ServeSpec, Session, StoreConfig
 from repro.configs import get_config, get_smoke_config
 from repro.core import is_proxy
 from repro.distributed.sharding import ShardingRules
@@ -28,15 +33,8 @@ from repro.models import whisper as wh
 from repro.train.checkpoint import CheckpointManager
 
 
-def serve(args) -> dict:
-    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
-    n = len(jax.devices())
-    mesh = jax.make_mesh((n, 1), ("data", "model"))
-    rules = ShardingRules(mesh, fsdp_params=False)  # serving layout
-    ctx = tx.RunCtx(mesh=mesh, dp_axes=rules.dp_axes, ep_axis="model",
-                    decode=True)
-
-    # -- weights: from checkpoint store (lazy proxies) or fresh ---------------
+def _load_params(args, cfg):
+    """Weights from the checkpoint store (lazy proxies) or fresh init."""
     if args.run_dir:
         store = StoreConfig(
             f"train-{args.arch}",
@@ -53,45 +51,113 @@ def serve(args) -> dict:
         )
         params = state["params"] if "params" in state else state
         print(f"[restore] lazily resolved step-{step} weights by proxy")
-    else:
-        init = wh.init_params if cfg.is_encdec else tx.init_params
-        params = init(cfg, jax.random.PRNGKey(0))
+        return params
+    init = wh.init_params if cfg.is_encdec else tx.init_params
+    return init(cfg, jax.random.PRNGKey(0))
+
+
+def serve(args) -> dict:
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n, 1), ("data", "model"))
+    rules = ShardingRules(mesh, fsdp_params=False)  # serving layout
+    ctx = tx.RunCtx(mesh=mesh, dp_axes=rules.dp_axes, ep_axis="model",
+                    decode=True)
+    params = _load_params(args, cfg)
 
     B, PL, G = args.batch, args.prompt_len, args.gen
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, PL)).astype(np.int32))
+    n_req = args.requests or 2 * B
 
-    with mesh:
-        prefill = jax.jit(lambda p, t, c: tx.prefill(cfg, p, t, c, ctx))
-        decode = jax.jit(lambda p, c, t, pos: tx.decode_step(cfg, p, c, t, pos, ctx))
-        cache = tx.init_cache(cfg, B, PL + G + 1)
-        t0 = time.perf_counter()
-        logits, cache = prefill(params, prompts, cache)
-        t_prefill = time.perf_counter() - t0
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out = [tok]
-        t0 = time.perf_counter()
-        for i in range(G - 1):
-            pos = jnp.full((B, 1), PL + i, jnp.int32)
-            logits, cache = decode(params, cache, tok, pos)
+    prefill = jax.jit(lambda p, t, c: tx.prefill(cfg, p, t, c, ctx))
+    decode = jax.jit(lambda p, c, t, pos: tx.decode_step(cfg, p, c, t, pos, ctx))
+    timings = {"prefill_s": 0.0, "decode_s": 0.0, "decoded": 0}
+
+    def generate(prompts: list) -> list:
+        """Batched forward for the server: pad to the fixed serving width
+        (one jit compilation), prefill once, step the KV cache."""
+        k = len(prompts)
+        toks = np.stack([np.asarray(p, np.int32) for p in prompts])
+        if k < B:
+            toks = np.concatenate([toks, np.zeros((B - k, PL), np.int32)])
+        with mesh:
+            cache = tx.init_cache(cfg, B, PL + G + 1)
+            t0 = time.perf_counter()
+            logits, cache = prefill(params, jnp.asarray(toks), cache)
+            jax.block_until_ready(logits)
+            timings["prefill_s"] += time.perf_counter() - t0
             tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-            out.append(tok)
-        jax.block_until_ready(tok)
-        t_decode = time.perf_counter() - t0
+            out = [tok]
+            t0 = time.perf_counter()
+            for i in range(G - 1):
+                pos = jnp.full((B, 1), PL + i, jnp.int32)
+                logits, cache = decode(params, cache, tok, pos)
+                tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+                out.append(tok)
+            jax.block_until_ready(tok)
+            timings["decode_s"] += time.perf_counter() - t0
+            timings["decoded"] += k * (G - 1)
+        full = np.asarray(jnp.concatenate(out, axis=1))
+        return [full[i] for i in range(k)]
 
-    tps = B * (G - 1) / t_decode if t_decode else 0.0
-    print(f"prefill {PL} tok x {B} reqs: {t_prefill:.3f}s | "
-          f"decode: {tps:,.1f} tok/s")
-    return {"prefill_s": t_prefill, "decode_tok_s": tps}
+    spec = ClusterSpec(
+        n_workers=1,
+        serve=ServeSpec(max_batch_size=B, max_wait_ms=args.max_wait_ms),
+    )
+    rng = np.random.default_rng(0)
+    t_wall = time.perf_counter()
+    with Session(cluster=spec, name=f"serve-{args.arch}") as session:
+        server = session.serve(generate)
+        server.attach(
+            session.stream_consumer("requests"),
+            session.stream_producer("responses"),
+        )
+        requests = session.stream_producer("requests")
+        responses = session.stream_consumer("responses")
+
+        for _ in range(n_req):
+            prompt = rng.integers(0, cfg.vocab_size, (PL,)).astype(np.int32)
+            requests.send(prompt)
+        requests.close()  # EOS: the pump flushes and closes the reply topic
+
+        outs = {
+            item.metadata["key"]: item.value
+            for item in responses
+            if item.metadata.get("status") == "ok"
+        }
+        t_wall = time.perf_counter() - t_wall
+        sstats = server.stats()
+        hub = session.cluster.streams().stats()
+
+    assert len(outs) == n_req, f"served {len(outs)}/{n_req} requests"
+    tps = timings["decoded"] / timings["decode_s"] if timings["decode_s"] else 0.0
+    print(f"served {n_req} reqs in {sstats['batches']} batches "
+          f"(mean {sstats['mean_batch']:.2f}) | prefill {timings['prefill_s']:.3f}s "
+          f"| decode {tps:,.1f} tok/s")
+    print(f"latency p50/p99: {sstats['latency_p50_ms']:.1f}/"
+          f"{sstats['latency_p99_ms']:.1f} ms | broker {hub['broker_bytes']:,}B "
+          f"vs payload {hub['payload_bytes']:,}B")
+    return {
+        "prefill_s": timings["prefill_s"],
+        "decode_tok_s": tps,
+        "requests": n_req,
+        "wall_s": t_wall,
+        "server": sstats,
+        "stream": hub,
+    }
 
 
 def parse_args(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="serving batch width (ServeSpec.max_batch_size)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--max-wait-ms", type=float, default=5.0,
+                    help="dynamic batcher window (ServeSpec.max_wait_ms)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="request count (default: 2x batch)")
     ap.add_argument("--run-dir", default="",
                     help="restore weights from this train run's store")
     return ap.parse_args(argv)

@@ -5,6 +5,9 @@ the scheduler moves metadata; result bytes move worker-to-worker or
 through the shared cluster store.  The comm subsystem (``comm``) carries
 the control plane over pluggable transports (inproc queues or tcp
 sockets); ``proc`` runs workers in their own interpreters on top of it.
+``stream`` adds the topic-based streaming data plane (events on a broker,
+bytes through the store tiers) and ``serving`` the continuous-batching
+model server built on it.
 """
 
 from repro.runtime.client import Client, LocalCluster, ProxyClient, RuntimeFuture
@@ -17,6 +20,15 @@ from repro.runtime.proc import (
     start_comm_worker,
 )
 from repro.runtime.scheduler import Scheduler
+from repro.runtime.serving import ModelServer, ServerOverloaded
+from repro.runtime.stream import (
+    EndOfStream,
+    StreamClosed,
+    StreamConsumer,
+    StreamHub,
+    StreamItem,
+    StreamProducer,
+)
 from repro.runtime.transfer import (
     BlobCache,
     MissingDependencyError,
@@ -49,4 +61,12 @@ __all__ = [
     "connect",
     "listen",
     "start_comm_worker",
+    "ModelServer",
+    "ServerOverloaded",
+    "StreamHub",
+    "StreamProducer",
+    "StreamConsumer",
+    "StreamItem",
+    "StreamClosed",
+    "EndOfStream",
 ]

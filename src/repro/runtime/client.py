@@ -24,7 +24,6 @@ import uuid
 from concurrent.futures import Future
 from typing import Any, Callable, Iterable, Sequence
 
-from repro.core._deprecation import warn_legacy
 from repro.core.compress import TransferLedger
 from repro.core.executor import _proxy_result_task
 from repro.core.policy import Policy, SizePolicy
@@ -295,7 +294,6 @@ class ProxyClient(Client):
         should_proxy: Policy | None = None,
         proxy_results: bool = True,
     ):
-        warn_legacy("ProxyClient(...)", "repro.api.Session(cluster=...)")
         super().__init__(cluster)
         self.store = ps_store
         self.should_proxy: Policy = should_proxy or SizePolicy(ps_threshold)
@@ -368,8 +366,10 @@ class LocalCluster:
         transfer: Any = None,  # api.TransferSpec | wire dict | None
         worker_kind: str = "thread",  # thread | process
         transport: str | None = None,  # None | inproc | tcp
+        serve: Any = None,  # api.ServeSpec | wire dict | None
     ):
         uid = uuid.uuid4().hex[:8]
+        self._uid = uid
         if worker_kind not in ("thread", "process"):
             raise ValueError(f"worker_kind must be thread|process, got {worker_kind!r}")
         if worker_kind == "process":
@@ -461,6 +461,13 @@ class LocalCluster:
             self._server = CommServer(
                 self.scheduler, address, transfer=self.transfer_config
             )
+        # ServeSpec travels as its wire dict (like MemorySpec/TransferSpec)
+        # so the runtime never imports api; Session.serve() reads the knobs.
+        if serve is not None and hasattr(serve, "to_dict"):
+            serve = serve.to_dict()
+        self.serve_config = dict(serve) if serve is not None else None
+        self._streams = None  # lazy StreamHub (see streams())
+        self._streams_lock = threading.Lock()
         self._comms: dict[str, Any] = {}
         self.workers: dict[str, Any] = {}  # ThreadWorker | ProcessWorker
         for _ in range(n_workers):
@@ -552,6 +559,27 @@ class LocalCluster:
     def get_client(self) -> Client:
         return Client(self)
 
+    def streams(self):
+        """The cluster's lazy :class:`~repro.runtime.stream.StreamHub`.
+
+        Thread clusters get an in-process broker; clusters with a wire
+        transport get a :class:`BrokerServer` on a matching address, so
+        stream events cross the same kind of link as control traffic.
+        Payload bytes always ride ``data_plane`` -- the hub holds a handle,
+        never a copy.
+        """
+        with self._streams_lock:
+            if self._streams is None:
+                from repro.runtime.stream import StreamHub
+
+                address = None
+                if self.transport == "tcp":
+                    address = "tcp://127.0.0.1:0"
+                elif self.transport == "inproc":
+                    address = f"inproc://stream-{self._uid}"
+                self._streams = StreamHub(self.data_plane, address=address)
+            return self._streams
+
     def worker_stats(self) -> dict[str, dict[str, Any]]:
         """Per-worker memory/telemetry view, one row per live worker:
         ``{running, managed_bytes, spilled_bytes, state, bytes_moved,
@@ -603,6 +631,13 @@ class LocalCluster:
         self._comms.clear()
         if self._server is not None:
             self._server.close()
+        # Stream teardown precedes the data-plane wipe: the hub wakes
+        # blocked endpoints and releases unconsumed refs through its
+        # ledger while the store can still honor the evictions.
+        with self._streams_lock:
+            hub, self._streams = self._streams, None
+        if hub is not None:
+            hub.close()
         # The data-plane namespace is cluster-owned: closing the cluster
         # evicts every still-published ref.
         self.data_plane.close()

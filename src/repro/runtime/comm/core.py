@@ -75,6 +75,15 @@ _FAST_TAGS = frozenset(
         M.CLIENT_SHUTDOWN,
         M.FINISHED,
         M.FAILED,
+        # Stream broker control replies/requests: plain-builtin payloads by
+        # protocol.  STREAM_PUB/STREAM_EVT stay on the general path -- their
+        # event dicts carry user metadata, which must round-trip exactly.
+        M.STREAM_OPEN,
+        M.STREAM_NEXT,
+        M.STREAM_OK,
+        M.STREAM_FULL,
+        M.STREAM_EMPTY,
+        M.STREAM_CLOSED,
     }
 )
 

@@ -65,6 +65,21 @@ STOP = "stop"
 FINISHED = "finished"
 FAILED = "failed"
 
+# Stream broker protocol (runtime/stream.py).  Topic *events* -- (key,
+# ref, nbytes, metadata) descriptors, never payload bytes -- ride these
+# tags between stream endpoints and the broker; the bulk bytes they
+# describe travel the ResultStore tiers.  PUB/EVT carry user metadata and
+# therefore take the general codec (tuples must round-trip exactly); the
+# bare control replies are msgpack-fast-path eligible.
+STREAM_OPEN = "stream_open"
+STREAM_PUB = "stream_pub"
+STREAM_NEXT = "stream_next"
+STREAM_EVT = "stream_evt"
+STREAM_OK = "stream_ok"
+STREAM_FULL = "stream_full"
+STREAM_EMPTY = "stream_empty"
+STREAM_CLOSED = "stream_closed"
+
 
 def msg(tag: str, **payload: Any) -> tuple[str, dict[str, Any]]:
     return (tag, payload)

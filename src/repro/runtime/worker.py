@@ -179,6 +179,11 @@ class ThreadWorker:
         self._mem_lock = threading.Lock()
         self._stop = threading.Event()
         self._cancelled: set[str] = set()
+        #: Per-task service time (dep fetch + execute + publish), a rolling
+        #: window feeding the ``task_p50_ms``/``task_p99_ms`` stats fields.
+        self._task_ms: deque[float] = deque(maxlen=1024)
+        self._task_count = 0
+        self._lat_lock = threading.Lock()
         #: Local ready queue: RUN_TASK/RUN_BATCH payloads awaiting an
         #: executor thread.  Guarded by ``_pcv``; STEAL removes from it.
         self._pending: deque[dict[str, Any]] = deque()
@@ -258,6 +263,15 @@ class ThreadWorker:
         copy_stats = self.cache.copies.snapshot()
         with self._pcv:
             queued = len(self._pending)
+        with self._lat_lock:
+            lat = sorted(self._task_ms)
+            task_count = self._task_count
+
+        def _pct(q: float) -> float:
+            if not lat:
+                return 0.0
+            return lat[min(len(lat) - 1, max(0, round(q * (len(lat) - 1))))]
+
         return {
             "state": self.state,
             "managed_bytes": self.managed_bytes(),
@@ -267,6 +281,12 @@ class ThreadWorker:
             "queued": queued,
             "refetch_count": self.refetch_count,
             "zero_copy_hits": self.zero_copy_hits,
+            # Task-latency telemetry: per-task service time percentiles
+            # over a rolling window (what benchmarks/serving.py compares
+            # its request latencies against).
+            "task_count": task_count,
+            "task_p50_ms": _pct(0.50),
+            "task_p99_ms": _pct(0.99),
             "dropped": cache_stats["dropped"],
             "spill_count": cache_stats["spill_count"],
             "restore_count": cache_stats["restore_count"],
@@ -538,6 +558,7 @@ class ThreadWorker:
         if key in self._cancelled:
             return
         inflight = 0
+        t_start = time.monotonic()
         try:
             fn = loads_function(p["func"])
             raw_args = p["args"]
@@ -618,6 +639,9 @@ class ThreadWorker:
                 },
             )
         finally:
+            with self._lat_lock:
+                self._task_ms.append((time.monotonic() - t_start) * 1000.0)
+                self._task_count += 1
             if inflight:
                 self._note_inflight(-inflight)
             elif self.memory_limit is not None:

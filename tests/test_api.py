@@ -2,8 +2,8 @@
 
 Covers: typed spec round-trips (incl. every registered connector), plugin
 registry lookup/errors, the Session facade over all three backends,
-session-exit eviction, and the deprecation shims on the legacy
-constructors.
+session-exit eviction, and that the Session/StoreConfig surface (the only
+construction path since the deprecation shims were removed) is warning-free.
 """
 
 from __future__ import annotations
@@ -354,55 +354,50 @@ def test_session_backend_mismatch_rejected(cluster):
         Session(backend="in-process", cluster=cluster)
 
 
-# -- deprecation shims ---------------------------------------------------------
+# -- post-deprecation API surface ----------------------------------------------
+#
+# The DeprecationWarning shims on direct Store/StoreExecutor/ProxyClient
+# construction are gone: construction is silent everywhere, and the
+# supported entry points are Session / StoreConfig.
 
 
-def test_legacy_store_construction_warns_and_works():
-    from repro.core.connectors import MemoryConnector
-
-    with pytest.warns(DeprecationWarning, match="Store"):
-        s = Store("legacy", MemoryConnector(segment=seg()), register=False)
-    p = s.proxy(np.arange(32))
-    assert np.array_equal(resolve(p), np.arange(32))
-    s.connector.close()
-
-
-def test_legacy_store_executor_warns_and_works():
-    from repro.core.connectors import MemoryConnector
-    from repro.core.executor import StoreExecutor
-
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        store = Store("legacy-exec", MemoryConnector(segment=seg()), register=False)
-    with ThreadPoolExecutor(1) as pool:
-        with pytest.warns(DeprecationWarning, match="StoreExecutor"):
-            ex = StoreExecutor(pool, store)
-        assert ex.submit(lambda x: x + 1, 41).result() == 42
-    store.connector.close()
-
-
-def test_legacy_proxy_client_warns_and_works(cluster):
-    from repro.core.connectors import MemoryConnector
-    from repro.runtime.client import ProxyClient
-
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        store = Store("legacy-pc", MemoryConnector(segment=seg()), register=False)
-    with pytest.warns(DeprecationWarning, match="ProxyClient"):
-        client = ProxyClient(cluster, ps_store=store, ps_threshold=100)
-    try:
-        assert client.submit(lambda x: x * 2, 21).result() == 42
-    finally:
-        client.close()
-        store.connector.close()
-
-
-def test_new_api_paths_do_not_warn():
+def test_store_config_build_is_silent_and_works():
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         cfg = StoreConfig("quiet", ConnectorSpec("memory", segment=seg()))
         store = cfg.build()
         Store.from_config(cfg.to_dict()).connector.close()
-        with Session(store=store):
-            pass
+        p = store.proxy(np.arange(32))
+        assert np.array_equal(resolve(p), np.arange(32))
+        store.connector.close()
+
+
+def test_session_executor_backend_is_silent_and_works():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg = StoreConfig("quiet-exec", ConnectorSpec("memory", segment=seg()))
+        with ThreadPoolExecutor(1) as pool:
+            with Session(executor=pool, store=cfg) as s:
+                assert s.submit(lambda x: x + 1, 41).result() == 42
+
+
+def test_session_cluster_backend_is_silent_and_works(cluster):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg = StoreConfig("quiet-cluster", ConnectorSpec("memory", segment=seg()))
+        with Session(cluster=cluster, store=cfg) as s:
+            assert s.submit(lambda x: x * 2, 21).result() == 42
+
+
+def test_direct_construction_is_silent():
+    # The escape hatch for embedders stays available -- without warnings.
+    from repro.core.connectors import MemoryConnector
+    from repro.core.executor import StoreExecutor
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        store = Store("direct", MemoryConnector(segment=seg()), register=False)
+        with ThreadPoolExecutor(1) as pool:
+            ex = StoreExecutor(pool, store)
+            assert ex.submit(lambda x: x + 1, 1).result() == 2
         store.connector.close()

@@ -17,7 +17,8 @@ from repro.core import (
     get_factory,
     is_proxy,
 )
-from repro.runtime.client import LocalCluster, ProxyClient
+from repro.api import Session
+from repro.runtime.client import LocalCluster
 
 
 # -- policies ------------------------------------------------------------------
@@ -304,27 +305,31 @@ def test_straggler_speculation():
 
 
 # -- pass-by-proxy integration (the paper's Fig 1 mechanism) ------------------------
+#
+# The Session facade is the supported pass-by-proxy surface since the
+# legacy-constructor shims were removed; these integration tests drive
+# the cluster through it.
 
 
-def test_proxy_client_results_match_baseline(store):
+def test_session_proxy_results_match_baseline(store):
     with LocalCluster(n_workers=2) as cluster:
-        with ProxyClient(cluster, ps_store=store, ps_threshold=10_000) as client:
-            a = client.submit(make_big, 50_000)
+        with Session(cluster=cluster, store=store, policy=SizePolicy(10_000)) as s:
+            a = s.submit(make_big, 50_000)
             out = a.result()
             assert is_proxy(out)
             assert float(np.asarray(out).sum()) == 50_000.0
 
 
-def test_proxy_client_dependency_chain(store):
+def test_session_proxy_dependency_chain(store):
     with LocalCluster(n_workers=2) as cluster:
-        with ProxyClient(cluster, ps_store=store, ps_threshold=1000) as client:
-            a = client.submit(make_big, 30_000)
-            b = client.submit(lambda x: np.asarray(x) * 2, a, pure=False)
+        with Session(cluster=cluster, store=store, policy=SizePolicy(1000)) as s:
+            a = s.submit(make_big, 30_000)
+            b = s.submit(lambda x: np.asarray(x) * 2, a, pure=False)
             out = b.result()
             assert float(np.asarray(out)[0]) == 2.0
 
 
-def test_proxy_client_reduces_scheduler_bytes(store):
+def test_session_proxy_reduces_scheduler_bytes(store):
     """The paper's central claim, as an invariant: for large payloads the
     proxy path moves far fewer bytes through the centralized scheduler."""
     payload = np.random.default_rng(0).bytes(1_000_000)
@@ -340,16 +345,16 @@ def test_proxy_client_reduces_scheduler_bytes(store):
                 cluster.scheduler.bytes_through()["in_bytes"] - before
             )
 
-        with ProxyClient(cluster, ps_store=store, ps_threshold=10_000) as pc:
+        with Session(cluster=cluster, store=store, policy=SizePolicy(10_000)) as s:
             before = cluster.scheduler.bytes_through()["in_bytes"]
-            pc.submit(identity, payload, pure=False).result()
+            s.submit(identity, payload, pure=False).result()
             proxy_bytes = cluster.scheduler.bytes_through()["in_bytes"] - before
 
     assert baseline_bytes > 1_000_000
     assert proxy_bytes < baseline_bytes / 20
 
 
-def test_proxy_client_worker_resolves_factory(store):
+def test_session_proxy_worker_resolves_factory(store):
     """Worker-side code sees the target transparently (no code changes)."""
 
     def consume(x):
@@ -359,5 +364,5 @@ def test_proxy_client_worker_resolves_factory(store):
 
     arr = np.full(20_000, 3.0)
     with LocalCluster(n_workers=2) as cluster:
-        with ProxyClient(cluster, ps_store=store, ps_threshold=1000) as client:
-            assert client.submit(consume, arr, pure=False).result() == 3.0
+        with Session(cluster=cluster, store=store, policy=SizePolicy(1000)) as s:
+            assert s.submit(consume, arr, pure=False).result() == 3.0

@@ -1,9 +1,10 @@
 """End-to-end system tests: the paper's integration driving real training.
 
 These exercise the full stack together: LocalCluster scheduler + workers,
-ProxyClient pass-by-proxy, the Store/connector data plane, the proxy-fed
+Session pass-by-proxy, the Store/connector data plane, the proxy-fed
 data pipeline, and checkpoint/restart -- a miniature of the production
-deployment on one node.
+deployment on one node.  Everything goes through the ``repro.api``
+surface (StoreConfig/Session); no direct legacy constructors.
 """
 
 from __future__ import annotations
@@ -15,10 +16,10 @@ import jax
 import numpy as np
 import pytest
 
+from repro.api import ConnectorSpec, Session, StoreConfig
 from repro.configs import get_smoke_config
-from repro.core import SizePolicy, Store, StoreExecutor, is_proxy
-from repro.core.connectors import MemoryConnector
-from repro.runtime.client import LocalCluster, ProxyClient
+from repro.core import SizePolicy, is_proxy
+from repro.runtime.client import LocalCluster
 from repro.train.checkpoint import CheckpointManager
 from repro.train.data import ProxyPrefetcher, synthetic_batch
 from repro.train.optimizer import AdamWConfig
@@ -27,11 +28,11 @@ from repro.train.train_step import init_train_state, make_train_step
 
 @pytest.fixture
 def fresh_store():
-    s = Store(
+    cfg = StoreConfig(
         f"sys-{uuid.uuid4().hex[:8]}",
-        MemoryConnector(segment=f"sys-{uuid.uuid4().hex[:8]}"),
-        register=True,
+        ConnectorSpec("memory", segment=f"sys-{uuid.uuid4().hex[:8]}"),
     )
+    s = cfg.build(register=True)
     yield s
     s.connector.clear()
     s.close()
@@ -81,10 +82,12 @@ def test_distributed_eval_fanout(fresh_store):
         return float(np.asarray(x).sum())
 
     with LocalCluster(n_workers=2) as cluster:
-        with ProxyClient(cluster, ps_store=fresh_store, ps_threshold=10_000) as client:
+        with Session(
+            cluster=cluster, store=fresh_store, policy=SizePolicy(10_000)
+        ) as session:
             before = cluster.scheduler.bytes_through()["in_bytes"]
-            futs = [client.submit(evaluate, weights, x, pure=False) for x in xs]
-            outs = client.gather(futs)
+            futs = [session.submit(evaluate, weights, x, pure=False) for x in xs]
+            outs = session.gather(futs)
             through = cluster.scheduler.bytes_through()["in_bytes"] - before
     expected = [float(x.sum()) for x in xs]
     np.testing.assert_allclose(outs, expected, rtol=1e-9)
@@ -92,19 +95,22 @@ def test_distributed_eval_fanout(fresh_store):
     assert through < 1_500_000
 
 
-def test_store_executor_over_cluster_client(fresh_store):
-    """StoreExecutor composes with the runtime Client (executor-agnostic)."""
+def test_session_executor_over_cluster_client(fresh_store):
+    """The Session executor backend composes with the runtime Client
+    (executor-agnostic: any ``submit``-shaped object works)."""
 
     def square(x):
         return np.asarray(x) ** 2
 
     with LocalCluster(n_workers=2) as cluster:
         client = cluster.get_client()
-        ex = StoreExecutor(client, fresh_store, should_proxy=SizePolicy(1000))
-        arr = np.arange(50_000, dtype=np.float64)
-        fut = ex.submit(square, arr)
-        out = fut.result(timeout=30)
-        np.testing.assert_array_equal(np.asarray(out), arr**2)
+        with Session(
+            executor=client, store=fresh_store, policy=SizePolicy(1000)
+        ) as session:
+            arr = np.arange(50_000, dtype=np.float64)
+            fut = session.submit(square, arr)
+            out = fut.result(timeout=30)
+            np.testing.assert_array_equal(np.asarray(out), arr**2)
         client.close()
 
 
@@ -118,9 +124,11 @@ def test_workflow_with_failures_and_proxies(fresh_store):
         return float(np.asarray(x).sum())
 
     with LocalCluster(n_workers=2, heartbeat_timeout=1.0) as cluster:
-        with ProxyClient(cluster, ps_store=fresh_store, ps_threshold=1000) as client:
-            futs = [client.submit(slow_consume, data, pure=False) for _ in range(6)]
+        with Session(
+            cluster=cluster, store=fresh_store, policy=SizePolicy(1000)
+        ) as session:
+            futs = [session.submit(slow_consume, data, pure=False) for _ in range(6)]
             time.sleep(0.1)
             cluster.kill_worker(next(iter(cluster.workers)))
-            outs = client.gather(futs)
+            outs = session.gather(futs)
     assert outs == [100_000.0] * 6
