@@ -74,6 +74,7 @@ FAILED = "failed"
 STREAM_OPEN = "stream_open"
 STREAM_PUB = "stream_pub"
 STREAM_NEXT = "stream_next"
+STREAM_DEPTH = "stream_depth"
 STREAM_EVT = "stream_evt"
 STREAM_OK = "stream_ok"
 STREAM_FULL = "stream_full"

@@ -277,11 +277,16 @@ class ModelServer:
                 if not self._queue:
                     break
             time.sleep(0.005)
-        # the in-flight batch (already popped) finishes inside _run; give
-        # its futures a moment to resolve via a queue-empty + batches probe
+        # The in-flight batch (already popped) finishes inside _run; wait
+        # until every *admitted* request has been batched.  Both counters
+        # count admitted requests only -- sheds increment ``_rejected``,
+        # never ``_requests``, so they must not appear on either side of
+        # this comparison (a shed would otherwise let flush() return while
+        # the final batch is still inside model_fn, and the pump would
+        # close the reply stream under in-flight responses).
         while time.monotonic() < deadline:
             with self._cond:
-                if self._batched_requests + self._rejected >= self._requests:
+                if self._batched_requests >= self._requests:
                     return
             time.sleep(0.005)
 

@@ -33,9 +33,13 @@ Semantics:
 * **Work-queue topics**: concurrent consumers on one topic compete for
   events (each event is delivered to exactly one consumer), which is
   what keeps ack-driven eviction exactly-once.
-* **End-of-stream**: ``producer.close()`` appends an EOS event after
-  everything already queued; consumers see all items, then
-  :class:`EndOfStream` (iteration simply stops).
+* **End-of-stream**: ``producer.close()`` marks the topic ended.  EOS is
+  broker-side *topic state*, not a competed-for event: the queue drains
+  everything already buffered first, then reports end-of-stream to
+  **every** consumer (each sees :class:`EndOfStream`; iteration simply
+  stops) -- fan-out that a single work-queue marker could not provide.
+  Because EOS never occupies a buffer slot, closing a producer never
+  blocks on a full topic.
 * **Mid-stream close**: closing a consumer, the hub, or the cluster
   wakes blocked ``recv`` calls with :class:`StreamClosed` within one
   poll interval -- nothing blocks on a dead stream.
@@ -75,6 +79,12 @@ _POLL = 0.1
 #: consumer is gone, not slow.
 DEFAULT_SEND_TIMEOUT = 30.0
 
+#: Timeout for the EOS publish inside ``producer.close()``.  Setting EOS
+#: is buffer-independent (topic state, not an enqueued event), so this
+#: only bounds a wedged wire RPC -- it must stay short: Session.close
+#: closes consumers before producers, and shutdown must not stall on it.
+_EOS_CLOSE_TIMEOUT = 2.0
+
 
 class StreamClosed(RuntimeError):
     """The stream endpoint (or its hub/cluster) was closed mid-stream."""
@@ -87,12 +97,26 @@ class EndOfStream(Exception):
 # -- topic queues --------------------------------------------------------------
 
 
+class _EndOfTopic(Exception):
+    """Internal: the topic's EOS state was reached (queue drained + ended).
+
+    Raised by :meth:`_TopicQueue.get` so each broker can translate it into
+    an ``{"eos": True}`` event for its own protocol.  Never escapes the
+    broker layer.
+    """
+
+
 class _TopicQueue:
     """Bounded event queue with close-wakes-everyone semantics.
 
     ``put`` blocks while full, ``get`` blocks while empty; ``close`` wakes
     both sides, after which ``get`` drains what remains and then raises
     :class:`StreamClosed` (a close must not eat queued events).
+
+    End-of-stream is queue *state* (:meth:`set_eos`), not an enqueued
+    item: once set, every ``get`` first drains the buffered events, then
+    raises :class:`_EndOfTopic` -- so EOS fans out to all competing
+    consumers and never occupies a buffer slot.
     """
 
     def __init__(self, maxsize: int):
@@ -100,6 +124,7 @@ class _TopicQueue:
         self._items: deque[Any] = deque()
         self._cond = threading.Condition()
         self._closed = False
+        self._eos = False
 
     def put(self, item: Any, timeout: float | None = None) -> None:
         deadline = None if timeout is None else time.monotonic() + timeout
@@ -117,7 +142,7 @@ class _TopicQueue:
     def get(self, timeout: float | None = None) -> Any:
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cond:
-            while not self._items and not self._closed:
+            while not self._items and not self._closed and not self._eos:
                 remaining = _POLL if deadline is None else deadline - time.monotonic()
                 if remaining <= 0:
                     raise TimeoutError("no event")
@@ -126,7 +151,14 @@ class _TopicQueue:
                 item = self._items.popleft()
                 self._cond.notify_all()
                 return item
+            if self._eos:  # drained + ended beats closed: EOS is the
+                raise _EndOfTopic  # graceful signal, close the abrupt one
             raise StreamClosed("topic closed")
+
+    def set_eos(self) -> None:
+        with self._cond:
+            self._eos = True
+            self._cond.notify_all()
 
     def close(self) -> None:
         with self._cond:
@@ -176,15 +208,28 @@ class InprocBroker:
             return q
 
     def put(self, topic: str, event: dict[str, Any], timeout: float | None) -> None:
+        if event.get("eos"):
+            # EOS is topic state, not an enqueued event: it never takes a
+            # buffer slot (so close never blocks on a full topic) and it
+            # fans out to every consumer once the queue drains.
+            self._queue(topic).set_eos()
+            return
         blob = encode_message(M.msg(M.STREAM_EVT, **event))
         self._queue(topic).put(blob, timeout=timeout)
         self.counter.add_sent(len(blob))
 
     def get(self, topic: str, timeout: float | None) -> dict[str, Any]:
-        blob = self._queue(topic).get(timeout=timeout)
+        try:
+            blob = self._queue(topic).get(timeout=timeout)
+        except _EndOfTopic:
+            return {"eos": True}
         self.counter.add_recv(len(blob))
         _, event = decode_message(blob)
         return event
+
+    def depth(self, topic: str) -> int:
+        """Events still buffered on ``topic`` (EOS state takes no slot)."""
+        return len(self._queue(topic))
 
     def bytes_total(self) -> int:
         snap = self.counter.snapshot()
@@ -214,9 +259,14 @@ class BrokerServer:
     * ``STREAM_PUB   {topic, event, timeout}`` -> ``STREAM_OK`` once the
       event is *enqueued* (``STREAM_FULL`` on timeout, ``STREAM_CLOSED``
       after close) -- the delayed reply is what carries bounded-buffer
-      backpressure across the wire,
+      backpressure across the wire.  An ``{eos: true}`` event sets the
+      topic's end-of-stream state instead of enqueueing (never blocks,
+      fans out to all consumers),
     * ``STREAM_NEXT  {topic, timeout}``        -> ``STREAM_EVT {event...}``
-      (``STREAM_EMPTY`` on timeout, ``STREAM_CLOSED`` after close).
+      (``STREAM_EVT {eos: true}`` once drained past end-of-stream,
+      ``STREAM_EMPTY`` on timeout, ``STREAM_CLOSED`` after close),
+    * ``STREAM_DEPTH {topic}``                 -> ``STREAM_OK {depth}`` --
+      the buffered-event count that lets remote producers ``flush()``.
 
     A blocked publish occupies only its own connection's handler thread,
     so one stalled producer never wedges consumers.
@@ -275,6 +325,10 @@ class BrokerServer:
             comm.send(M.msg(M.STREAM_OK))
         elif tag == M.STREAM_PUB:
             q = self._queue(p["topic"])
+            if p["event"].get("eos"):
+                q.set_eos()
+                comm.send(M.msg(M.STREAM_OK))
+                return
             try:
                 q.put(p["event"], timeout=p.get("timeout", DEFAULT_SEND_TIMEOUT))
                 comm.send(M.msg(M.STREAM_OK))
@@ -287,10 +341,14 @@ class BrokerServer:
             try:
                 event = q.get(timeout=p.get("timeout", _POLL))
                 comm.send(M.msg(M.STREAM_EVT, **event))
+            except _EndOfTopic:
+                comm.send(M.msg(M.STREAM_EVT, eos=True))
             except TimeoutError:
                 comm.send(M.msg(M.STREAM_EMPTY))
             except StreamClosed:
                 comm.send(M.msg(M.STREAM_CLOSED))
+        elif tag == M.STREAM_DEPTH:
+            comm.send(M.msg(M.STREAM_OK, depth=len(self._queue(p["topic"]))))
         else:  # unknown request: answer, never hang the client RPC
             comm.send(M.msg(M.STREAM_CLOSED))
 
@@ -361,6 +419,12 @@ class CommBrokerChannel:
         if tag == M.STREAM_EMPTY:
             raise TimeoutError("no event")
         raise StreamClosed("topic closed")
+
+    def depth(self, topic: str) -> int:
+        tag, p = self._rpc(M.msg(M.STREAM_DEPTH, topic=topic), 5.0)
+        if tag != M.STREAM_OK:
+            raise StreamClosed("topic closed")
+        return int(p.get("depth", 0))
 
     def close(self) -> None:
         try:
@@ -596,24 +660,41 @@ class StreamProducer:
             raise
         return key
 
-    def flush(self) -> None:
-        """Block until every sent event has left the topic buffer."""
-        q = getattr(self._channel, "_queue", None)
-        if callable(q):  # inproc broker: observe the queue directly
-            queue = q(self.topic)
-            while len(queue) and not self._closed:
-                time.sleep(_POLL / 5)
+    def flush(self, timeout: float = DEFAULT_SEND_TIMEOUT) -> None:
+        """Block until every sent event has left the topic buffer.
+
+        Works on both broker substrates -- the inproc broker observes its
+        queue directly, wire channels ask via a ``STREAM_DEPTH`` RPC --
+        and raises :class:`TimeoutError` if the topic has not drained
+        within ``timeout``.  Returns immediately once the producer (or
+        the topic behind it) is closed: there is nothing left to drain.
+        """
+        deadline = time.monotonic() + timeout
+        while not self._closed:
+            try:
+                if self._channel.depth(self.topic) == 0:
+                    return
+            except StreamClosed:
+                return  # topic/hub gone: queued events can never drain
+            if time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"stream {self.topic!r} did not drain in {timeout:.1f}s"
+                )
+            time.sleep(_POLL / 5)
 
     def close(self) -> None:
-        """Flush the EOS marker into the topic; idempotent.
+        """Mark the topic ended; idempotent.
 
-        Events already queued are delivered first -- EOS rides the same
-        ordered queue -- then consumers see :class:`EndOfStream`.
+        Events already queued are delivered first -- EOS is broker-side
+        topic state reported only after the queue drains -- then *every*
+        consumer sees :class:`EndOfStream`.  Setting EOS never waits for
+        buffer space, so close stays prompt even with a full topic and no
+        consumers left; the short timeout below only guards a wedged wire.
         """
         if self._closed:
             return
         try:
-            self._put({"eos": True}, DEFAULT_SEND_TIMEOUT)
+            self._put({"eos": True}, _EOS_CLOSE_TIMEOUT)
         except (TimeoutError, StreamClosed):
             pass  # topic gone or wedged: consumers are woken by hub close
         finally:

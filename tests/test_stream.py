@@ -212,6 +212,67 @@ def test_eos_after_queued_items(hub):
         prod.send(3)  # closed producer refuses new sends
 
 
+def test_eos_fans_out_to_all_consumers(hub):
+    """EOS is topic state, not a competed-for work-queue event: every
+    consumer on the topic observes EndOfStream after the items drain,
+    not just the one that would have popped a marker."""
+    prod = hub.producer("fan")
+    c1 = hub.consumer("fan")
+    c2 = hub.consumer("fan")
+    prod.send(1)
+    prod.send(2)
+    prod.close()
+    got = sorted([c1.recv(timeout=5).value, c2.recv(timeout=5).value])
+    assert got == [1, 2]
+    with pytest.raises(EndOfStream):
+        c1.recv(timeout=5)
+    with pytest.raises(EndOfStream):
+        c2.recv(timeout=5)
+
+
+def test_eos_fans_out_over_wire_broker():
+    """Same fan-out across the BrokerServer request/reply protocol."""
+    with LocalCluster(n_workers=1, transport="inproc") as cluster:
+        hub = cluster.streams()
+        prod = hub.producer("fanw")
+        c1 = hub.consumer("fanw")
+        c2 = hub.consumer("fanw")
+        prod.send(b"only")
+        prod.close()
+        assert c1.recv(timeout=5).value == b"only"
+        with pytest.raises(EndOfStream):
+            c1.recv(timeout=5)
+        with pytest.raises(EndOfStream):
+            c2.recv(timeout=5)
+
+
+def test_producer_close_prompt_with_full_buffer(hub):
+    """EOS takes no buffer slot: closing against a full topic with no
+    consumer must not wait out the send timeout."""
+    prod = hub.producer("full", buffer=1)
+    prod.send(b"x")
+    t0 = time.monotonic()
+    prod.close()
+    assert time.monotonic() - t0 < 1.0
+    # The queued item stays tracked until the hub releases it.
+    assert len(hub.ledger.live_refs()) == 1
+
+
+def test_flush_observes_wire_broker_depth():
+    """flush() must see the real queue depth through the STREAM_DEPTH
+    RPC on wire clusters -- not silently no-op like the old duck-typed
+    inproc-only path."""
+    with LocalCluster(n_workers=1, transport="inproc") as cluster:
+        hub = cluster.streams()
+        prod = hub.producer("fl")
+        cons = hub.consumer("fl")
+        prod.send(b"x")
+        with pytest.raises(TimeoutError):
+            prod.flush(timeout=0.4)  # nothing consuming: still buffered
+        assert cons.recv(timeout=5).value == b"x"
+        prod.flush(timeout=5)  # drained: returns promptly
+
+
 def test_close_wakes_blocked_consumer(hub):
     cons = hub.consumer("idle")
     woke: list[BaseException] = []
@@ -323,6 +384,52 @@ def test_admission_control_sheds_when_full():
         assert server.stats()["served"] == 3
     finally:
         release.set()
+        server.close()
+
+
+def test_flush_not_fooled_by_sheds():
+    """A shed must not let flush() return while the final batch is still
+    inside model_fn: rejected submissions never enter ``_requests``, so
+    counting them toward drain progress would close reply streams under
+    in-flight responses (the served == n_req invariant under shedding)."""
+    permits = threading.Semaphore(0)
+    calls: list[list] = []
+
+    def fn(batch):
+        calls.append(list(batch))
+        assert permits.acquire(timeout=30)
+        return list(batch)
+
+    server = ModelServer(fn, max_batch_size=1, max_wait_ms=1.0, queue_depth=1)
+    try:
+        fa = server.submit("a")
+        deadline = time.monotonic() + 10
+        while len(calls) < 1 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        server.submit("b")  # queue now at depth
+        with pytest.raises(ServerOverloaded):
+            server.submit("c")  # shed: rejected=1
+        permits.release()  # "a" completes; "b" becomes the in-flight batch
+        assert fa.result(timeout=10) == "a"
+        while len(calls) < 2 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        # Queue empty, rejected=1, "b" in flight: the buggy drain check
+        # (batched + rejected >= admitted) returned here.
+        flushed = threading.Event()
+
+        def _flush():
+            server.flush(timeout=10)
+            flushed.set()
+
+        t = threading.Thread(target=_flush, daemon=True)
+        t.start()
+        assert not flushed.wait(timeout=0.4)  # "b" still inside model_fn
+        permits.release()
+        assert flushed.wait(timeout=10)
+        assert server.stats()["served"] == 2
+    finally:
+        permits.release()
+        permits.release()
         server.close()
 
 
