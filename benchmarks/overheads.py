@@ -23,8 +23,8 @@ import uuid
 import numpy as np
 
 from benchmarks.common import QUICK, bench_store_config, record, save_artifact, timeit
-from repro.api import ClusterSpec, PolicySpec, Session
-from repro.core.compress import LINK_SHM, LINK_TCP, TransferLedger
+from repro.api import ClusterSpec, PolicySpec, Session, TransferSpec
+from repro.core.compress import LINK_PEER, LINK_SHM, LINK_TCP, TransferLedger
 from repro.core.serialize import CopyCounter, FrameBundle, deserialize, serialize
 from repro.runtime import comm as rcomm
 from repro.runtime.client import LocalCluster
@@ -573,4 +573,237 @@ def smoke(payload: int = 65_536, reps: int = 3) -> bool:
         base.close()
     finally:
         cluster.close()
+    return ok
+
+
+def _pw_block(i):
+    """Fan-in producer: a 3.2 MB array block (module-level: spawn-safe)."""
+    return np.full(400_000, float(i), dtype=np.float64)
+
+
+def _pw_sum(*arrs):
+    return float(sum(a.sum() for a in arrs))
+
+
+def peer_wire(payloads_mib: list[int] | None = None, reps: int | None = None) -> dict:
+    """Peer data-plane row: effective fetch throughput for a dependency
+    hot in the producing worker's cache -- direct worker-to-worker wire
+    fetch (``DataServer``/``PeerWireClient`` over real loopback tcp) vs
+    the store-only fallback (file-connector publish + fetch round trip
+    with fresh keys: what every cross-worker dependency paid before the
+    peer data plane).  Random payloads keep both paths honest -- neither
+    side gets a compression discount -- and the consumer touches every
+    byte on both (``to_bytes``), so the store's lazy mmap view cannot
+    defer its read cost out of the measurement.
+
+    The store path is primed past the page cache's writeback threshold
+    (~48 MiB of fresh dirty pages) before timing: fresh keys mean fresh
+    writes, and the *sustained* fresh-key throughput -- not the
+    empty-cache burst of the first few publishes -- is what a cluster
+    resolving many cross-worker dependencies actually gets.
+
+    Saved to ``artifacts/bench/smoke_peer_wire.json`` (the smoke guard
+    asserts on the same dict).
+    """
+    import tempfile
+
+    from repro.runtime.dataserver import DataServer, PeerWireClient
+
+    payloads_mib = payloads_mib or (ZC_PAYLOADS_MIB[:2] if QUICK else ZC_PAYLOADS_MIB)
+    reps = reps if reps is not None else (3 if QUICK else 5)
+    out: dict = {
+        "payload_mib": list(payloads_mib),
+        "store_mib_s": [],
+        "direct_mib_s": [],
+        "fetch_speedup": [],
+    }
+
+    ledger = TransferLedger()
+    rng = np.random.default_rng(17)
+    with tempfile.TemporaryDirectory(prefix="pw-bench-") as store_dir:
+        store = ResultStore(
+            {
+                "name": f"pw-{uuid.uuid4().hex[:6]}",
+                "connector": {"connector_type": "file", "store_dir": store_dir},
+                "serializer": "default",
+                "cache_size": 0,
+            }
+        )
+        try:
+            for mib in payloads_mib:
+                payload = rng.bytes(mib << 20)
+                bundle = FrameBundle([memoryview(payload)])
+                cap = 4 * len(payload) + (1 << 20)
+
+                # Direct wire: the producer's cache served over tcp, one
+                # pooled connection, fresh assembly per rep.
+                src = BlobCache(max_bytes=cap)
+                src.put("dep", bundle)
+                server = DataServer(src, "tcp://127.0.0.1:0", ledger=ledger)
+                client = PeerWireClient(ledger=ledger)
+                sink = BlobCache(max_bytes=cap)
+                try:
+                    direct = timeit(
+                        lambda: (
+                            client.fetch(server.address, "dep", sink=sink)
+                            .to_bytes(),
+                            sink.pop("dep"),
+                        ),
+                        reps=reps,
+                    )
+                finally:
+                    client.close()
+                    server.close()
+
+                # Store-only fallback: publish + fetch with a fresh key
+                # per rep (worst case: nothing reused, as in fig3),
+                # primed to sustained fresh-key throughput first.
+                for i in range(max(1, (48 << 20) // len(payload))):
+                    store.fetch(
+                        store.publish(f"prime-{mib}-{i}", bundle), len(payload)
+                    ).to_bytes()
+                refs = iter(f"dep-{mib}-{i}" for i in range(reps + 1))
+                store_t = timeit(
+                    lambda: store.fetch(
+                        store.publish(next(refs), bundle), len(payload)
+                    ).to_bytes(),
+                    reps=reps,
+                )
+
+                mib_s = lambda t: mib / max(t, 1e-9)  # noqa: E731
+                speedup = store_t["median"] / max(direct["median"], 1e-9)
+                out["store_mib_s"].append(mib_s(store_t["median"]))
+                out["direct_mib_s"].append(mib_s(direct["median"]))
+                out["fetch_speedup"].append(speedup)
+                record(
+                    f"peer_wire/direct/{mib}MiB", mib_s(direct["median"]),
+                    f"store={mib_s(store_t['median']):.0f}MiB/s "
+                    f"speedup={speedup:.1f}x",
+                )
+        finally:
+            store.close()
+
+    out["peer_wire_ledger"] = ledger.snapshot().get(LINK_PEER, {})
+    save_artifact("smoke_peer_wire", out)
+    return out
+
+
+def _peer_wire_fanin(transfer: TransferSpec | None) -> dict:
+    """One 2-process-worker tcp fan-in (4 producers, 1 consumer): hub
+    bytes/msgs per task, peer-wire counters, and -- on the peer-enabled
+    run -- the kill-the-serving-worker recovery check."""
+    expected = sum(i * 400_000 for i in range(4))
+    spec_kw: dict = {"heartbeat_timeout": 10.0}
+    if transfer is not None:
+        spec_kw["transfer"] = transfer
+    cluster = ClusterSpec(
+        2, worker_kind="process", transport="tcp", **spec_kw
+    ).build()
+    try:
+        cluster.wait_for_workers(timeout=90)
+        client = cluster.get_client()
+        hub0, msg0 = _hub_bytes(cluster), _hub_msgs(cluster)
+        futs = [client.submit(_pw_block, i, pure=False) for i in range(4)]
+        [f.result(timeout=120) for f in futs]
+        total = client.submit(_pw_sum, *futs, pure=False).result(timeout=120)
+        n_tasks = 5
+        res = {
+            "correct": total == expected,
+            "hub_bytes_per_task": (_hub_bytes(cluster) - hub0) / n_tasks,
+            "msgs_per_task": (_hub_msgs(cluster) - msg0) / n_tasks,
+            "payload_bytes_per_task": 4 * 3_200_000 / n_tasks,
+        }
+        # Counters ride the heartbeat: poll until one lands (or accept the
+        # zeros after 15 s -- the guard will then fail loudly).
+        deadline = time.monotonic() + 15
+        while True:
+            res["peer_wire_hits"] = sum(
+                s.get("peer_wire_hits", 0)
+                for s in cluster.worker_stats().values()
+            )
+            res["peer_wire_ledger"] = dict(
+                cluster.transfer_summary().get(LINK_PEER, {})
+            )
+            want = transfer is None or transfer.peer_transfer
+            if not want or (
+                res["peer_wire_hits"] > 0
+                and res["peer_wire_ledger"].get("logical_bytes", 0) > 0
+            ) or time.monotonic() > deadline:
+                break
+            time.sleep(0.2)
+        if transfer is None or transfer.peer_transfer:
+            # Recovery: kill one worker (its data server dies with it) and
+            # re-run the fan-in over the same futures -- must complete
+            # byte-correctly via store fallback / lineage recovery.
+            cluster.kill_worker(next(iter(cluster.workers)))
+            again = client.submit(_pw_sum, *futs, pure=False).result(timeout=120)
+            res["recovered_after_kill"] = again == expected
+        return res
+    finally:
+        cluster.close()
+
+
+def peer_wire_smoke() -> bool:
+    """CI guard for the peer data plane.
+
+    Fails (returns False) when: the direct wire fetch is not >= 2x the
+    file-store publish+fetch round trip at 8 MiB; the peer-wire ledger
+    row is empty; a real 2-process-worker fan-in moves payload bytes
+    through the scheduler (the hub must stay metadata-only) or resolves
+    no dependency over the peer wire; the fan-in costs more scheduler
+    messages per task than the store-only baseline (the data plane must
+    not add control traffic); or killing the serving worker strands the
+    consumer (it must recover via store fallback / lineage recovery).
+    """
+    out = peer_wire()
+    ok = True
+    guard_mib = 8 if 8 in out["payload_mib"] else out["payload_mib"][-1]
+    speedup = out["fetch_speedup"][out["payload_mib"].index(guard_mib)]
+    if speedup < 2.0:
+        print(f"# SMOKE FAIL: direct wire fetch only {speedup:.2f}x the "
+              f"file-store round trip at {guard_mib} MiB (must be >= 2x)")
+        ok = False
+    if out["peer_wire_ledger"].get("wire_bytes", 0) <= 0:
+        print("# SMOKE FAIL: peer-wire ledger row empty after direct fetches")
+        ok = False
+
+    peer = _peer_wire_fanin(None)
+    base = _peer_wire_fanin(TransferSpec(peer_transfer=False))
+    out["fanin_peer"] = peer
+    out["fanin_store_only"] = base
+    record(
+        "peer_wire/fanin/hub_bytes_per_task", peer["hub_bytes_per_task"],
+        f"store_only={base['hub_bytes_per_task']:.0f}B "
+        f"msgs/task={peer['msgs_per_task']:.2f} "
+        f"hits={peer['peer_wire_hits']}",
+    )
+    if not (peer["correct"] and base["correct"]):
+        print("# SMOKE FAIL: fan-in computed the wrong total")
+        ok = False
+    if peer["peer_wire_hits"] < 1:
+        print("# SMOKE FAIL: fan-in resolved no dependency over the peer wire")
+        ok = False
+    if peer["peer_wire_ledger"].get("logical_bytes", 0) <= 0:
+        print("# SMOKE FAIL: cluster peer-wire ledger row empty after fan-in")
+        ok = False
+    # Metadata-only hub: 3.2 MB blocks cross worker-to-worker, never the
+    # scheduler.  64 kB/task is many times the control traffic and ~2% of
+    # one block.
+    if peer["hub_bytes_per_task"] > 64_000:
+        print(f"# SMOKE FAIL: {peer['hub_bytes_per_task']:.0f}B/task crossed "
+              f"the scheduler -- the hub must stay metadata-only")
+        ok = False
+    # Message parity: the peer data plane rides existing REGISTER/
+    # heartbeat/task traffic (1.5x + 2 absorbs heartbeat timing noise).
+    if peer["msgs_per_task"] > base["msgs_per_task"] * 1.5 + 2:
+        print(f"# SMOKE FAIL: {peer['msgs_per_task']:.2f} msgs/task with peer "
+              f"wire vs {base['msgs_per_task']:.2f} store-only -- the data "
+              f"plane must not add scheduler messages")
+        ok = False
+    if not peer.get("recovered_after_kill", False):
+        print("# SMOKE FAIL: fan-in did not recover after the serving "
+              "worker was killed")
+        ok = False
+    out["ok"] = ok
+    save_artifact("smoke_peer_wire", out)
     return ok

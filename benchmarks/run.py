@@ -34,7 +34,14 @@ shm link must show zero compression activity in the transfer ledger.
 It also guards continuous-batching serving: at saturation the batched
 server must hold >= 2x the unbatched throughput with a bounded p99 while
 the stream broker carries only metadata-sized events (payload bytes ride
-the store tiers).  Wired into ``scripts/ci.sh smoke-process``.
+the store tiers).  And it guards the peer data plane: the direct
+worker-to-worker wire fetch must stay >= 2x the sustained file-store
+round trip at 8 MiB, a real 2-process-worker fan-in must resolve
+dependencies over the peer wire with the scheduler hub staying
+metadata-only at message parity with the store-only baseline, and
+killing the serving worker must not strand the consumer (store
+fallback / lineage recovery).  Wired into ``scripts/ci.sh
+smoke-process``.
 """
 
 from __future__ import annotations
@@ -65,6 +72,7 @@ def main() -> None:
         ok = overheads.zerocopy_smoke() and ok
         ok = overheads.compression_smoke() and ok
         ok = serving.serving_smoke() and ok
+        ok = overheads.peer_wire_smoke() and ok
         print(f"# smoke-process {'PASS' if ok else 'FAIL'}", flush=True)
         sys.exit(0 if ok else 1)
 

@@ -61,8 +61,12 @@ cmd_smoke_process() {
   # artifacts.  The continuous-batching serving guard runs here too:
   # at saturation the batched server must hold >= 2x the unbatched
   # throughput with a bounded p99 while the stream broker carries only
-  # metadata-sized events.  JSON lands in artifacts/bench/ for the CI
-  # artifact upload.
+  # metadata-sized events.  The peer-data-plane guard closes the set:
+  # direct worker-to-worker wire fetches >= 2x the sustained file-store
+  # round trip at 8 MiB, a live 2-process-worker fan-in resolving deps
+  # over the peer wire with a metadata-only hub at store-only message
+  # parity, and clean recovery when the serving worker is killed.
+  # JSON lands in artifacts/bench/ for the CI artifact upload.
   BENCH_QUICK=1 python -m benchmarks.run --smoke-process
 }
 

@@ -384,11 +384,21 @@ class TransferSpec:
       keeps demotes raw).  Disk reads decode transparently.
     * ``level``            -- deflate level for the zlib-family codecs.
 
+    It also carries the peer data plane knobs (direct worker-to-worker
+    wire transfers on process clusters, ``runtime/dataserver.py``):
+
+    * ``peer_transfer``    -- run a per-worker data server + pooled
+      client so dependencies resolve cache -> shm -> peer wire -> store
+      (default on; ``False`` restores the store-only byte path).
+    * ``pool_size``        -- connection pool cap per peer address.
+    * ``chunk_bytes``      -- transfer chunk size for both the in-proc
+      peer mesh (``PeerTransfer``) and the wire path.
+
     The ``same-host-shm`` and ``inproc`` link classes are hard-wired to
     no compression regardless of these knobs: the zero-copy paths must
     never grow a copy.  Round-trips through plain dicts like every other
-    spec; the wire dict is exactly what ``TransferPolicy.from_config``
-    consumes.
+    spec; ``TransferPolicy.from_config`` consumes the compression subset
+    of the wire dict and ignores the rest.
     """
 
     compression: str = "auto"
@@ -396,6 +406,9 @@ class TransferSpec:
     probe_ratio: float = 0.9
     spill_compression: str | None = None
     level: int = 1
+    peer_transfer: bool = True
+    pool_size: int = 2
+    chunk_bytes: int = 4 * 1024 * 1024  # runtime.transfer.DEFAULT_CHUNK_BYTES
 
     def __init__(
         self,
@@ -405,12 +418,18 @@ class TransferSpec:
         probe_ratio: float = 0.9,
         spill_compression: str | None = None,
         level: int = 1,
+        peer_transfer: bool = True,
+        pool_size: int = 2,
+        chunk_bytes: int = 4 * 1024 * 1024,
     ):
         object.__setattr__(self, "compression", str(compression))
         object.__setattr__(self, "min_frame_bytes", int(min_frame_bytes))
         object.__setattr__(self, "probe_ratio", float(probe_ratio))
         object.__setattr__(self, "spill_compression", spill_compression)
         object.__setattr__(self, "level", int(level))
+        object.__setattr__(self, "peer_transfer", bool(peer_transfer))
+        object.__setattr__(self, "pool_size", int(pool_size))
+        object.__setattr__(self, "chunk_bytes", int(chunk_bytes))
         self.validate()
 
     def validate(self) -> None:
@@ -435,15 +454,28 @@ class TransferSpec:
             )
         if self.level < 0 or self.level > 9:
             raise SpecValidationError(f"level must be in [0, 9], got {self.level}")
+        if self.pool_size < 1:
+            raise SpecValidationError(
+                f"pool_size must be >= 1, got {self.pool_size}"
+            )
+        if self.chunk_bytes < 1:
+            raise SpecValidationError(
+                f"chunk_bytes must be >= 1, got {self.chunk_bytes}"
+            )
 
     def to_dict(self) -> dict[str, Any]:
-        """The exact wire format ``TransferPolicy.from_config`` consumes."""
+        """The wire format: ``TransferPolicy.from_config`` consumes the
+        compression subset; the peer-transfer knobs are read by
+        ``LocalCluster`` / ``proc.start_comm_worker``."""
         return {
             "compression": self.compression,
             "min_frame_bytes": self.min_frame_bytes,
             "probe_ratio": self.probe_ratio,
             "spill_compression": self.spill_compression,
             "level": self.level,
+            "peer_transfer": self.peer_transfer,
+            "pool_size": self.pool_size,
+            "chunk_bytes": self.chunk_bytes,
         }
 
     @classmethod

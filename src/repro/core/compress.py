@@ -53,6 +53,7 @@ import numpy as np
 __all__ = [
     "COMPRESS_PREFIX",
     "LINK_INPROC",
+    "LINK_PEER",
     "LINK_PROCESS",
     "LINK_SHM",
     "LINK_TCP",
@@ -77,6 +78,10 @@ LINK_INPROC = "inproc"
 LINK_SHM = "same-host-shm"
 LINK_PROCESS = "cross-process"
 LINK_TCP = "tcp"
+#: Direct worker-to-worker data-server fetches (``runtime/dataserver.py``).
+#: Adaptive like tcp: the payload crosses a real wire (or at least a
+#: socket), so trading codec cycles for wire bytes can pay off.
+LINK_PEER = "peer-wire"
 
 NEVER_COMPRESS_LINKS = frozenset({LINK_INPROC, LINK_SHM})
 

@@ -346,9 +346,11 @@ class LocalCluster:
 
     ``worker_kind="process"`` spawns each worker in its own interpreter
     connected over ``transport`` (tcp) -- CPU-bound graphs escape the GIL.
-    Process workers exchange results through the shared store tier (file
-    connector by default; shm stays the same-host zero-copy fast path),
-    since in-memory peer transfers cannot cross a process boundary.
+    Each process worker runs a data server so dependencies resolve
+    cache -> shm attach (same host) -> direct peer wire fetch -> shared
+    store (file connector by default), mirroring the thread backend's
+    peer mesh over a real socket; ``TransferSpec(peer_transfer=...,
+    pool_size=..., chunk_bytes=...)`` are the knobs.
     """
 
     def __init__(
@@ -426,10 +428,13 @@ class LocalCluster:
         if self.transfer_config is not None:
             store_config = {**store_config, "transfer": self.transfer_config}
         self.data_plane = ResultStore(store_config)
-        # Process workers never register on the peer mesh (it cannot cross
-        # a process boundary -- deps move through the shared store tier),
-        # but the mesh object always exists so telemetry reads uniformly.
-        self.transfers = PeerTransfer()
+        # Thread workers share this in-process cache mesh; process workers
+        # get the wire equivalent (a per-worker DataServer + pooled
+        # PeerWireClient, built in proc.start_comm_worker).  The mesh
+        # object always exists so telemetry reads uniformly.  Both paths
+        # move bytes in TransferSpec(chunk_bytes=...) pieces.
+        chunk = (self.transfer_config or {}).get("chunk_bytes")
+        self.transfers = PeerTransfer(**({"chunk_size": int(chunk)} if chunk else {}))
         self.worker_cache_bytes = worker_cache_bytes
         # MemorySpec travels as its wire dict so runtime never imports api.
         if memory is not None and hasattr(memory, "to_dict"):

@@ -84,6 +84,12 @@ _FAST_TAGS = frozenset(
         M.STREAM_FULL,
         M.STREAM_EMPTY,
         M.STREAM_CLOSED,
+        # Peer data-plane handshake: ``{key}`` / ``{key, ok, nbytes}`` --
+        # plain builtins.  The payload bytes themselves never touch the
+        # message codec (they travel as raw marker frames, below).
+        M.DATA_GET,
+        M.DATA_HDR,
+        M.PEER_GONE,
     }
 )
 
@@ -95,6 +101,18 @@ class ChannelClosed(Exception):
 #: In-band close sentinel for queue/pipe transports (never a valid blob:
 #: real blobs start with 0x01, 0x02, or "P").
 _CLOSE = b"\x00__CLOSE__"
+
+#: Raw-frame markers (first byte of a ``send_raw`` frame).  Chosen >= 0x03
+#: so a raw frame can never collide with the message codec's prefixes
+#: (0x01 control, 0x02 compression envelope, "P" serialized bundle) or
+#: the 0x00 close sentinel above.  ``RAW_CHUNK`` carries logical payload
+#: bytes verbatim; ``RAW_COMPRESSED`` carries a compression envelope
+#: produced by :func:`repro.core.compress.compress_frames`; ``RAW_ABORT``
+#: is an in-band "source lost mid-transfer" signal that leaves the stream
+#: aligned for the next request/response pair.
+RAW_CHUNK = 0x03
+RAW_COMPRESSED = 0x04
+RAW_ABORT = 0x05
 
 
 @dataclass
@@ -220,6 +238,26 @@ class Comm:
 
     def recv(self, timeout: float | None = None) -> Any:
         return decode_message(self.recv_blob(timeout))
+
+    def send_raw(self, marker: int, frames: list[Any]) -> int:
+        """Write one marker-framed raw payload (``RAW_*`` markers above),
+        bypassing the message codec: frames go out writev-style with no
+        join on the sender.  Returns the wire byte count (marker + body)."""
+        raise NotImplementedError
+
+    def recv_raw_into(
+        self,
+        get_buffer: "Callable[[int, int], Any]",
+        timeout: float | None = None,
+    ) -> tuple[int, memoryview]:
+        """Receive one raw frame *in place*: after reading the marker and
+        body length, ``get_buffer(marker, body_len)`` must return a
+        writable buffer of exactly ``body_len`` bytes and the body lands
+        directly in it -- the receiver-side single-copy assembly.  If
+        ``get_buffer`` raises, the stream is considered desynced and the
+        connection is closed before the exception propagates.  Returns
+        ``(marker, filled_view)``."""
+        raise NotImplementedError
 
     def close(self) -> None:
         raise NotImplementedError

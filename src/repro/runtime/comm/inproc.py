@@ -96,6 +96,42 @@ class Endpoint(Comm):
     def recv(self, timeout: float | None = None) -> Any:
         return decode_message(self.recv_blob(timeout))
 
+    def send_raw(self, marker: int, frames: list[Any]) -> int:
+        """Queue transports pass whole blobs, so the raw frame is joined
+        here (this is the deterministic *test* transport; the zero-join
+        sender guarantee is tcp's).  Markers are >= 0x03, so a raw blob
+        can never collide with the 0x00 close sentinel."""
+        blob = bytes((marker,)) + b"".join(bytes(f) for f in frames)
+        while True:
+            if self._closed.is_set():
+                raise ChannelClosed(f"{self.name}: channel closed")
+            try:
+                self._out.put(blob, timeout=_POLL)
+                break
+            except queue.Full:
+                continue
+        self.counter.add_sent(len(blob))
+        return len(blob)
+
+    def recv_raw_into(
+        self,
+        get_buffer: Callable[[int, int], Any],
+        timeout: float | None = None,
+    ) -> tuple[int, memoryview]:
+        blob = self.recv_blob(timeout)
+        marker = blob[0]
+        src = memoryview(blob)[1:]
+        try:
+            body = memoryview(get_buffer(marker, src.nbytes))
+        except BaseException:
+            self.close()
+            raise
+        if body.nbytes != src.nbytes or body.readonly:
+            self.close()
+            raise ChannelClosed(f"{self.name}: raw sink size mismatch")
+        body[:] = src
+        return marker, body
+
     def close(self) -> None:
         self._closed.set()
         # Sentinels into both directions wake a blocked recv on either end;

@@ -9,6 +9,12 @@ pays the one unavoidable copy: a single preallocated buffer filled with
 ``recv_into``, handed to ``decode_message`` which builds array views over
 it in place.
 
+Raw marker frames (``send_raw``/``recv_raw_into``) share the same length
+prefix but skip the codec entirely: one marker byte, then the body --
+written writev-style from cache views on the sender, received straight
+into a caller-provided pre-sized buffer on the receiver.  The peer data
+plane (``runtime/dataserver.py``) streams blob chunks this way.
+
 Blocking sockets with ``TCP_NODELAY``; receives poll via ``select`` in
 short slices so ``close()`` from another thread (or the peer dying) wakes
 a blocked ``recv`` with :class:`ChannelClosed` instead of hanging.  A
@@ -137,6 +143,26 @@ class TCPComm(Comm):
                     views[0] = head[sent:]
                     sent = 0
 
+    def send_raw(self, marker: int, frames: list[Any]) -> int:
+        """One marker-framed raw payload: length prefix, 1 marker byte,
+        then the frames writev-style -- no join on the sender, so a chunk
+        served straight out of a cache view crosses the socket in place."""
+        views = [_as_view(f) for f in frames]
+        total = 1 + sum(v.nbytes for v in views)
+        header = WIRE_HEADER.pack(total)
+        payload = [memoryview(header), memoryview(bytes((marker,)))]
+        payload += [v for v in views if v.nbytes]
+        with self._send_lock:
+            if self._closed.is_set():
+                raise ChannelClosed(f"{self.name}: comm closed")
+            try:
+                self._writev(payload)
+            except (OSError, ValueError):
+                self._closed.set()
+                raise ChannelClosed(f"{self.name}: send failed") from None
+        self.counter.add_sent(total)
+        return total
+
     # -- recv ---------------------------------------------------------------
 
     def recv_blob(self, timeout: float | None = None) -> bytearray:
@@ -175,7 +201,44 @@ class TCPComm(Comm):
         self._ledger.record(LINK_TCP, logical_bytes=len(blob), wire_bytes=len(blob))
         return decode_message(blob)
 
-    def _read_into(self, buf: bytearray, timeout: float | None, first: bool) -> None:
+    def recv_raw_into(
+        self,
+        get_buffer: Callable[[int, int], Any],
+        timeout: float | None = None,
+    ) -> tuple[int, memoryview]:
+        """Receive one raw frame directly into the caller's buffer: read
+        the length prefix and marker byte, then ``recv_into`` the body
+        into ``get_buffer(marker, body_len)``'s view -- the single
+        receiver-side copy.  A ``get_buffer`` refusal (raise) or a
+        size-mismatched buffer desyncs the stream, so the connection is
+        closed before the error propagates."""
+        with self._recv_lock:
+            header = bytearray(WIRE_HEADER.size)
+            self._read_into(header, timeout=timeout, first=True)
+            (total,) = WIRE_HEADER.unpack(header)
+            if total < 1:
+                self.close()
+                raise ChannelClosed(f"{self.name}: malformed raw frame")
+            mk = bytearray(1)
+            self._read_into(mk, timeout=None, first=False)
+            marker = mk[0]
+            body_len = total - 1
+            try:
+                body = _as_view(get_buffer(marker, body_len))
+            except BaseException:
+                self.close()
+                raise
+            if body.nbytes != body_len or body.readonly:
+                self.close()
+                raise ChannelClosed(f"{self.name}: raw sink size mismatch")
+            if body_len:
+                self._read_into(body, timeout=None, first=False)
+        self.counter.add_recv(total)
+        return marker, body
+
+    def _read_into(
+        self, buf: bytearray | memoryview, timeout: float | None, first: bool
+    ) -> None:
         """Fill ``buf`` completely.  ``first`` marks the wait for a
         message's first byte -- the only point where timing out is clean;
         a timeout mid-message would desync the framing, so body reads only

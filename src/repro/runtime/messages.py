@@ -65,6 +65,19 @@ STOP = "stop"
 FINISHED = "finished"
 FAILED = "failed"
 
+# Peer data-plane protocol (runtime/dataserver.py).  ``data_get`` /
+# ``data_hdr`` are the request/response handshake on a worker's *data*
+# listener (never the scheduler mailbox): a peer asks for a cached blob
+# by key, the holder answers with ``ok`` + ``nbytes`` and then streams
+# the payload as raw marker-framed chunks outside the message codec
+# entirely (``Comm.send_raw``/``recv_raw_into``).  ``peer_gone`` is the
+# scheduler's worker-loss push: every live worker drops its pooled
+# connections to the dead worker's data address so in-flight fetches
+# fail fast to the store instead of waiting out a socket timeout.
+DATA_GET = "data_get"
+DATA_HDR = "data_hdr"
+PEER_GONE = "peer_gone"
+
 # Stream broker protocol (runtime/stream.py).  Topic *events* -- (key,
 # ref, nbytes, metadata) descriptors, never payload bytes -- ride these
 # tags between stream endpoints and the broker; the bulk bytes they

@@ -17,9 +17,15 @@ a mailbox-shaped object.  This module supplies both sides of the wire:
   child entry point, and :class:`ProcessWorker` is the parent-side handle
   that spawns it.
 
-Process workers carry no peer-transfer mesh: dependencies move through
-the shared store tier (file/kv connectors across processes, shm attach-
-by-ref on the same host -- ProxyStore's tier split).
+Each process worker also runs a **data server** (``runtime/dataserver``):
+a second listener, on the same transport family as the scheduler link,
+serving the worker's cache blobs directly to peers.  Dependencies
+resolve cache -> shm attach (same host) -> direct peer wire fetch ->
+shared store (file/kv connectors -- the durable fallback and lineage
+root).  The data address rides the REGISTER handshake and every
+heartbeat into ``WorkerState`` and is pushed to dependents in task
+payloads; ``TransferSpec(peer_transfer=..., pool_size=...,
+chunk_bytes=...)`` are the knobs.
 """
 
 from __future__ import annotations
@@ -101,7 +107,10 @@ class CommServer:
         with self._lock:
             self._comms[worker_id] = comm
         self.scheduler.register_worker(
-            worker_id, CommSender(comm), p.get("nthreads", 1)
+            worker_id,
+            CommSender(comm),
+            p.get("nthreads", 1),
+            data_address=p.get("data_address"),
         )
         while not self._closing.is_set():
             try:
@@ -140,11 +149,24 @@ class SchedulerLink:
         except ChannelClosed:
             return 0
 
-    def register_worker(self, worker_id: str, mailbox: Any, nthreads: int = 1) -> None:
+    def register_worker(
+        self,
+        worker_id: str,
+        mailbox: Any,
+        nthreads: int = 1,
+        data_address: str | None = None,
+    ) -> None:
         # The mailbox handle is process-local; over the wire the server
-        # binds this connection as the worker's mailbox instead.
+        # binds this connection as the worker's mailbox instead.  The data
+        # address crosses verbatim -- peers connect to it directly.
         self.comm.send(
-            M.msg(M.REGISTER, worker=worker_id, nthreads=nthreads, pid=os.getpid())
+            M.msg(
+                M.REGISTER,
+                worker=worker_id,
+                nthreads=nthreads,
+                pid=os.getpid(),
+                data_address=data_address,
+            )
         )
 
 
@@ -182,11 +204,22 @@ def start_comm_worker(
     cluster's shared store tier from another process.  ``transfer`` (the
     ``TransferSpec`` wire dict) configures compression on both this
     worker's comm link and its store byte paths; one shared
-    :class:`TransferLedger` covers both, so the heartbeat snapshot is the
-    whole per-worker wire story.
+    :class:`TransferLedger` covers both (including the peer-wire data
+    plane), so the heartbeat snapshot is the whole per-worker wire story.
+
+    Unless ``transfer`` disables it (``peer_transfer=False``), the worker
+    also gets its half of the peer data plane: a :class:`DataServer` on
+    the scheduler transport's family (an ephemeral tcp port for
+    ``tcp://`` schedulers, a private inproc name otherwise) serving its
+    cache to peers, and a pooled :class:`PeerWireClient` for fetching
+    from theirs.  Both are wired up *before* ``start()`` so the REGISTER
+    handshake carries the data address.
     """
+    import uuid
+
     from repro.core.compress import TransferLedger
-    from repro.runtime.transfer import ResultStore
+    from repro.runtime.dataserver import DataServer, PeerWireClient
+    from repro.runtime.transfer import DEFAULT_CHUNK_BYTES, ResultStore
     from repro.runtime.worker import ThreadWorker
 
     ledger = TransferLedger()
@@ -206,6 +239,26 @@ def start_comm_worker(
         transfer=transfer,
         ledger=ledger,
     )
+    tcfg = dict(transfer) if isinstance(transfer, dict) else {}
+    if bool(tcfg.get("peer_transfer", True)):
+        scheme = address.split("://", 1)[0]
+        data_addr = (
+            "tcp://127.0.0.1:0"
+            if scheme == "tcp"
+            else f"inproc://data-{worker_id}-{uuid.uuid4().hex[:6]}"
+        )
+        worker.data_server = DataServer(
+            worker.cache,
+            data_addr,
+            chunk_bytes=int(tcfg.get("chunk_bytes") or DEFAULT_CHUNK_BYTES),
+            transfer=transfer,
+            ledger=ledger,
+        )
+        worker.peer_wire = PeerWireClient(
+            pool_size=int(tcfg.get("pool_size") or 2),
+            ledger=ledger,
+            copies=worker.cache.copies,
+        )
     worker.start()
     threading.Thread(
         target=_reader_loop,

@@ -161,6 +161,11 @@ class WorkerState:
     #: full worker.stats() snapshot from the last heartbeat -- the only view
     #: of a process worker's telemetry (no shared-memory object to ask).
     last_stats: dict[str, Any] | None = None
+    #: connect string of the worker's peer data server (None when the
+    #: worker serves no blobs, e.g. thread workers on the in-proc mesh).
+    #: Shipped to dependents in ``_task_payload`` so they can fetch
+    #: dependencies over the wire instead of round-tripping the store.
+    data_address: str | None = None
 
     def occupancy(self) -> float:
         """Outstanding tasks per thread -- the dispatch balance metric."""
@@ -248,13 +253,27 @@ class Scheduler:
 
     # -- control-plane registration (direct calls; data plane stays bytes) ----
 
-    def _register_worker(self, worker_id: str, mailbox: Any, nthreads: int = 1) -> None:
+    def _register_worker(
+        self,
+        worker_id: str,
+        mailbox: Any,
+        nthreads: int = 1,
+        data_address: str | None = None,
+    ) -> None:
         """Single registration path for both the direct call and M.REGISTER."""
         with self._lock:
-            self.workers[worker_id] = WorkerState(worker_id, mailbox, nthreads=nthreads)
+            self.workers[worker_id] = WorkerState(
+                worker_id, mailbox, nthreads=nthreads, data_address=data_address
+            )
 
-    def register_worker(self, worker_id: str, mailbox: Any, nthreads: int = 1) -> None:
-        self._register_worker(worker_id, mailbox, nthreads)
+    def register_worker(
+        self,
+        worker_id: str,
+        mailbox: Any,
+        nthreads: int = 1,
+        data_address: str | None = None,
+    ) -> None:
+        self._register_worker(worker_id, mailbox, nthreads, data_address)
 
     def register_client(self, client_id: str, mailbox: Any) -> None:
         with self._lock:
@@ -326,7 +345,10 @@ class Scheduler:
             # ever reach the inbox, so only in-process REGISTERs land here.
             if p.get("mailbox") is not None:
                 self._register_worker(
-                    p["worker"], p["mailbox"], p.get("nthreads", 1)
+                    p["worker"],
+                    p["mailbox"],
+                    p.get("nthreads", 1),
+                    p.get("data_address"),
                 )
         elif tag == M.DEREGISTER:
             self._on_worker_lost(p["worker"], graceful=True)
@@ -346,6 +368,8 @@ class Scheduler:
                     ws.spilled = set(p["spilled_keys"] or [])
                 if "stats" in p:
                     ws.last_stats = p["stats"]
+                if p.get("data_address"):
+                    ws.data_address = p["data_address"]
         elif tag == M.TASK_DONE:
             self._on_task_done(p)
         elif tag == M.TASK_FAILED:
@@ -586,11 +610,25 @@ class Scheduler:
             if dts.result_blob is not None:
                 inline_deps[d] = dts.result_blob
             else:
-                dep_info[d] = {
+                locations = sorted(dts.locations)
+                entry: dict[str, Any] = {
                     "ref": dts.ref,
                     "nbytes": dts.nbytes,
-                    "locations": sorted(dts.locations),
+                    "locations": locations,
                 }
+                # Data addresses of alive holders: the dependent can fetch
+                # straight from a peer's data server (cache -> shm ->
+                # peer-wire -> store resolution order) instead of paying a
+                # store round trip.  Metadata only -- a handful of connect
+                # strings, never payload bytes.
+                peers = {}
+                for w in locations:
+                    hws = self.workers.get(w)
+                    if hws is not None and hws.alive and hws.data_address:
+                        peers[w] = hws.data_address
+                if peers:
+                    entry["peers"] = peers
+                dep_info[d] = entry
         return {
             "key": ts.key,
             "func": ts.func_blob,
@@ -884,6 +922,15 @@ class Scheduler:
         # goes away, but the charge map must not accumulate ghosts.
         for wk in [wk for wk in self._assigned_bytes if wk[0] == worker_id]:
             del self._assigned_bytes[wk]
+        if ws.data_address:
+            # Prompt peer-wire invalidation: every live worker drops its
+            # pooled connections to the dead data server, so in-flight and
+            # future fetches fail fast to the store instead of waiting out
+            # a socket timeout on a vanished peer.
+            gone = M.msg(M.PEER_GONE, worker=worker_id, address=ws.data_address)
+            for other in self.workers.values():
+                if other.alive and other.worker_id != worker_id:
+                    self._send_worker(other, gone)
         del self.workers[worker_id]
 
     def _probably_started(self, ts: TaskState) -> bool:

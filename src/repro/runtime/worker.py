@@ -69,6 +69,12 @@ _LOCAL_FUNCS_LOCK = threading.Lock()
 _FETCH_RETRIES = 3
 _FETCH_RETRY_SLEEP = 0.02
 
+#: Concurrent dependency fetches for fan-in tasks: each remote dep is an
+#: independent peer-wire/store round trip, so overlapping a few of them
+#: hides per-peer latency.  Bounded -- a 512-way fan-in must not open 512
+#: sockets at once (the per-peer connection pool caps each peer anyway).
+_FETCH_CONCURRENCY = 4
+
 #: Cap on the spilled-key list a heartbeat carries: locality hints are
 #: advisory, so a pathological spill set must not bloat the control plane.
 _HEARTBEAT_SPILLED_MAX = 512
@@ -175,6 +181,14 @@ class ThreadWorker:
         self.state = "running"  # running | paused
         self.refetch_count = 0  # dependency fetches that fell back to the store
         self.zero_copy_hits = 0  # deps attached by ref on the shm fast path
+        self.peer_wire_hits = 0  # deps fetched from a peer's data server
+        #: Peer data plane (process clusters): a DataServer serving this
+        #: worker's cache to peers and a pooled PeerWireClient for fetching
+        #: from theirs.  Assigned by ``proc.start_comm_worker`` *before*
+        #: ``start()`` so registration carries the data address; None on
+        #: thread workers (they share the in-proc PeerTransfer mesh).
+        self.data_server: Any = None  # dataserver.DataServer | None
+        self.peer_wire: Any = None  # dataserver.PeerWireClient | None
         self._inflight_bytes = 0
         self._mem_lock = threading.Lock()
         self._stop = threading.Event()
@@ -197,10 +211,18 @@ class ThreadWorker:
 
     # -- lifecycle ----------------------------------------------------------
 
+    @property
+    def data_address(self) -> str | None:
+        """Connect string of this worker's peer data server, if any."""
+        return self.data_server.address if self.data_server is not None else None
+
     def start(self) -> "ThreadWorker":
         # Registration is control-plane (passes the live mailbox handle),
         # so it is a direct call rather than a byte message.
-        self.scheduler.register_worker(self.worker_id, self.mailbox, self.nthreads)
+        self.scheduler.register_worker(
+            self.worker_id, self.mailbox, self.nthreads,
+            data_address=self.data_address,
+        )
         if self.transfers is not None:
             self.transfers.register(self.worker_id, self.cache)
         pump = threading.Thread(
@@ -233,6 +255,12 @@ class ThreadWorker:
             self._ocv.notify_all()
         if self.transfers is not None:
             self.transfers.unregister(self.worker_id)
+        if self.data_server is not None:
+            # Wakes any peer blocked mid-fetch on one of our serving
+            # connections with ChannelClosed (it falls back to the store).
+            self.data_server.close()
+        if self.peer_wire is not None:
+            self.peer_wire.close()
         self.cache.close()
 
     def kill(self) -> None:
@@ -281,6 +309,14 @@ class ThreadWorker:
             "queued": queued,
             "refetch_count": self.refetch_count,
             "zero_copy_hits": self.zero_copy_hits,
+            # Peer data plane: deps resolved over the wire from a peer's
+            # data server instead of a store round trip.
+            "peer_wire_hits": self.peer_wire_hits,
+            **(
+                self.peer_wire.snapshot()
+                if self.peer_wire is not None
+                else {"peer_wire_fetches": 0, "peer_wire_bytes": 0}
+            ),
             # Task-latency telemetry: per-task service time percentiles
             # over a rolling window (what benchmarks/serving.py compares
             # its request latencies against).
@@ -348,6 +384,10 @@ class ThreadWorker:
                 spilled_keys=spilled,
                 bytes_moved=copy_stats["bytes_moved"],
                 bytes_copied=copy_stats["bytes_copied"],
+                # Repeated every beat so a scheduler that lost and re-learned
+                # this worker re-acquires the data address without a
+                # re-registration round trip.
+                data_address=self.data_address,
                 # Full telemetry snapshot: for process workers the heartbeat
                 # is the only channel worker_stats() can be served from.
                 stats=self.stats(),
@@ -425,6 +465,11 @@ class ThreadWorker:
                 self._discard_pending({p["key"]})
             if p.get("release"):
                 self.cache.pop(p["key"])
+        elif tag == M.PEER_GONE:
+            # Scheduler push on worker loss: drop pooled connections to the
+            # dead peer's data server so fetches fail fast to the store.
+            if self.peer_wire is not None and p.get("address"):
+                self.peer_wire.invalidate(p["address"])
         elif tag == M.STOP:
             self._stop.set()
             with self._pcv:
@@ -506,8 +551,10 @@ class ThreadWorker:
         published segment and hand ``deserialize`` the mapped view --
         skipping the chunked peer channel (and its assembly copy)
         entirely.  Otherwise: direct peer-to-peer (chunked; the producer
-        serves frame-bounded views from whichever tier holds the blob),
-        then the shared store as the durable fallback.
+        serves frame-bounded views from whichever tier holds the blob) --
+        the in-process cache mesh for thread workers, the peer *wire*
+        (a holder's data server, via the pooled ``PeerWireClient``) for
+        process workers -- then the shared store as the durable fallback.
         """
         ref = info.get("ref")
         locations = info.get("locations") or []
@@ -539,6 +586,16 @@ class ThreadWorker:
                     )
                     if bundle is not None:
                         return bundle
+            if self.peer_wire is not None:
+                peers = info.get("peers") or {}
+                for loc in locations:
+                    addr = peers.get(loc)
+                    if not addr or loc == self.worker_id:
+                        continue
+                    bundle = self.peer_wire.fetch(addr, key, sink=self.cache)
+                    if bundle is not None:
+                        self.peer_wire_hits += 1
+                        return bundle
             if self.results is not None and ref is not None:
                 bundle = self.results.fetch(
                     ref, nbytes, copies=self.cache.copies, ledger=self.ledger
@@ -552,6 +609,73 @@ class ThreadWorker:
         raise MissingDependencyError([key])
 
     # -- task execution -----------------------------------------------------------
+
+    def _resolve_deps(
+        self,
+        deps: list[str],
+        dep_info: dict[str, Any],
+        inline_deps: dict[str, Any],
+    ) -> tuple[dict[str, Any], list[str], int]:
+        """Resolve a task's dependencies; returns ``(values, missing,
+        inflight_bytes)``.
+
+        Fan-in tasks with several *remote* deps (not inline, not already
+        cached) fetch them concurrently through a small thread pool: each
+        fetch is an independent wire/store round trip -- often against a
+        different holding peer -- so overlapping them hides per-peer
+        latency.  Single-dep (and all-local) tasks keep the cheap
+        sequential path.
+        """
+        dep_results: dict[str, Any] = {}
+        missing: list[str] = []
+        inflight = 0
+        lock = threading.Lock()
+
+        def resolve(d: str) -> None:
+            nonlocal inflight
+            try:
+                val = self._fetch_dep(d, dep_info.get(d), inline_deps.get(d))
+                nb = (dep_info.get(d) or {}).get("nbytes", 0)
+                with lock:
+                    dep_results[d] = val
+                    if nb > 0:
+                        inflight += nb
+                if nb > 0:
+                    self._note_inflight(nb)
+            except MissingDependencyError as exc:
+                with lock:
+                    missing.extend(exc.keys)
+
+        remote = [
+            d for d in deps if inline_deps.get(d) is None and d not in self.cache
+        ]
+        if len(remote) > 1:
+            pending = deque(remote)
+
+            def drain() -> None:
+                while True:
+                    with lock:
+                        if not pending:
+                            return
+                        d = pending.popleft()
+                    resolve(d)
+
+            fetchers = [
+                threading.Thread(
+                    target=drain, daemon=True, name=f"{self.worker_id}-fetch"
+                )
+                for _ in range(min(_FETCH_CONCURRENCY, len(remote)))
+            ]
+            for t in fetchers:
+                t.start()
+            for t in fetchers:
+                t.join()
+        done = set(dep_results) | set(missing)
+        for d in deps:
+            if d not in done:
+                resolve(d)
+                done.add(d)
+        return dep_results, missing, inflight
 
     def _run_task(self, p: dict[str, Any]) -> None:
         key = p["key"]
@@ -571,19 +695,10 @@ class ThreadWorker:
             )
             dep_info = p.get("dep_info", {})
             inline_deps = p.get("inline_deps", {})
-            dep_results: dict[str, Any] = {}
-            missing: list[str] = []
-            for d in p.get("deps", []):
-                try:
-                    dep_results[d] = self._fetch_dep(
-                        d, dep_info.get(d), inline_deps.get(d)
-                    )
-                    nb = (dep_info.get(d) or {}).get("nbytes", 0)
-                    if nb > 0:
-                        inflight += nb
-                        self._note_inflight(nb)
-                except MissingDependencyError as exc:
-                    missing.extend(exc.keys)
+            dep_results, missing, fetched = self._resolve_deps(
+                p.get("deps", []), dep_info, inline_deps
+            )
+            inflight += fetched
             if missing:
                 self._report(
                     M.TASK_FAILED,

@@ -243,13 +243,24 @@ def test_ledger_merge_aggregates_per_link():
 
 def test_transfer_spec_roundtrip():
     spec = TransferSpec(
-        "cascade", min_frame_bytes=2048, probe_ratio=0.5, spill_compression="zlib"
+        "cascade",
+        min_frame_bytes=2048,
+        probe_ratio=0.5,
+        spill_compression="zlib",
+        peer_transfer=False,
+        pool_size=4,
+        chunk_bytes=1 << 20,
     )
     spec.validate()
     d = spec.to_dict()
     assert d == TransferSpec.from_dict(d).to_dict()
-    # The wire dict is exactly what TransferPolicy.from_config expects.
-    assert TransferPolicy.from_config(d).to_dict() == d
+    # The peer data-plane knobs ride the same wire dict...
+    assert d["peer_transfer"] is False
+    assert d["pool_size"] == 4
+    assert d["chunk_bytes"] == 1 << 20
+    # ...and TransferPolicy consumes the compression subset, ignoring them.
+    policy = TransferPolicy.from_config(d).to_dict()
+    assert policy == {k: d[k] for k in policy}
 
 
 @pytest.mark.parametrize(
@@ -261,6 +272,8 @@ def test_transfer_spec_roundtrip():
         {"probe_ratio": 0.0},
         {"probe_ratio": 1.5},
         {"level": 42},
+        {"pool_size": 0},
+        {"chunk_bytes": 0},
     ],
 )
 def test_transfer_spec_validation(kwargs):
