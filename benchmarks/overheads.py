@@ -807,3 +807,299 @@ def peer_wire_smoke() -> bool:
     out["ok"] = ok
     save_artifact("smoke_peer_wire", out)
     return ok
+
+
+def _bc_blob(mib, seed):
+    """Broadcast payload: random bytes (incompressible -- honest wire cost;
+    module-level: spawn-safe)."""
+    return np.random.default_rng(seed).bytes(mib << 20)
+
+
+def _bc_consume(blob, delay):
+    """Hold the worker thread for ``delay`` then touch the payload.  The
+    sleep keeps holders busy through the fan-out waves so late consumers
+    cannot all collapse onto the producer as cache hits."""
+    time.sleep(delay)
+    return len(blob)
+
+
+def _bc_pair(a, b, delay):
+    time.sleep(delay)
+    return len(a) + len(b)
+
+
+def _bc_sleep(delay):
+    time.sleep(delay)
+    return 0
+
+
+def _bc_stats(cluster) -> dict[str, dict[str, int]]:
+    keys = (
+        "data_server_bytes", "data_server_serves", "data_server_busy_rejects",
+        "queue_wait_ms_total", "queue_wait_count", "prefetch_hits",
+        "prefetch_issued", "peer_wire_hits", "peer_wire_bytes",
+    )
+    return {
+        w: {k: row.get(k, 0) or 0 for k in keys}
+        for w, row in cluster.worker_stats().items()
+    }
+
+
+def _bc_settle(cluster, want_tasks: int, timeout: float = 30.0) -> dict:
+    """Poll the heartbeat-fed stats until ``want_tasks`` tasks have a
+    queue-wait row *and* the serve/prefetch counters stop moving (two
+    identical samples one heartbeat-plus apart), so byte attribution is
+    not read mid-flight."""
+    last = None
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        snap = _bc_stats(cluster)
+        moving = (
+            sum(r["queue_wait_count"] for r in snap.values()),
+            sum(r["data_server_bytes"] for r in snap.values()),
+            sum(r["prefetch_hits"] for r in snap.values()),
+        )
+        if moving[0] >= want_tasks and moving == last:
+            return snap
+        last = moving
+        time.sleep(0.7)
+    return _bc_stats(cluster)
+
+
+def _bc_wait_done(cluster, futs, timeout: float = 180.0) -> None:
+    """Barrier on task *completion* without fetching the results: polls the
+    scheduler's (parent-side) task states, so no payload byte moves toward
+    the client and the serve counters stay clean for the timed phase."""
+    deadline = time.monotonic() + timeout
+    keys = [f.key for f in futs]
+    while time.monotonic() < deadline:
+        tasks = cluster.scheduler.tasks
+        if all((t := tasks.get(k)) is not None and t.state == "done" for k in keys):
+            return
+        time.sleep(0.05)
+    raise TimeoutError("broadcast producers did not finish")
+
+
+def _broadcast_leg(transfer: TransferSpec, mib: int, *, delay: float = 1.0) -> dict:
+    """One 8-process-worker tcp broadcast: a single ``mib``-MiB dependency
+    produced on one worker, then one consumer per worker.  Returns wall
+    time, per-consumer dep-resolve latency (worker enqueue -> compute
+    start, the convoy metric), and the per-worker served-bytes split the
+    producer-share guard reads."""
+    n = 8
+    nbytes = mib << 20
+    cluster = ClusterSpec(
+        n, worker_kind="process", transport="tcp", heartbeat_timeout=30.0,
+        transfer=transfer,
+    ).build()
+    try:
+        cluster.wait_for_workers(timeout=120)
+        client = cluster.get_client()
+        dep = client.submit(_bc_blob, mib, 7, pure=False)
+        _bc_wait_done(cluster, [dep])
+        base = _bc_settle(cluster, 1)
+        t0 = time.perf_counter()
+        futs = [client.submit(_bc_consume, dep, delay, pure=False) for _ in range(n)]
+        correct = all(f.result(timeout=300) == nbytes for f in futs)
+        wall = time.perf_counter() - t0
+        snap = _bc_settle(cluster, 1 + n)
+        d = {
+            w: {k: v - base.get(w, {}).get(k, 0) for k, v in row.items()}
+            for w, row in snap.items()
+        }
+        ts = cluster.scheduler.tasks.get(dep.key)
+        seq = dict(getattr(ts, "holder_seq", None) or {})
+        served = {w: r["data_server_bytes"] for w, r in d.items()}
+        # The producer is the dependency's *first* registered holder; if the
+        # worker vanished from the stats view, fall back to the top server.
+        producer = (
+            min(seq, key=seq.get) if seq else max(served, key=served.get)
+        )
+        total_served = sum(served.values())
+        waits = sum(r["queue_wait_ms_total"] for r in d.values())
+        count = sum(r["queue_wait_count"] for r in d.values())
+        return {
+            "mib": mib,
+            "correct": correct,
+            "wall_s": wall,
+            "producer": producer,
+            "producer_served_bytes": served.get(producer, 0),
+            "total_served_bytes": total_served,
+            "producer_share": served.get(producer, 0) / max(1, total_served),
+            "served_bytes": served,
+            "busy_rejects": sum(r["data_server_busy_rejects"] for r in d.values()),
+            "resolve_ms_mean": waits / max(1, count),
+            "resolve_tasks": count,
+            "peer_wire_hits": sum(r["peer_wire_hits"] for r in d.values()),
+            "prefetch_hits": sum(r["prefetch_hits"] for r in d.values()),
+        }
+    finally:
+        cluster.close()
+
+
+def _prefetch_leg(depth: int) -> dict:
+    """Prefetch A/B on a 2-process-worker tcp cluster: 8 spread 32-MiB
+    deps, then per worker one dep-free *warm* sleeper followed by queued
+    sleepers each needing one disjoint dep *pair* (every pair straddles
+    the workers, so a queued sleeper has a remote dep wherever it lands).
+    The warm sleeper matters on a one-core host: it makes the prefetch
+    window pure compute (sleep) overlap -- without it the prefetcher's
+    fetch just contends with the running task's own fetch and hides the
+    effect.  Returns the summed queue-to-start wait of the sleeper phase
+    plus the prefetch counters."""
+    pairs, mib, delay = 4, 32, 0.5
+    tr = TransferSpec(prefetch_depth=depth, max_peer_fanout=3)
+    cluster = ClusterSpec(
+        2, worker_kind="process", transport="tcp", heartbeat_timeout=30.0,
+        transfer=tr,
+    ).build()
+    try:
+        cluster.wait_for_workers(timeout=120)
+        client = cluster.get_client()
+        deps = [
+            client.submit(_bc_blob, mib, i, pure=False) for i in range(2 * pairs)
+        ]
+        _bc_wait_done(cluster, deps)
+        base = _bc_settle(cluster, 2 * pairs)
+        t0 = time.perf_counter()
+        warm = [client.submit(_bc_sleep, delay, pure=False) for _ in range(2)]
+        futs = [
+            client.submit(_bc_pair, deps[2 * k], deps[2 * k + 1], delay, pure=False)
+            for k in range(pairs)
+        ]
+        correct = all(f.result(timeout=300) == 2 * (mib << 20) for f in futs)
+        correct = correct and all(w.result(timeout=300) == 0 for w in warm)
+        wall = time.perf_counter() - t0
+        snap = _bc_settle(cluster, 2 * pairs + pairs + 2)
+        d = {
+            w: {k: v - base.get(w, {}).get(k, 0) for k, v in row.items()}
+            for w, row in snap.items()
+        }
+        return {
+            "depth": depth,
+            "correct": correct,
+            "wall_s": wall,
+            "wait_ms_total": sum(r["queue_wait_ms_total"] for r in d.values()),
+            "wait_tasks": sum(r["queue_wait_count"] for r in d.values()),
+            "prefetch_hits": sum(r["prefetch_hits"] for r in d.values()),
+            "prefetch_issued": sum(r["prefetch_issued"] for r in d.values()),
+        }
+    finally:
+        cluster.close()
+
+
+def broadcast(payloads_mib: list[int] | None = None) -> dict:
+    """Broadcast row (1 producer -> 8 process workers over tcp): the
+    replica-aware fan-out path (``prefetch_depth=2, max_peer_fanout=3``)
+    per payload size, against the PR-9 single-producer emulation
+    (``prefetch_depth=0, max_peer_fanout=8``: the admission gate passes
+    everyone at once and every peer list is just the producer, which is
+    behaviorally the pre-replica data plane) at the guard size.
+
+    The headline per row is the mean dep-resolve latency (worker enqueue
+    -> compute start): on a single-core host the wall clock of a
+    fixed-byte broadcast is bandwidth-bound either way, but the convoy of
+    seven fetchers serialized behind one producer shows up directly in
+    how long each consumer waits for its dependency -- and that is what
+    replica spreading removes (on multi-core hosts it shows up in wall
+    time too).  Each row also carries the producer-served-bytes split:
+    with replicas the producer hands off most of the serving.
+
+    A prefetch A/B rides along: same payload plan, depth 2 vs 0,
+    comparing summed queue-to-start wait and ``prefetch_hits``.
+
+    Saved to ``artifacts/bench/smoke_broadcast.json`` (the smoke guard
+    asserts on the same dict).
+    """
+    payloads_mib = payloads_mib or ([64] if QUICK else [8, 64])
+    tuned = TransferSpec(prefetch_depth=2, max_peer_fanout=3)
+    rows = []
+    for mib in payloads_mib:
+        leg = _broadcast_leg(tuned, mib)
+        rows.append(leg)
+        record(
+            f"broadcast/tuned/{mib}MiB", leg["resolve_ms_mean"] * 1e3,
+            f"producer_share={leg['producer_share']:.2f} "
+            f"served={leg['total_served_bytes'] >> 20}MiB "
+            f"wall={leg['wall_s']:.2f}s",
+        )
+    guard_mib = max(payloads_mib)
+    baseline = _broadcast_leg(
+        TransferSpec(prefetch_depth=0, max_peer_fanout=8), guard_mib
+    )
+    tuned_row = next(r for r in rows if r["mib"] == guard_mib)
+    speedup = baseline["resolve_ms_mean"] / max(tuned_row["resolve_ms_mean"], 1e-9)
+    record(
+        f"broadcast/baseline/{guard_mib}MiB", baseline["resolve_ms_mean"] * 1e3,
+        f"producer_share={baseline['producer_share']:.2f} "
+        f"resolve_speedup={speedup:.2f}x wall={baseline['wall_s']:.2f}s",
+    )
+    pf_on = _prefetch_leg(2)
+    pf_off = _prefetch_leg(0)
+    record(
+        "broadcast/prefetch/wait_ms", pf_on["wait_ms_total"] * 1e3,
+        f"off={pf_off['wait_ms_total'] * 1e3:.0f} "
+        f"hits={pf_on['prefetch_hits']}",
+    )
+    out = {
+        "rows": rows,
+        "baseline": baseline,
+        "resolve_speedup": speedup,
+        "prefetch_on": pf_on,
+        "prefetch_off": pf_off,
+    }
+    save_artifact("smoke_broadcast", out)
+    return out
+
+
+def broadcast_smoke() -> bool:
+    """CI guard for the replica-aware broadcast path.
+
+    Fails (returns False) when: a consumer computed on the wrong bytes;
+    the producer still serves > 60% of the peer-wire bytes under the
+    tuned spec (replica spreading must offload it); the PR-9 emulation
+    does *not* show the single-producer signature (>= 90% producer share
+    -- otherwise the A/B is not measuring what it claims); the mean
+    dep-resolve latency is not >= 1.5x better than the emulation (the
+    convoy must actually shrink); most of the broadcast did not ride the
+    peer wire; or the prefetch A/B shows no hits / no queue-to-start
+    wait reduction.
+    """
+    out = broadcast()
+    ok = True
+    tuned = next(r for r in out["rows"] if r["mib"] == out["baseline"]["mib"])
+    base = out["baseline"]
+    if not all(r["correct"] for r in out["rows"]) or not base["correct"]:
+        print("# SMOKE FAIL: a broadcast consumer saw the wrong payload")
+        ok = False
+    if tuned["producer_share"] > 0.60:
+        print(f"# SMOKE FAIL: producer served {tuned['producer_share']:.0%} "
+              f"of peer-wire bytes under the tuned spec (must be <= 60%)")
+        ok = False
+    if base["producer_share"] < 0.90:
+        print(f"# SMOKE FAIL: PR-9 emulation producer share only "
+              f"{base['producer_share']:.0%} -- baseline is not single-producer")
+        ok = False
+    if out["resolve_speedup"] < 1.5:
+        print(f"# SMOKE FAIL: dep-resolve latency only "
+              f"{out['resolve_speedup']:.2f}x better than the single-producer "
+              f"path (must be >= 1.5x)")
+        ok = False
+    if tuned["total_served_bytes"] < 4 * (tuned["mib"] << 20):
+        print("# SMOKE FAIL: broadcast bytes did not ride the peer wire")
+        ok = False
+    pf_on, pf_off = out["prefetch_on"], out["prefetch_off"]
+    if not (pf_on["correct"] and pf_off["correct"]):
+        print("# SMOKE FAIL: a prefetch-leg sleeper saw the wrong payload")
+        ok = False
+    if pf_on["prefetch_hits"] < 1:
+        print("# SMOKE FAIL: prefetch pipeline produced no hits")
+        ok = False
+    if pf_on["wait_ms_total"] >= pf_off["wait_ms_total"]:
+        print(f"# SMOKE FAIL: queue-to-start wait {pf_on['wait_ms_total']:.0f}ms "
+              f"with prefetch vs {pf_off['wait_ms_total']:.0f}ms without -- "
+              f"overlap must reduce it")
+        ok = False
+    out["ok"] = ok
+    save_artifact("smoke_broadcast", out)
+    return ok

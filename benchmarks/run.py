@@ -40,8 +40,12 @@ round trip at 8 MiB, a real 2-process-worker fan-in must resolve
 dependencies over the peer wire with the scheduler hub staying
 metadata-only at message parity with the store-only baseline, and
 killing the serving worker must not strand the consumer (store
-fallback / lineage recovery).  Wired into ``scripts/ci.sh
-smoke-process``.
+fallback / lineage recovery).  The broadcast guard closes the set: one
+64 MiB dependency fanned out to 8 process workers must spread its
+serving across replicas (producer <= 60% of peer-wire bytes), beat the
+single-producer emulation >= 1.5x on mean dep-resolve latency, and show
+prefetch overlap (hits > 0, queue-to-start wait reduced vs
+prefetch-off).  Wired into ``scripts/ci.sh smoke-process``.
 """
 
 from __future__ import annotations
@@ -73,6 +77,7 @@ def main() -> None:
         ok = overheads.compression_smoke() and ok
         ok = serving.serving_smoke() and ok
         ok = overheads.peer_wire_smoke() and ok
+        ok = overheads.broadcast_smoke() and ok
         print(f"# smoke-process {'PASS' if ok else 'FAIL'}", flush=True)
         sys.exit(0 if ok else 1)
 

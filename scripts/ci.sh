@@ -65,8 +65,13 @@ cmd_smoke_process() {
   # direct worker-to-worker wire fetches >= 2x the sustained file-store
   # round trip at 8 MiB, a live 2-process-worker fan-in resolving deps
   # over the peer wire with a metadata-only hub at store-only message
-  # parity, and clean recovery when the serving worker is killed.
-  # JSON lands in artifacts/bench/ for the CI artifact upload.
+  # parity, and clean recovery when the serving worker is killed.  The
+  # broadcast guard rides along: a 64 MiB dep fanned out to 8 process
+  # workers must spread serving across replicas (producer <= 60% of
+  # peer-wire bytes), beat the single-producer path >= 1.5x on mean
+  # dep-resolve latency, and show prefetch hits with a reduced
+  # queue-to-start wait.  JSON lands in artifacts/bench/ for the CI
+  # artifact upload.
   BENCH_QUICK=1 python -m benchmarks.run --smoke-process
 }
 

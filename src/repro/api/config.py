@@ -394,6 +394,22 @@ class TransferSpec:
     * ``chunk_bytes``      -- transfer chunk size for both the in-proc
       peer mesh (``PeerTransfer``) and the wire path.
 
+    And the overlap-and-spread knobs (dependency prefetch + replica-aware
+    fan-out, ``runtime/prefetch.py``):
+
+    * ``prefetch_depth``   -- how many *queued-but-not-running* tasks a
+      worker's prefetch pool looks ahead when warming dependency bytes
+      into the local cache (compute overlaps communication).  ``0``
+      disables prefetching entirely.
+    * ``max_peer_fanout``  -- replica spread bound: caps the holder list
+      shipped in ``dep_info["peers"]``, the dial attempts a fetch makes
+      before falling back to the store, a data server's concurrent
+      serves (excess requests get a busy reply and the client falls
+      through to the next replica), and the scheduler's per-holder
+      concurrent-fetcher gate on wide fan-outs of heavy deps.
+    * ``fetch_concurrency`` -- concurrent remote dependency fetches a
+      fan-in task overlaps in ``_resolve_deps`` (was a hard-wired 4).
+
     The ``same-host-shm`` and ``inproc`` link classes are hard-wired to
     no compression regardless of these knobs: the zero-copy paths must
     never grow a copy.  Round-trips through plain dicts like every other
@@ -409,6 +425,9 @@ class TransferSpec:
     peer_transfer: bool = True
     pool_size: int = 2
     chunk_bytes: int = 4 * 1024 * 1024  # runtime.transfer.DEFAULT_CHUNK_BYTES
+    prefetch_depth: int = 2
+    max_peer_fanout: int = 4
+    fetch_concurrency: int = 4
 
     def __init__(
         self,
@@ -421,6 +440,9 @@ class TransferSpec:
         peer_transfer: bool = True,
         pool_size: int = 2,
         chunk_bytes: int = 4 * 1024 * 1024,
+        prefetch_depth: int = 2,
+        max_peer_fanout: int = 4,
+        fetch_concurrency: int = 4,
     ):
         object.__setattr__(self, "compression", str(compression))
         object.__setattr__(self, "min_frame_bytes", int(min_frame_bytes))
@@ -430,6 +452,9 @@ class TransferSpec:
         object.__setattr__(self, "peer_transfer", bool(peer_transfer))
         object.__setattr__(self, "pool_size", int(pool_size))
         object.__setattr__(self, "chunk_bytes", int(chunk_bytes))
+        object.__setattr__(self, "prefetch_depth", int(prefetch_depth))
+        object.__setattr__(self, "max_peer_fanout", int(max_peer_fanout))
+        object.__setattr__(self, "fetch_concurrency", int(fetch_concurrency))
         self.validate()
 
     def validate(self) -> None:
@@ -462,6 +487,18 @@ class TransferSpec:
             raise SpecValidationError(
                 f"chunk_bytes must be >= 1, got {self.chunk_bytes}"
             )
+        if self.prefetch_depth < 0:
+            raise SpecValidationError(
+                f"prefetch_depth must be >= 0 (0 disables), got {self.prefetch_depth}"
+            )
+        if self.max_peer_fanout < 1:
+            raise SpecValidationError(
+                f"max_peer_fanout must be >= 1, got {self.max_peer_fanout}"
+            )
+        if self.fetch_concurrency < 1:
+            raise SpecValidationError(
+                f"fetch_concurrency must be >= 1, got {self.fetch_concurrency}"
+            )
 
     def to_dict(self) -> dict[str, Any]:
         """The wire format: ``TransferPolicy.from_config`` consumes the
@@ -476,6 +513,9 @@ class TransferSpec:
             "peer_transfer": self.peer_transfer,
             "pool_size": self.pool_size,
             "chunk_bytes": self.chunk_bytes,
+            "prefetch_depth": self.prefetch_depth,
+            "max_peer_fanout": self.max_peer_fanout,
+            "fetch_concurrency": self.fetch_concurrency,
         }
 
     @classmethod

@@ -455,6 +455,9 @@ class LocalCluster:
             inline_result_max=inline_result_max,
             result_store=self.data_plane,
             max_outstanding_bytes=max_outstanding,
+            max_peer_fanout=int(
+                (self.transfer_config or {}).get("max_peer_fanout") or 4
+            ),
         ).start()
         self._server = None
         if transport is not None:

@@ -27,7 +27,10 @@ This module closes that gap with two halves:
 Wire protocol, per request/response pair on a pooled connection:
 
 1. client: ``(DATA_GET, {key})``          -- msgpack control fast path
-2. server: ``(DATA_HDR, {key, ok, nbytes})``
+2. server: ``(DATA_HDR, {key, ok, nbytes})`` -- ``ok=False`` with
+   ``busy=True`` is an in-band "at my concurrent-serve cap" reply: no
+   stream follows, the connection stays aligned, and the client falls
+   through to the next replica
 3. server: a stream of raw marker frames (``Comm.send_raw``):
    ``RAW_CHUNK`` (logical bytes, landing directly in the client's
    pre-sized assembly buffer via ``recv_raw_into``), ``RAW_COMPRESSED``
@@ -101,6 +104,7 @@ class DataServer:
         chunk_bytes: int = DEFAULT_CHUNK_BYTES,
         transfer: Any = None,
         ledger: TransferLedger | None = None,
+        max_concurrent_serves: int = 0,
     ):
         self.cache = cache
         self.chunk_bytes = max(1, int(chunk_bytes))
@@ -109,6 +113,18 @@ class DataServer:
         self._closing = threading.Event()
         self._lock = threading.Lock()
         self._conns: list[Comm] = []
+        #: Concurrent-serve cap (0 = unlimited).  A saturated server
+        #: answers DATA_GET with an in-band ``busy`` header instead of
+        #: queueing the stream -- the connection stays aligned and the
+        #: client falls through to the next replica, which is what turns
+        #: replica selection into a deterministic spread instead of N
+        #: fetchers convoying on one producer.
+        self.max_concurrent_serves = max(0, int(max_concurrent_serves))
+        self._serving = 0
+        #: Serve-side telemetry: per-replica fan-out shares come from here.
+        self.serve_count = 0
+        self.serve_bytes = 0
+        self.busy_rejects = 0
         self.listener = listen(address, self._on_connection)
 
     @property
@@ -153,6 +169,28 @@ class DataServer:
         if nbytes is None:
             comm.send(M.msg(M.DATA_HDR, key=key, ok=False))
             return
+        with self._lock:
+            if (
+                self.max_concurrent_serves
+                and self._serving >= self.max_concurrent_serves
+            ):
+                self.busy_rejects += 1
+                busy = True
+            else:
+                self._serving += 1
+                busy = False
+        if busy:
+            # In-band busy reply: no stream follows, the connection stays
+            # request-aligned, and the client tries the next replica.
+            comm.send(M.msg(M.DATA_HDR, key=key, ok=False, busy=True))
+            return
+        try:
+            self._stream_key(comm, key, nbytes)
+        finally:
+            with self._lock:
+                self._serving -= 1
+
+    def _stream_key(self, comm: Comm, key: str, nbytes: int) -> None:
         comm.send(M.msg(M.DATA_HDR, key=key, ok=True, nbytes=nbytes))
         offset = wire = compressed = compress_ns = 0
         while offset < nbytes:
@@ -175,6 +213,9 @@ class DataServer:
                 compress_ns += st["compress_ns"]
             wire += comm.send_raw(marker, frames)
             offset += len(chunk)
+        with self._lock:
+            self.serve_count += 1
+            self.serve_bytes += nbytes
         if self._ledger is not None:
             self._ledger.record(
                 LINK_PEER,
@@ -183,6 +224,16 @@ class DataServer:
                 compressed_bytes=compressed,
                 compress_ns=compress_ns,
             )
+
+    def snapshot(self) -> dict[str, int]:
+        """Serve-side counters (rides ``worker_stats()``): how much of the
+        fan-out this replica absorbed."""
+        with self._lock:
+            return {
+                "data_server_serves": self.serve_count,
+                "data_server_bytes": self.serve_bytes,
+                "data_server_busy_rejects": self.busy_rejects,
+            }
 
     def close(self) -> None:
         """Stop accepting and close every serving connection -- a peer
@@ -241,6 +292,12 @@ class PeerWireClient:
         self._closed = False
         self.fetch_count = 0
         self.fetch_bytes = 0
+        #: address -> monotonic time of the last dial: ``fetch_any``
+        #: prefers the least-recently-dialed replica so repeated fetches
+        #: from this worker rotate across holders instead of convoying on
+        #: one.  Undialed addresses sort first *in list order*, keeping
+        #: the scheduler's freshness ordering for the first contact.
+        self._last_dial: dict[str, float] = {}
 
     # -- pool ---------------------------------------------------------------
 
@@ -324,20 +381,53 @@ class PeerWireClient:
         assembles into exactly one resident pre-sized buffer and is
         retained via ``sink.put``.  Returns ``None`` on any miss or wire
         failure -- the caller's resolution chain continues to the store."""
+        bundle, _ = self._fetch_once(address, key, sink=sink)
+        return bundle
+
+    def fetch_any(
+        self, addresses: list[str], key: str, *, sink: BlobCache | None = None
+    ) -> FrameBundle | None:
+        """Fetch ``key`` from the first replica that serves it.
+
+        ``addresses`` arrive in the scheduler's freshness order (newest
+        holder first, origin last); a stable sort by last-dial time makes
+        this worker prefer the replica it has bothered least recently
+        while first contacts keep the shipped order.  A miss, in-band
+        busy reply, or abort falls through to the next address *before*
+        anything lands in the sink, so at most one replica's bytes are
+        ever retained.  ``None`` means every replica declined -- the
+        caller's chain continues to the store."""
+        seen: set[str] = set()
+        candidates = [
+            a for a in addresses if a and not (a in seen or seen.add(a))
+        ]
+        candidates.sort(key=lambda a: self._last_dial.get(a, 0.0))
+        for address in candidates:
+            bundle, _ = self._fetch_once(address, key, sink=sink)
+            if bundle is not None:
+                return bundle
+        return None
+
+    def _fetch_once(
+        self, address: str, key: str, *, sink: BlobCache | None = None
+    ) -> tuple[FrameBundle | None, str]:
+        """One fetch attempt against one replica; returns ``(bundle,
+        status)`` with status in {hit, miss, busy, abort, error}."""
         if not address:
-            return None
+            return None, "error"
         comm = self._acquire(address)
         if comm is None:
-            return None
+            return None, "error"
+        self._last_dial[address] = time.monotonic()
         reusable = False
         try:
             comm.send(M.msg(M.DATA_GET, key=key))
             tag, hdr = comm.recv(timeout=self._request_timeout)
             if tag != M.DATA_HDR or hdr.get("key") != key:
-                return None  # desynced reply: drop the connection
+                return None, "error"  # desynced reply: drop the connection
             if not hdr.get("ok"):
-                reusable = True  # clean miss, stream aligned
-                return None
+                reusable = True  # clean miss/busy, stream aligned
+                return None, ("busy" if hdr.get("busy") else "miss")
             nbytes = int(hdr.get("nbytes", 0))
             if nbytes == 0:
                 reusable = True
@@ -349,18 +439,18 @@ class PeerWireClient:
             ):
                 bundle = self._fetch_streaming(comm, key, nbytes, sink)
                 reusable = bundle is not None
-                return bundle
+                return bundle, ("hit" if bundle is not None else "error")
             else:
                 bundle = self._fetch_assembled(comm, key, nbytes)
                 reusable = bundle is not None
             if bundle is not None and nbytes and sink is not None:
                 sink.put(key, bundle)
-            return bundle
+            return bundle, ("hit" if bundle is not None else "error")
         except _Aborted:
             reusable = True  # in-band abort leaves the stream aligned
-            return None
+            return None, "abort"
         except (ChannelClosed, TimeoutError, OSError):
-            return None
+            return None, "error"
         finally:
             self._release(address, comm, reusable)
 

@@ -34,6 +34,14 @@ until its managed bytes fall back below its resume target), and a capped
 Workers push an immediate out-of-cycle heartbeat on every pause/resume
 transition so dispatch reacts within one scheduler loop pass.
 
+Replica-holder registration rides the existing traffic rather than new
+tags: ``task_done`` carries ``cached_deps`` (deps the completing worker
+fetched and still caches) and ``heartbeat`` carries a capped
+``cached_keys`` list (every servable cached key, hot or spilled).  Both
+are additive, advisory, and restricted scheduler-side to *done* tasks;
+they feed the bounded freshness-ordered peer list dispatch ships in
+``dep_info["peers"]`` so fan-out fetches spread across replicas.
+
 The hub-mediated forwarding tags of the old data plane (``need_data`` /
 ``send_data`` / ``data`` / ``gather``) are gone, not deprecated: there is
 no code path left that ships a result blob through the scheduler mailbox.

@@ -253,6 +253,10 @@ def start_comm_worker(
             chunk_bytes=int(tcfg.get("chunk_bytes") or DEFAULT_CHUNK_BYTES),
             transfer=transfer,
             ledger=ledger,
+            # Serve cap = per-holder fetcher budget: excess fetchers get
+            # an in-band busy reply and spill onto other replicas instead
+            # of convoying here.
+            max_concurrent_serves=int(tcfg.get("max_peer_fanout") or 4),
         )
         worker.peer_wire = PeerWireClient(
             pool_size=int(tcfg.get("pool_size") or 2),

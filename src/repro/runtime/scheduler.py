@@ -119,6 +119,11 @@ class TaskState:
     started_at: float = 0.0
     finished_at: float = 0.0
     speculated: bool = False
+    #: worker_id -> monotonic sequence stamped when the worker became a
+    #: holder of this result.  Lowest seq = the original producer; higher
+    #: = fresher replicas (their copy is hottest).  Orders the peer list
+    #: ``_task_payload`` ships: newest replicas first, origin last.
+    holder_seq: dict[str, int] = field(default_factory=dict)
     waiting_clients: list[str] = field(default_factory=list)
     dependents: set[str] = field(default_factory=set)
     #: Deps not yet done.  Maintained incrementally so a completion touches
@@ -194,6 +199,14 @@ DURATION_WINDOW = 512
 #: against a store that keeps losing the same dependency bytes.
 MAX_RECOVERIES = 3
 
+#: Dependencies at least this large engage the fan-out admission gate:
+#: dispatch defers a task when the dep already has ``holders x
+#: max_peer_fanout`` distinct workers fetching it, so later consumers
+#: land after early finishers became replicas and pull from *them*
+#: instead of queueing on the producer.  Small deps never gate -- the
+#: per-dep overhead would dwarf any serving contention.
+GATE_MIN_BYTES = 8 * 1024 * 1024
+
 
 class Scheduler:
     def __init__(
@@ -205,6 +218,7 @@ class Scheduler:
         inline_result_max: int = 64 * 1024,
         result_store: Any = None,
         max_outstanding_bytes: int = 128 * 1024 * 1024,
+        max_peer_fanout: int = 4,
     ):
         self.inbox = Mailbox("scheduler")
         self.tasks: dict[str, TaskState] = {}
@@ -220,8 +234,23 @@ class Scheduler:
         #: worker already owing this much fetch work gets no more
         #: byte-heavy tasks until some resolve (dispatch backpressure).
         self.max_outstanding_bytes = max_outstanding_bytes
+        #: Per-holder concurrent-fetcher budget (TransferSpec knob): bounds
+        #: both the peer list shipped in ``dep_info["peers"]`` and the
+        #: fan-out admission gate's dispatch-time limit.
+        self.max_peer_fanout = max(1, int(max_peer_fanout))
         self.ledger = RefLedger(self._evict_ref)
         self._stealing: set[str] = set()  # keys with a STEAL in flight
+        #: Replica-freshness clock: bumped per holder registration, stamped
+        #: into ``TaskState.holder_seq``.
+        self._holder_seq = 0
+        #: Fan-out gate state: dep key -> {worker_id: assigned-task count}
+        #: for gate-sized deps the worker will have to fetch.  Distinct
+        #: workers (not tasks) are what load a serving peer -- same-worker
+        #: duplicates collapse onto one wire fetch via single-flight.
+        self._fetching: dict[str, dict[str, int]] = {}
+        #: (worker_id, task key) -> gate-sized dep keys charged at
+        #: ``_assign``; drained by ``_unassign`` on every removal path.
+        self._assigned_fetch_deps: dict[tuple[str, str], list[str]] = {}
         #: (worker_id, key) -> dep bytes charged at dispatch.  The single
         #: source of truth for outstanding_bytes decrements: every removal
         #: path funnels through _unassign, so no lineage-recovery or
@@ -370,6 +399,16 @@ class Scheduler:
                     ws.last_stats = p["stats"]
                 if p.get("data_address"):
                     ws.data_address = p["data_address"]
+                # Replica registration: every servable cached key makes
+                # this worker a fetch candidate for dependents.  Additive
+                # only (a later eviction just means a clean peer miss ->
+                # next replica / store fallback) and restricted to *done*
+                # tasks so a heartbeat can never resurrect released or
+                # recovering state.
+                for key in p.get("cached_keys") or ():
+                    ts = self.tasks.get(key)
+                    if ts is not None and ts.state == "done":
+                        self._add_holder(ts, ws)
         elif tag == M.TASK_DONE:
             self._on_task_done(p)
         elif tag == M.TASK_FAILED:
@@ -556,7 +595,7 @@ class Scheduler:
             if ts is None or ts.state != "ready":
                 continue
             ws = self._pick_worker(ts)
-            if ws is None:
+            if ws is None or self._gate_defers(ts, ws):
                 remaining.append(key)
                 continue
             self._assign(ts, ws)
@@ -575,6 +614,37 @@ class Scheduler:
                 self._send_worker(ws, M.msg(M.RUN_BATCH, tasks=payloads))
         self._maybe_steal()
 
+    def _gate_deps(self, ts: TaskState, ws: WorkerState) -> list[str]:
+        """Gate-sized deps ``ws`` would have to fetch to run ``ts``."""
+        out = []
+        for d in ts.deps:
+            if d in ws.has_data:
+                continue
+            dts = self.tasks.get(d)
+            if dts is not None and dts.nbytes >= GATE_MIN_BYTES:
+                out.append(d)
+        return out
+
+    def _gate_defers(self, ts: TaskState, ws: WorkerState) -> bool:
+        """Fan-out admission gate: defer dispatch when a heavy dep already
+        has ``holders x max_peer_fanout`` distinct workers fetching it.
+
+        Deferred tasks stay in the ready queue and are re-checked every
+        loop pass; the limit rises as fetchers finish (``_unassign``
+        drains the count) and early finishers register as new holders --
+        so later consumers dispatch into a world with replicas to pull
+        from.  Deadlock-free: an unfetched dep has an empty fetcher map,
+        so the first fetcher is always admitted."""
+        for d in self._gate_deps(ts, ws):
+            fetchers = self._fetching.get(d)
+            if not fetchers or ws.worker_id in fetchers:
+                continue  # first fetcher, or this worker already dialing
+            dts = self.tasks.get(d)
+            holders = max(1, len(dts.locations)) if dts is not None else 1
+            if len(fetchers) >= holders * self.max_peer_fanout:
+                return True
+        return False
+
     def _assign(self, ts: TaskState, ws: WorkerState) -> None:
         ts.state = "running"
         ts.started_at = time.monotonic()
@@ -585,6 +655,12 @@ class Scheduler:
         if charge:
             ws.outstanding_bytes += charge
             self._assigned_bytes[(ws.worker_id, ts.key)] = charge
+        heavy = self._gate_deps(ts, ws)
+        if heavy:
+            self._assigned_fetch_deps[(ws.worker_id, ts.key)] = heavy
+            for d in heavy:
+                m = self._fetching.setdefault(d, {})
+                m[ws.worker_id] = m.get(ws.worker_id, 0) + 1
 
     def _unassign(self, ws: WorkerState, key: str) -> None:
         """Remove ``key`` from a worker's load accounting: running set,
@@ -597,6 +673,19 @@ class Scheduler:
         charge = self._assigned_bytes.pop((ws.worker_id, key), None)
         if charge:
             ws.outstanding_bytes = max(0, ws.outstanding_bytes - charge)
+        heavy = self._assigned_fetch_deps.pop((ws.worker_id, key), None)
+        if heavy:
+            for d in heavy:
+                m = self._fetching.get(d)
+                if m is None:
+                    continue
+                count = m.get(ws.worker_id, 0) - 1
+                if count > 0:
+                    m[ws.worker_id] = count
+                else:
+                    m.pop(ws.worker_id, None)
+                    if not m:
+                        self._fetching.pop(d, None)
 
     def _task_payload(self, ts: TaskState) -> dict[str, Any]:
         # Dependency *metadata* only: inline blobs for tiny results, a
@@ -620,14 +709,28 @@ class Scheduler:
                 # straight from a peer's data server (cache -> shm ->
                 # peer-wire -> store resolution order) instead of paying a
                 # store round trip.  Metadata only -- a handful of connect
-                # strings, never payload bytes.
-                peers = {}
+                # strings, never payload bytes.  Resolved against *current*
+                # WorkerState at every (re)dispatch -- a payload built after
+                # lineage recovery or a steal never names a dead producer.
+                #
+                # Ordered: freshest replicas first (their copy is hottest,
+                # and preferring them spreads fan-out load off the
+                # producer), the origin last as the most reliable fallback;
+                # bounded at max_peer_fanout entries.
+                holders = []
                 for w in locations:
                     hws = self.workers.get(w)
                     if hws is not None and hws.alive and hws.data_address:
-                        peers[w] = hws.data_address
-                if peers:
-                    entry["peers"] = peers
+                        holders.append(
+                            (dts.holder_seq.get(w, 0), w, hws.data_address)
+                        )
+                if holders:
+                    holders.sort()
+                    origin, replicas = holders[0], holders[1:]
+                    ordered = list(reversed(replicas)) + [origin]
+                    if len(ordered) > self.max_peer_fanout:
+                        ordered = ordered[: self.max_peer_fanout - 1] + [origin]
+                    entry["peers"] = [[w, a] for _, w, a in ordered]
                 dep_info[d] = entry
         return {
             "key": ts.key,
@@ -712,6 +815,18 @@ class Scheduler:
 
     # -- completion ----------------------------------------------------------------
 
+    def _add_holder(self, ts: TaskState, ws: WorkerState) -> None:
+        """Register ``ws`` as a replica holder of ``ts``'s result bytes,
+        stamping the freshness sequence on first registration.  Every
+        holder-add path (completion, duplicate completion, cached-dep
+        report, heartbeat announcement) funnels through here so the
+        peer-list ordering in ``_task_payload`` stays consistent."""
+        if ts.key not in ws.has_data:
+            self._holder_seq += 1
+            ts.holder_seq[ws.worker_id] = self._holder_seq
+        ts.locations.add(ws.worker_id)
+        ws.has_data.add(ts.key)
+
     def _on_task_done(self, p: dict[str, Any]) -> None:
         key, worker_id = p["key"], p["worker"]
         ref = p.get("ref")
@@ -720,15 +835,23 @@ class Scheduler:
         if ws is not None:
             self._unassign(ws, key)
             ws.total_done += 1
+            # The completing worker fetched (and still caches) these deps:
+            # register it as a replica holder so later consumers of a
+            # fan-out pull from it instead of queueing on the producer.
+            for d in p.get("cached_deps") or ():
+                dts = self.tasks.get(d)
+                if dts is not None and dts.state == "done":
+                    self._add_holder(dts, ws)
         if ts is None or ts.state == "done":
             # Duplicate speculative completion (or completion after release).
             if ref is not None:
                 if ts is not None and ref == ts.ref:
                     # Same deterministic ref: the duplicate overwrote the
                     # same entry; just record the extra holder.
-                    ts.locations.add(worker_id)
                     if ws is not None:
-                        ws.has_data.add(key)
+                        self._add_holder(ts, ws)
+                    else:
+                        ts.locations.add(worker_id)
                 else:
                     # Distinct ref (non-peer connector) or task already
                     # released: reclaim the orphan publish exactly once.
@@ -744,9 +867,10 @@ class Scheduler:
         if ref is not None:
             ts.ref = ref
             self.ledger.track(ref, ts.nbytes)
-        ts.locations.add(worker_id)
         if ws is not None:
-            ws.has_data.add(key)
+            self._add_holder(ts, ws)
+        else:
+            ts.locations.add(worker_id)
         # cancel speculative duplicates
         for other_id in list(ts.workers):
             if other_id != worker_id:
@@ -839,6 +963,7 @@ class Scheduler:
                     if hws is not None:
                         hws.has_data.discard(dep)
                 dts.locations.clear()
+                dts.holder_seq.clear()
                 self.ready.append(dep)
                 # Every still-waiting dependent must wait on it again.
                 for dependent in dts.dependents:
@@ -922,6 +1047,14 @@ class Scheduler:
         # goes away, but the charge map must not accumulate ghosts.
         for wk in [wk for wk in self._assigned_bytes if wk[0] == worker_id]:
             del self._assigned_bytes[wk]
+        # Same for the fan-out gate's fetcher counts: a dead fetcher must
+        # not hold the admission gate closed.
+        for wk in [wk for wk in self._assigned_fetch_deps if wk[0] == worker_id]:
+            del self._assigned_fetch_deps[wk]
+        for d in list(self._fetching):
+            self._fetching[d].pop(worker_id, None)
+            if not self._fetching[d]:
+                del self._fetching[d]
         if ws.data_address:
             # Prompt peer-wire invalidation: every live worker drops its
             # pooled connections to the dead data server, so in-flight and

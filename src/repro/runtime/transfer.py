@@ -241,6 +241,13 @@ class BlobCache:
     def spilled_keys(self) -> list[str]:
         return []
 
+    def servable_keys(self) -> list[str]:
+        """Keys this cache can serve to a peer, across every tier it has.
+        Heartbeats carry a bounded sample of these so the scheduler can
+        register the worker as a replica holder for fan-out spreading."""
+        with self._lock:
+            return list(self._data)
+
     def stats(self) -> dict[str, int]:
         with self._lock:
             return {
@@ -444,6 +451,11 @@ class SpillCache(BlobCache):
             if bundle is not None:
                 return bundle.nbytes
             return self._disk.get(key)
+
+    def servable_keys(self) -> list[str]:
+        # A spilled blob is still servable (range reads span both tiers).
+        with self._lock:
+            return list(self._data) + [k for k in self._disk if k not in self._data]
 
     def read_range(self, key: str, offset: int, size: int) -> memoryview | None:
         with self._lock:

@@ -57,6 +57,7 @@ from repro.core.compress import TransferLedger, TransferPolicy
 from repro.core.serialize import FrameBundle, deserialize, serialize
 from repro.runtime import messages as M
 from repro.runtime.graph import substitute_refs
+from repro.runtime.prefetch import Prefetcher, SingleFlight
 from repro.runtime.scheduler import Mailbox, Scheduler
 from repro.runtime.transfer import BlobCache, MissingDependencyError, SpillCache
 
@@ -69,15 +70,25 @@ _LOCAL_FUNCS_LOCK = threading.Lock()
 _FETCH_RETRIES = 3
 _FETCH_RETRY_SLEEP = 0.02
 
-#: Concurrent dependency fetches for fan-in tasks: each remote dep is an
-#: independent peer-wire/store round trip, so overlapping a few of them
-#: hides per-peer latency.  Bounded -- a 512-way fan-in must not open 512
-#: sockets at once (the per-peer connection pool caps each peer anyway).
+#: Default concurrent dependency fetches for fan-in tasks: each remote
+#: dep is an independent peer-wire/store round trip, so overlapping a few
+#: of them hides per-peer latency.  Bounded -- a 512-way fan-in must not
+#: open 512 sockets at once (the per-peer connection pool caps each peer
+#: anyway).  Overridable via ``TransferSpec.fetch_concurrency``.
 _FETCH_CONCURRENCY = 4
+
+#: Defaults for the overlap-and-spread knobs when no TransferSpec config
+#: reaches the worker (mirrors ``api.config.TransferSpec``).
+_PREFETCH_DEPTH = 2
+_MAX_PEER_FANOUT = 4
 
 #: Cap on the spilled-key list a heartbeat carries: locality hints are
 #: advisory, so a pathological spill set must not bloat the control plane.
 _HEARTBEAT_SPILLED_MAX = 512
+
+#: Cap on the cached-key list a heartbeat carries for replica-holder
+#: registration: advisory like the spill hints, same bound.
+_HEARTBEAT_CACHED_MAX = 512
 
 
 def dumps_function(fn: Any) -> bytes:
@@ -160,6 +171,16 @@ class ThreadWorker:
         #: snapshot covers both the store and the wire.
         self.transfer_policy = TransferPolicy.from_config(transfer)
         self.ledger = ledger if ledger is not None else TransferLedger()
+        # Overlap-and-spread knobs (TransferSpec wire dict, when present).
+        tcfg = transfer if isinstance(transfer, dict) else {}
+        self._fetch_concurrency = max(
+            1, int(tcfg.get("fetch_concurrency") or _FETCH_CONCURRENCY)
+        )
+        _pd = tcfg.get("prefetch_depth")
+        self._prefetch_depth = _PREFETCH_DEPTH if _pd is None else max(0, int(_pd))
+        self._max_peer_fanout = max(
+            1, int(tcfg.get("max_peer_fanout") or _MAX_PEER_FANOUT)
+        )
         if memory is not None:
             limit = int(memory.get("limit_bytes", cache_bytes))
             spill_dir = memory.get("spill_dir")
@@ -182,6 +203,21 @@ class ThreadWorker:
         self.refetch_count = 0  # dependency fetches that fell back to the store
         self.zero_copy_hits = 0  # deps attached by ref on the shm fast path
         self.peer_wire_hits = 0  # deps fetched from a peer's data server
+        #: Single-flight fetch table shared by executor threads and the
+        #: prefetcher: N concurrent resolvers of one key dial the wire once.
+        self._flights = SingleFlight()
+        #: Keys the prefetcher resolved ahead of execution (key -> nbytes).
+        #: Consumed (-> prefetch_hits) when an executor uses the dep;
+        #: drained to prefetch_wasted_bytes when the task leaves unrun.
+        self._prefetched: dict[str, int] = {}
+        self._pf_lock = threading.Lock()
+        self.prefetch_hits = 0
+        self.prefetch_wasted_bytes = 0
+        self.prefetcher: Prefetcher | None = None
+        #: Queue-to-start wait: enqueue -> compute start (after deps are
+        #: resolved), cumulative so callers can diff across phases.
+        self._queue_wait_ms_total = 0.0
+        self._queue_wait_count = 0
         #: Peer data plane (process clusters): a DataServer serving this
         #: worker's cache to peers and a pooled PeerWireClient for fetching
         #: from theirs.  Assigned by ``proc.start_comm_worker`` *before*
@@ -245,10 +281,16 @@ class ThreadWorker:
             target=self._heartbeat_loop, daemon=True
         )
         self._heartbeat_thread.start()
+        if self._prefetch_depth > 0:
+            self.prefetcher = Prefetcher(
+                self, depth=self._prefetch_depth, flights=self._flights
+            ).start()
         return self
 
     def stop(self) -> None:
         self._stop.set()
+        if self.prefetcher is not None:
+            self.prefetcher.stop()
         with self._pcv:
             self._pcv.notify_all()
         with self._ocv:
@@ -294,6 +336,8 @@ class ThreadWorker:
         with self._lat_lock:
             lat = sorted(self._task_ms)
             task_count = self._task_count
+            queue_wait_ms_total = self._queue_wait_ms_total
+            queue_wait_count = self._queue_wait_count
 
         def _pct(q: float) -> float:
             if not lat:
@@ -317,6 +361,34 @@ class ThreadWorker:
                 if self.peer_wire is not None
                 else {"peer_wire_fetches": 0, "peer_wire_bytes": 0}
             ),
+            # Replica serving: what this worker's data server handed to
+            # peers (the broadcast bench derives producer share from this).
+            **(
+                self.data_server.snapshot()
+                if self.data_server is not None
+                else {
+                    "data_server_serves": 0,
+                    "data_server_bytes": 0,
+                    "data_server_busy_rejects": 0,
+                }
+            ),
+            # Prefetch pipeline: deps resolved ahead of execution.
+            "prefetch_hits": self.prefetch_hits,
+            "prefetch_wasted_bytes": self.prefetch_wasted_bytes,
+            **(
+                self.prefetcher.snapshot()
+                if self.prefetcher is not None
+                else {
+                    "prefetch_issued": 0,
+                    "prefetch_bytes": 0,
+                    "prefetch_throttled": 0,
+                    "prefetch_errors": 0,
+                }
+            ),
+            # Queue-to-start wait (enqueue -> compute start, cumulative):
+            # the quantity prefetch overlap is meant to shrink.
+            "queue_wait_ms_total": queue_wait_ms_total,
+            "queue_wait_count": queue_wait_count,
             # Task-latency telemetry: per-task service time percentiles
             # over a rolling window (what benchmarks/serving.py compares
             # its request latencies against).
@@ -372,6 +444,11 @@ class ThreadWorker:
         spilled = self.cache.spilled_keys()
         if len(spilled) > _HEARTBEAT_SPILLED_MAX:
             spilled = spilled[:_HEARTBEAT_SPILLED_MAX]
+        # Replica announcement: every servable cached key (hot or spilled)
+        # makes this worker a candidate holder for fan-out spreading.
+        cached = self.cache.servable_keys()
+        if len(cached) > _HEARTBEAT_CACHED_MAX:
+            cached = cached[:_HEARTBEAT_CACHED_MAX]
         copy_stats = self.cache.copies.snapshot()
         self._send(
             M.msg(
@@ -382,6 +459,7 @@ class ThreadWorker:
                 memory_limit=self.memory_limit,
                 state=self.state,
                 spilled_keys=spilled,
+                cached_keys=cached,
                 bytes_moved=copy_stats["bytes_moved"],
                 bytes_copied=copy_stats["bytes_copied"],
                 # Repeated every beat so a scheduler that lost and re-learned
@@ -476,24 +554,42 @@ class ThreadWorker:
                 self._pcv.notify_all()
 
     def _enqueue(self, tasks: list[dict[str, Any]]) -> None:
+        now = time.monotonic()
         with self._pcv:
             for t in tasks:
                 # A fresh dispatch supersedes any stale CANCEL from an
                 # earlier speculative round -- otherwise a once-cancelled key
                 # would be silently dropped forever on this worker.
                 self._cancelled.discard(t["key"])
+                t["_enq_t"] = now  # queue-to-start wait baseline
                 self._pending.append(t)
+            # Wakes executor threads *and* the prefetcher, which starts
+            # resolving deps for the queued-but-not-running tail.
             self._pcv.notify_all()
 
     def _discard_pending(self, keys: set[str]) -> list[str]:
         """Remove matching unstarted tasks from the local queue (caller
         holds ``_pcv``); returns the removed keys."""
-        removed = [t["key"] for t in self._pending if t["key"] in keys]
-        if removed:
+        removed_tasks = [t for t in self._pending if t["key"] in keys]
+        if removed_tasks:
             self._pending = deque(
                 t for t in self._pending if t["key"] not in keys
             )
-        return removed
+            # Prefetched deps no remaining queued task needs were fetched
+            # for nothing (stolen/cancelled before running) -- count the
+            # bytes so the waste is inspectable.
+            still_needed = {
+                d for t in self._pending for d in (t.get("deps") or ())
+            }
+            with self._pf_lock:
+                for t in removed_tasks:
+                    for d in t.get("deps") or ():
+                        if d in still_needed:
+                            continue
+                        nb = self._prefetched.pop(d, None)
+                        if nb is not None:
+                            self.prefetch_wasted_bytes += nb
+        return [t["key"] for t in removed_tasks]
 
     def _on_steal(self, p: dict[str, Any]) -> None:
         requested = list(p.get("keys") or [])
@@ -533,12 +629,33 @@ class ThreadWorker:
 
     # -- dependency resolution (data plane) ---------------------------------
 
+    def _mark_prefetched(self, key: str, nbytes: int) -> None:
+        """Record a prefetch-led fetch so its consumption (or waste) is
+        attributable in stats."""
+        with self._pf_lock:
+            self._prefetched[key] = max(0, nbytes)
+
+    def _consume_prefetch_mark(self, key: str) -> None:
+        with self._pf_lock:
+            if self._prefetched.pop(key, None) is not None:
+                self.prefetch_hits += 1
+
     def _fetch_dep(self, key: str, info: dict[str, Any] | None, inline: bytes | None) -> Any:
         if inline is not None:
             return deserialize(inline)
         blob = self.cache.get(key)
         if blob is None:
-            blob = self._fetch_remote(key, info or {})
+            # Single-flight: concurrent resolvers of one key (several
+            # queued tasks sharing a broadcast dep, or this executor
+            # racing the prefetcher) collapse onto one wire transfer.
+            blob, led, leader = self._flights.run(
+                key, lambda: self._fetch_remote(key, info or {}), origin="task"
+            )
+            if not led and leader == "prefetch":
+                self._consume_prefetch_mark(key)
+        else:
+            # Cache hit -- if the prefetcher staged it, that's the payoff.
+            self._consume_prefetch_mark(key)
         # ``blob`` is a FrameBundle on every path; deserialize reconstructs
         # arrays directly over the received/mapped views -- no join.
         return deserialize(blob)
@@ -587,12 +704,30 @@ class ThreadWorker:
                     if bundle is not None:
                         return bundle
             if self.peer_wire is not None:
-                peers = info.get("peers") or {}
-                for loc in locations:
-                    addr = peers.get(loc)
-                    if not addr or loc == self.worker_id:
-                        continue
-                    bundle = self.peer_wire.fetch(addr, key, sink=self.cache)
+                # Replica-aware: the scheduler ships a bounded,
+                # freshness-ordered holder list (newest first, origin
+                # last); ``fetch_any`` spreads dials across it, falling
+                # through on miss/abort/busy.  Legacy dict form (worker ->
+                # address keyed off ``locations``) still accepted.
+                peers = info.get("peers")
+                if isinstance(peers, dict):
+                    candidates = [
+                        peers[loc]
+                        for loc in locations
+                        if loc != self.worker_id and peers.get(loc)
+                    ]
+                else:
+                    candidates = [
+                        addr
+                        for wid, addr in (peers or [])
+                        if addr and wid != self.worker_id
+                    ]
+                if candidates:
+                    bundle = self.peer_wire.fetch_any(
+                        candidates[: self._max_peer_fanout],
+                        key,
+                        sink=self.cache,
+                    )
                     if bundle is not None:
                         self.peer_wire_hits += 1
                         return bundle
@@ -664,7 +799,7 @@ class ThreadWorker:
                 threading.Thread(
                     target=drain, daemon=True, name=f"{self.worker_id}-fetch"
                 )
-                for _ in range(min(_FETCH_CONCURRENCY, len(remote)))
+                for _ in range(min(self._fetch_concurrency, len(remote)))
             ]
             for t in fetchers:
                 t.start()
@@ -699,6 +834,14 @@ class ThreadWorker:
                 p.get("deps", []), dep_info, inline_deps
             )
             inflight += fetched
+            # Queue-to-start wait: enqueue until deps resolved and compute
+            # can begin -- the latency prefetch overlap shrinks.
+            enq_t = p.get("_enq_t")
+            if enq_t is not None:
+                wait_ms = (time.monotonic() - enq_t) * 1000.0
+                with self._lat_lock:
+                    self._queue_wait_ms_total += wait_ms
+                    self._queue_wait_count += 1
             if missing:
                 self._report(
                     M.TASK_FAILED,
@@ -742,6 +885,12 @@ class ThreadWorker:
                     "result": inline,
                     "ref": ref,
                     "nbytes": nbytes,
+                    # Deps this worker now caches: the scheduler registers
+                    # it as a replica holder so later consumers in a
+                    # fan-out can fetch from here instead of the producer.
+                    "cached_deps": [
+                        d for d in p.get("deps", []) if d in self.cache
+                    ],
                 },
             )
         except Exception as exc:  # noqa: BLE001 - report any task failure

@@ -250,6 +250,9 @@ def test_transfer_spec_roundtrip():
         peer_transfer=False,
         pool_size=4,
         chunk_bytes=1 << 20,
+        prefetch_depth=3,
+        max_peer_fanout=2,
+        fetch_concurrency=8,
     )
     spec.validate()
     d = spec.to_dict()
@@ -258,6 +261,10 @@ def test_transfer_spec_roundtrip():
     assert d["peer_transfer"] is False
     assert d["pool_size"] == 4
     assert d["chunk_bytes"] == 1 << 20
+    # ...as do the overlap-and-spread knobs (prefetch + replica fan-out)...
+    assert d["prefetch_depth"] == 3
+    assert d["max_peer_fanout"] == 2
+    assert d["fetch_concurrency"] == 8
     # ...and TransferPolicy consumes the compression subset, ignoring them.
     policy = TransferPolicy.from_config(d).to_dict()
     assert policy == {k: d[k] for k in policy}
@@ -274,6 +281,9 @@ def test_transfer_spec_roundtrip():
         {"level": 42},
         {"pool_size": 0},
         {"chunk_bytes": 0},
+        {"prefetch_depth": -1},
+        {"max_peer_fanout": 0},
+        {"fetch_concurrency": 0},
     ],
 )
 def test_transfer_spec_validation(kwargs):

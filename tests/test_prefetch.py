@@ -1,0 +1,519 @@
+"""Overlap-and-spread data plane: prefetch pipeline + replica-aware fan-out.
+
+Unit level: SingleFlight dedup semantics; the Prefetcher's pressure
+guard (prefetch yields to the pause threshold, never creates it); the
+scheduler's freshness-ordered bounded peer list, its re-resolution at
+(re)dispatch, holder registration off completions/heartbeats, and the
+fan-out admission gate.  Wire level (inproc + tcp): 8 concurrent
+same-key fetches on one worker cost exactly one transfer; a busy
+replica's in-band reject falls through to the next holder.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import uuid
+
+import numpy as np
+import pytest
+
+from repro.core.compress import LINK_PEER, TransferLedger
+from repro.core.serialize import FrameBundle, deserialize, serialize
+from repro.runtime.dataserver import DataServer, PeerWireClient
+from repro.runtime.prefetch import Prefetcher, SingleFlight
+from repro.runtime.scheduler import (
+    GATE_MIN_BYTES,
+    Mailbox,
+    Scheduler,
+    TaskState,
+)
+from repro.runtime import messages as M
+from repro.runtime.transfer import BlobCache
+from repro.runtime.worker import ThreadWorker
+
+
+def _inproc_addr() -> str:
+    return f"inproc://pf-{uuid.uuid4().hex[:8]}"
+
+
+def _wait_for(cond, timeout: float = 5.0) -> None:
+    """Poll a server-side counter: on tcp the serving thread accounts a
+    moment after the client finishes assembling."""
+    deadline = time.monotonic() + timeout
+    while not cond() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert cond()
+
+
+@pytest.fixture(params=["inproc", "tcp"])
+def address(request):
+    if request.param == "tcp":
+        return "tcp://127.0.0.1:0"
+    return _inproc_addr()
+
+
+# ---------------------------------------------------------------------------
+# SingleFlight semantics
+
+
+def test_single_flight_dedups_concurrent_callers():
+    flights = SingleFlight()
+    calls = []
+    gate = threading.Event()
+
+    def fetch():
+        calls.append(1)
+        gate.wait(5)
+        return "bytes"
+
+    results: list = [None] * 8
+
+    def run(i):
+        results[i] = flights.run("k", fetch)
+
+    threads = [threading.Thread(target=run, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    time.sleep(0.1)  # let every follower join the in-progress flight
+    gate.set()
+    for t in threads:
+        t.join(timeout=10)
+    assert len(calls) == 1  # one fetch, eight consumers
+    assert all(r is not None and r[0] == "bytes" for r in results)
+    assert sum(1 for r in results if r[1]) == 1  # exactly one leader
+    assert flights.inflight() == 0
+
+
+def test_single_flight_failure_shared_then_retry_fresh():
+    flights = SingleFlight()
+
+    def boom():
+        raise RuntimeError("fetch failed")
+
+    with pytest.raises(RuntimeError):
+        flights.run("k", boom)
+    # The failed flight deregistered: a retry leads a fresh fetch.
+    result, led, origin = flights.run("k", lambda: 42)
+    assert result == 42 and led and origin == "task"
+
+
+def test_single_flight_reports_leader_origin():
+    flights = SingleFlight()
+    started = threading.Event()
+    release = threading.Event()
+
+    def slow():
+        started.set()
+        release.wait(5)
+        return "b"
+
+    out: dict = {}
+
+    def lead():
+        out["lead"] = flights.run("k", slow, origin="prefetch")
+
+    t = threading.Thread(target=lead)
+    t.start()
+    assert started.wait(5)
+    follower: dict = {}
+
+    def follow():
+        follower["r"] = flights.run("k", lambda: "never", origin="task")
+
+    f = threading.Thread(target=follow)
+    f.start()
+    time.sleep(0.05)
+    release.set()
+    t.join(timeout=5)
+    f.join(timeout=5)
+    # The executor joined a prefetch-led flight -- that's a prefetch hit.
+    assert follower["r"] == ("b", False, "prefetch")
+
+
+# ---------------------------------------------------------------------------
+# worker-level wire dedup (the satellite: 8 fetches -> 1 transfer)
+
+
+def _bare_worker(**kw) -> ThreadWorker:
+    """A worker that is never start()ed: no scheduler, no threads -- just
+    the dependency-resolution machinery under test."""
+    return ThreadWorker(f"w-{uuid.uuid4().hex[:6]}", scheduler=None, **kw)
+
+
+def test_concurrent_same_key_fetches_one_wire_transfer(address):
+    arr = np.arange(150_000, dtype=np.float64)  # 1.2 MB
+    cache = BlobCache(32 << 20)
+    cache.put("k", FrameBundle.of(serialize(arr)))
+    server_ledger = TransferLedger()
+    server = DataServer(cache, address, chunk_bytes=64 * 1024, ledger=server_ledger)
+    worker = _bare_worker()
+    worker.peer_wire = PeerWireClient(pool_size=4)
+    info = {
+        "ref": None,
+        "nbytes": cache.nbytes_of("k"),
+        "locations": ["producer"],
+        "peers": [["producer", server.address]],
+    }
+    results: list = [None] * 8
+
+    def fetch(i):
+        results[i] = worker._fetch_dep("k", info, None)
+
+    try:
+        threads = [threading.Thread(target=fetch, args=(i,)) for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        for r in results:
+            np.testing.assert_array_equal(r, arr)
+        # Exactly ONE wire transfer for all eight consumers: the server
+        # streamed once, the client dialed once, and the ledger's
+        # peer-wire row carries one blob's logical bytes -- not eight.
+        _wait_for(lambda: server.serve_count == 1)
+        assert worker.peer_wire.snapshot()["peer_wire_fetches"] == 1
+        row = server_ledger.snapshot()[LINK_PEER]
+        assert row["logical_bytes"] == info["nbytes"]
+        assert worker.peer_wire_hits == 1
+    finally:
+        worker.peer_wire.close()
+        server.close()
+        worker.cache.close()
+
+
+# ---------------------------------------------------------------------------
+# replica fall-through: miss and busy both try the next holder
+
+
+def test_fetch_any_falls_through_miss_to_replica(address):
+    payload = b"r" * 300_000
+    empty = BlobCache(4 << 20)  # first replica evicted the blob
+    holder = BlobCache(4 << 20)
+    holder.put("k", FrameBundle([memoryview(payload)]))
+    s_miss = DataServer(empty, address)
+    s_hit = DataServer(
+        holder, "tcp://127.0.0.1:0" if address.startswith("tcp") else _inproc_addr()
+    )
+    client = PeerWireClient()
+    try:
+        bundle = client.fetch_any([s_miss.address, s_hit.address], "k")
+        assert bundle is not None and bundle.to_bytes() == payload
+        _wait_for(lambda: s_hit.serve_count == 1)
+    finally:
+        client.close()
+        s_miss.close()
+        s_hit.close()
+
+
+class _GatedCache(BlobCache):
+    """Blocks mid-serve on an event: holds a serve slot open so the
+    concurrent-serve cap's busy path is deterministic."""
+
+    def __init__(self, payload: bytes, gate: threading.Event, entered: threading.Event):
+        super().__init__(max_bytes=4 * len(payload) + 1024)
+        self.put("k", FrameBundle([memoryview(payload)]))
+        self._gate = gate
+        self._entered = entered
+
+    def read_range(self, key, offset, size):
+        self._entered.set()
+        self._gate.wait(10)
+        return super().read_range(key, offset, size)
+
+
+def test_busy_server_rejects_in_band_and_client_uses_replica(address):
+    payload = b"b" * 200_000
+    gate, entered = threading.Event(), threading.Event()
+    s_busy = DataServer(
+        _GatedCache(payload, gate, entered), address, max_concurrent_serves=1
+    )
+    holder = BlobCache(4 << 20)
+    holder.put("k", FrameBundle([memoryview(payload)]))
+    s_free = DataServer(
+        holder, "tcp://127.0.0.1:0" if address.startswith("tcp") else _inproc_addr()
+    )
+    blocked_client = PeerWireClient()
+    client = PeerWireClient()
+    first: list = ["unset"]
+
+    def occupy():
+        first[0] = blocked_client.fetch(s_busy.address, "k")
+
+    t = threading.Thread(target=occupy, daemon=True)
+    t.start()
+    try:
+        assert entered.wait(10), "first fetch never reached the serve loop"
+        # The saturated replica answers busy in-band; the fetch falls
+        # through to the free holder without waiting the stall out.
+        t0 = time.monotonic()
+        bundle = client.fetch_any([s_busy.address, s_free.address], "k")
+        assert bundle is not None and bundle.to_bytes() == payload
+        assert time.monotonic() - t0 < 5
+        assert s_busy.snapshot()["data_server_busy_rejects"] == 1
+        _wait_for(lambda: s_free.serve_count == 1)
+        gate.set()
+        t.join(timeout=10)
+        assert first[0] is not None and first[0].to_bytes() == payload
+    finally:
+        gate.set()
+        blocked_client.close()
+        client.close()
+        s_busy.close()
+        s_free.close()
+
+
+# ---------------------------------------------------------------------------
+# prefetcher: resolves queued deps ahead of execution, pressure-safe
+
+
+def test_prefetcher_stages_dep_and_counts_hit():
+    payload_arr = np.ones(100_000, dtype=np.float64)
+    cache = BlobCache(32 << 20)
+    cache.put("dep", FrameBundle.of(serialize(payload_arr)))
+    server = DataServer(cache, _inproc_addr())
+    worker = _bare_worker()
+    worker.peer_wire = PeerWireClient()
+    info = {
+        "ref": None,
+        "nbytes": cache.nbytes_of("dep"),
+        "locations": ["producer"],
+        "peers": [["producer", server.address]],
+    }
+    with worker._pcv:
+        worker._pending.append(
+            {"key": "t1", "deps": ["dep"], "dep_info": {"dep": info}, "inline_deps": {}}
+        )
+        worker._pcv.notify_all()
+    pf = Prefetcher(worker, depth=2, flights=worker._flights).start()
+    try:
+        deadline = time.monotonic() + 10
+        while "dep" not in worker.cache and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert "dep" in worker.cache, "prefetcher never staged the dep"
+        assert pf.snapshot()["prefetch_issued"] == 1
+        assert worker._prefetched.get("dep") == info["nbytes"]
+        # The executor's resolution is now a cache hit -- and attributed.
+        val = worker._fetch_dep("dep", info, None)
+        np.testing.assert_array_equal(val, payload_arr)
+        assert worker.prefetch_hits == 1
+        assert "dep" not in worker._prefetched
+    finally:
+        pf.stop()
+        worker.peer_wire.close()
+        server.close()
+        worker.cache.close()
+
+
+def test_prefetch_never_pauses_a_worker(tmp_path):
+    """Regression for the pressure contract: a worker sitting just below
+    its pause threshold must NOT be pushed over it by prefetch -- the
+    prefetcher throttles instead, and the worker stays running."""
+    payload = b"d" * 400_000
+    cache = BlobCache(4 << 20)
+    cache.put("dep", FrameBundle([memoryview(payload)]))
+    server = DataServer(cache, _inproc_addr())
+    limit = 1_000_000
+    worker = _bare_worker(
+        memory={
+            "limit_bytes": limit,
+            "spill_dir": str(tmp_path),
+            "pause_fraction": 0.85,
+            "target_fraction": 0.6,
+        }
+    )
+    worker.peer_wire = PeerWireClient()
+    # Park managed bytes just below the pause threshold (850 KB).
+    worker.cache.put("filler", FrameBundle([memoryview(b"f" * 800_000)]))
+    assert worker.managed_bytes() < worker._pause_bytes
+    info = {
+        "ref": None,
+        "nbytes": len(payload),  # would land at 1.2 MB -- over the limit
+        "locations": ["producer"],
+        "peers": [["producer", server.address]],
+    }
+    with worker._pcv:
+        worker._pending.append(
+            {"key": "t1", "deps": ["dep"], "dep_info": {"dep": info}, "inline_deps": {}}
+        )
+        worker._pcv.notify_all()
+    pf = Prefetcher(worker, depth=2, flights=worker._flights).start()
+    try:
+        deadline = time.monotonic() + 2
+        while pf.snapshot()["prefetch_throttled"] == 0 and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert pf.snapshot()["prefetch_throttled"] > 0
+        assert "dep" not in worker.cache  # never fetched
+        worker._update_memory_state()
+        assert worker.state == "running"
+        assert worker.managed_bytes() < worker._pause_bytes
+        assert pf.snapshot()["prefetch_issued"] == 0
+    finally:
+        pf.stop()
+        worker.peer_wire.close()
+        server.close()
+        worker.cache.close()
+
+
+def test_fetch_concurrency_knob_reaches_worker():
+    w = _bare_worker(transfer={"fetch_concurrency": 9, "prefetch_depth": 0})
+    assert w._fetch_concurrency == 9
+    assert w._prefetch_depth == 0  # 0 disables (no Prefetcher at start())
+    w.cache.close()
+    w2 = _bare_worker()
+    assert w2._fetch_concurrency == 4  # module default preserved
+    w2.cache.close()
+
+
+def test_wasted_prefetch_accounted_on_steal():
+    worker = _bare_worker()
+    worker._mark_prefetched("dep", 12345)
+    with worker._pcv:
+        worker._pending.append(
+            {"key": "t1", "deps": ["dep"], "dep_info": {}, "inline_deps": {}}
+        )
+        removed = worker._discard_pending({"t1"})
+    assert removed == ["t1"]
+    assert worker.prefetch_wasted_bytes == 12345
+    assert "dep" not in worker._prefetched
+    worker.cache.close()
+
+
+# ---------------------------------------------------------------------------
+# scheduler: holder registration, peer-list ordering, re-resolution, gate
+
+
+def _sched(**kw) -> Scheduler:
+    return Scheduler(**kw)  # never started: unit-level calls only
+
+
+def _done_task(key: str, nbytes: int) -> TaskState:
+    ts = TaskState(key=key, func_blob=b"", args_blob=b"", deps=[])
+    ts.state = "done"
+    ts.nbytes = nbytes
+    ts.ref = f"ref-{key}"
+    return ts
+
+
+def _add_worker(sched: Scheduler, wid: str, addr: str | None = None) -> None:
+    sched._register_worker(wid, Mailbox(wid), 1, data_address=addr)
+
+
+def test_peer_list_is_fresh_bounded_and_origin_last():
+    sched = _sched(max_peer_fanout=4)
+    for i in range(4):
+        _add_worker(sched, f"w{i}", f"tcp://127.0.0.1:1100{i}")
+    dts = _done_task("d", 1 << 20)
+    sched.tasks["d"] = dts
+    for i in range(4):  # registration order: w0 is the origin
+        sched._add_holder(dts, sched.workers[f"w{i}"])
+    consumer = TaskState(key="c", func_blob=b"", args_blob=b"", deps=["d"])
+    sched.tasks["c"] = consumer
+    peers = sched._task_payload(consumer)["dep_info"]["d"]["peers"]
+    # Newest replicas first, the origin (most reliable fallback) last.
+    assert [w for w, _ in peers] == ["w3", "w2", "w1", "w0"]
+    # Bounded at max_peer_fanout, always keeping the origin.
+    sched.max_peer_fanout = 2
+    peers = sched._task_payload(consumer)["dep_info"]["d"]["peers"]
+    assert [w for w, _ in peers] == ["w3", "w0"]
+
+
+def test_peers_reresolved_at_redispatch_excludes_dead_producer():
+    sched = _sched()
+    _add_worker(sched, "w0", "tcp://127.0.0.1:11000")
+    _add_worker(sched, "w1", "tcp://127.0.0.1:11001")
+    dts = _done_task("d", 1 << 20)
+    sched.tasks["d"] = dts
+    sched._add_holder(dts, sched.workers["w0"])
+    sched._add_holder(dts, sched.workers["w1"])
+    consumer = TaskState(key="c", func_blob=b"", args_blob=b"", deps=["d"])
+    sched.tasks["c"] = consumer
+    first = sched._task_payload(consumer)["dep_info"]["d"]["peers"]
+    assert {w for w, _ in first} == {"w0", "w1"}
+    # The producer dies between dispatches (steal / lineage recovery
+    # re-readies the task): the payload is rebuilt from CURRENT worker
+    # state, so the dead producer is never dialed first -- or at all.
+    sched._on_worker_lost("w0", graceful=False)
+    second = sched._task_payload(consumer)["dep_info"]["d"]["peers"]
+    assert [w for w, _ in second] == ["w1"]
+
+
+def test_completion_and_heartbeat_register_replica_holders():
+    sched = _sched()
+    _add_worker(sched, "w0", "tcp://127.0.0.1:11000")
+    _add_worker(sched, "w1", "tcp://127.0.0.1:11001")
+    dts = _done_task("d", 1 << 20)
+    sched.tasks["d"] = dts
+    sched._add_holder(dts, sched.workers["w0"])
+    # A consumer on w1 finishes, reporting the dep it now caches.
+    cts = TaskState(key="c", func_blob=b"", args_blob=b"", deps=["d"])
+    cts.state = "running"
+    cts.workers = {"w1"}
+    sched.tasks["c"] = cts
+    sched.workers["w1"].running.add("c")
+    sched._on_task_done(
+        {"key": "c", "worker": "w1", "nbytes": 10, "cached_deps": ["d"]}
+    )
+    assert "w1" in dts.locations
+    assert dts.holder_seq["w1"] > dts.holder_seq["w0"]  # fresher replica
+    # Heartbeat announcements register too -- but only for done tasks.
+    _add_worker(sched, "w2", "tcp://127.0.0.1:11002")
+    pending = TaskState(key="p", func_blob=b"", args_blob=b"", deps=[])
+    sched.tasks["p"] = pending
+    sched._handle(
+        M.msg(M.HEARTBEAT, worker="w2", cached_keys=["d", "p", "ghost"])
+    )
+    assert "w2" in dts.locations
+    assert "w2" not in pending.locations  # not done: never registered
+
+
+def test_fanout_gate_defers_then_admits():
+    sched = _sched(max_peer_fanout=2)
+    for i in range(4):
+        _add_worker(sched, f"w{i}", f"tcp://127.0.0.1:1200{i}")
+    dts = _done_task("d", GATE_MIN_BYTES)  # exactly gate-sized
+    sched.tasks["d"] = dts
+    sched._add_holder(dts, sched.workers["w0"])
+    consumers = []
+    for i in range(3):
+        ts = TaskState(key=f"c{i}", func_blob=b"", args_blob=b"", deps=["d"])
+        ts.state = "ready"
+        sched.tasks[ts.key] = ts
+        consumers.append(ts)
+    # First max_peer_fanout fetchers are admitted...
+    assert not sched._gate_defers(consumers[0], sched.workers["w1"])
+    sched._assign(consumers[0], sched.workers["w1"])
+    assert not sched._gate_defers(consumers[1], sched.workers["w2"])
+    sched._assign(consumers[1], sched.workers["w2"])
+    # ...the next one defers (1 holder x fanout 2 already fetching)...
+    assert sched._gate_defers(consumers[2], sched.workers["w3"])
+    # ...but a worker that already holds the dep is never gated...
+    assert not sched._gate_defers(consumers[2], sched.workers["w0"])
+    # ...and a finished fetch (or a new holder) reopens admission.
+    sched._unassign(sched.workers["w1"], "c0")
+    assert not sched._gate_defers(consumers[2], sched.workers["w3"])
+    # Sub-gate-size deps never engage the gate at all.
+    small = _done_task("s", GATE_MIN_BYTES - 1)
+    sched.tasks["s"] = small
+    small_consumer = TaskState(key="sc", func_blob=b"", args_blob=b"", deps=["s"])
+    sched.tasks["sc"] = small_consumer
+    sched._assign(small_consumer, sched.workers["w1"])
+    assert ("w1", "sc") not in sched._assigned_fetch_deps
+
+
+def test_worker_loss_purges_gate_state():
+    sched = _sched(max_peer_fanout=1)
+    _add_worker(sched, "w0", "tcp://127.0.0.1:11000")
+    _add_worker(sched, "w1", "tcp://127.0.0.1:11001")
+    dts = _done_task("d", GATE_MIN_BYTES)
+    sched.tasks["d"] = dts
+    sched._add_holder(dts, sched.workers["w0"])
+    ts = TaskState(key="c", func_blob=b"", args_blob=b"", deps=["d"])
+    ts.state = "ready"
+    sched.tasks["c"] = ts
+    sched._assign(ts, sched.workers["w1"])
+    assert sched._fetching["d"] == {"w1": 1}
+    # The fetcher dies: its gate charge must not hold admission closed.
+    sched._on_worker_lost("w1", graceful=False)
+    assert "d" not in sched._fetching
+    assert not sched._assigned_fetch_deps
